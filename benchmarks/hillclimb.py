@@ -1,0 +1,90 @@
+"""§Perf hillclimb driver: baseline + candidate changes for the three chosen
+(arch x shape) pairs, each re-lowered/re-analyzed on the 16x16 mesh.
+
+Pairs (from the baseline roofline table, see EXPERIMENTS.md §Roofline):
+  A. internlm2-20b x train_4k   — worst fit (per-dev bytes > HBM), compute-dominant
+  B. olmoe-1b-7b   x train_4k   — most collective-bound of the fleet (MoE dispatch)
+  C. internlm2-20b x decode_32k — memory-dominant serving shape (the paper's
+                                  mu(t) depends on it), also over HBM
+
+Each entry: (tag, kwargs for run_case). Results append to hillclimb.jsonl.
+
+NOTE on reproducibility: the *0 baselines were measured at the defaults in
+effect at hillclimb time (microbatch 8 for the 20B class, no moe_block
+scan). Winning iterations were subsequently adopted as defaults (see
+EXPERIMENTS.md §Perf), so re-running A0/B0 today lands closer to the
+adopted configuration — pass explicit kwargs (e.g. microbatch=8,
+overrides={"moe_block": 1 << 30}) to recreate the original baselines.
+
+Run: PYTHONPATH=src python -m benchmarks.hillclimb [--pair A|B|C|all]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+PAIRS = {
+    "A": [
+        ("A0_baseline", dict(arch="internlm2-20b", shape="train_4k")),
+        ("A1_microbatch16", dict(arch="internlm2-20b", shape="train_4k", microbatch=16)),
+        ("A2_dots_remat", dict(arch="internlm2-20b", shape="train_4k",
+                               overrides={"remat_policy": "dots"})),
+        ("A3_dots_mb16", dict(arch="internlm2-20b", shape="train_4k", microbatch=16,
+                              overrides={"remat_policy": "dots"})),
+        ("A4_mb32", dict(arch="internlm2-20b", shape="train_4k", microbatch=32)),
+    ],
+    "B": [
+        ("B0_baseline", dict(arch="olmoe-1b-7b", shape="train_4k")),
+        ("B1_expert_parallel", dict(arch="olmoe-1b-7b", shape="train_4k",
+                                    moe_parallel=True)),
+        ("B2_capacity1.0", dict(arch="olmoe-1b-7b", shape="train_4k",
+                                overrides={"capacity_factor": 1.0})),
+        ("B3_ep_cap1.0", dict(arch="olmoe-1b-7b", shape="train_4k", moe_parallel=True,
+                              overrides={"capacity_factor": 1.0})),
+        ("B4_ep_mb1", dict(arch="olmoe-1b-7b", shape="train_4k", moe_parallel=True,
+                           microbatch=1)),
+    ],
+    "C": [
+        ("C0_baseline", dict(arch="internlm2-20b", shape="decode_32k")),
+        ("C1_f8_cache", dict(arch="internlm2-20b", shape="decode_32k",
+                             overrides={"cache_dtype": "float8_e4m3fn"})),
+        ("C2_f8_multipod", dict(arch="internlm2-20b", shape="decode_32k",
+                                overrides={"cache_dtype": "float8_e4m3fn"},
+                                multi_pod=True)),
+    ],
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default="all", choices=["A", "B", "C", "all"])
+    ap.add_argument("--out", default="hillclimb.jsonl")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_case
+
+    pairs = PAIRS if args.pair == "all" else {args.pair: PAIRS[args.pair]}
+    with open(args.out, "a") as f:
+        for pid, entries in pairs.items():
+            for tag, kw in entries:
+                try:
+                    row = run_case(tag=tag, **kw)
+                    f.write(json.dumps(row) + "\n")
+                    f.flush()
+                    print(
+                        f"{tag:20s} dominant={row['dominant']:10s} "
+                        f"c={row['compute_s']:.4g} m={row['memory_s']:.4g} "
+                        f"x={row['collective_s']:.4g} coll={row['collective_bytes']/1e9:.1f}GB "
+                        f"perdev={row['per_device_bytes']/2**30:.2f}GiB fits={row['fits_hbm']} "
+                        f"hloF={row['hlo_flops_corrected']:.3g}"
+                    )
+                except Exception as e:
+                    print(f"{tag:20s} FAILED: {type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

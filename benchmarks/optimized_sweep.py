@@ -1,0 +1,61 @@
+"""The OPTIMIZED configuration sweep: all 40 (arch × shape) on 16×16 with
+every adopted §Perf iteration applied:
+
+  A1  microbatch 16 for the 20B class (now the dryrun default)
+  B1  expert-parallel constraint on MoE dispatch buffers
+  D   blocked MoE dispatch (config default moe_block=131072)
+  E'  prefill decode-state out_shardings (now the dryrun default)
+  C1/F  float8_e4m3fn KV cache for decode shapes (serving profile)
+
+Baseline (paper-faithful system, no knobs) lives in dryrun_results.jsonl;
+this writes dryrun_optimized.jsonl so both are visible side by side
+(EXPERIMENTS.md §Perf requirement).
+
+Run: PYTHONPATH=src python -m benchmarks.optimized_sweep
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    import argparse
+
+    from repro.configs import get_config, list_archs
+    from repro.launch.dryrun import run_case
+    from repro.launch.shapes import SHAPES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    out = "dryrun_optimized.jsonl"
+    n_fit = n = 0
+    with open(out, "a") as f:
+        for arch in list_archs():
+            cfg = get_config(arch)
+            for shape in SHAPES:
+                kw = dict(moe_parallel=cfg.is_moe, multi_pod=args.multi_pod)
+                if SHAPES[shape].kind == "decode" and not cfg.is_ssm:
+                    kw["overrides"] = {"cache_dtype": "float8_e4m3fn"}
+                try:
+                    row = run_case(arch, shape, tag="optimized", **kw)
+                except Exception as e:
+                    print(f"FAIL {arch} x {shape}: {type(e).__name__}: {e}")
+                    continue
+                f.write(json.dumps(row) + "\n")
+                f.flush()
+                n += 1
+                n_fit += bool(row["fits_hbm"])
+                print(f"OK {arch:22s} {shape:12s} perdev={row['per_device_bytes']/2**30:6.2f}GiB "
+                      f"fits={row['fits_hbm']} dominant={row['dominant']} "
+                      f"c={row['compute_s']:.4g} m={row['memory_s']:.4g} x={row['collective_s']:.4g}")
+    print(f"\noptimized sweep: {n_fit}/{n} fit HBM")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Render EXPERIMENTS.md tables from dryrun_results.jsonl / hillclimb.jsonl.
+
+Run: PYTHONPATH=src python -m benchmarks.report [--dryrun FILE] [--hillclimb FILE]
+Prints markdown to stdout (pasted into EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def fmt_s(v):
+    if v == 0:
+        return "~0"
+    if v < 1e-4:
+        return f"{v*1e6:.0f}µs"
+    if v < 0.1:
+        return f"{v*1e3:.2f}ms"
+    return f"{v:.3f}s"
+
+
+def fmt_b(v):
+    if v >= 2 ** 30:
+        return f"{v/2**30:.2f}GiB"
+    if v >= 2 ** 20:
+        return f"{v/2**20:.1f}MiB"
+    return f"{v:.0f}B"
+
+
+def dryrun_table(path: str, mesh: str):
+    rows = [json.loads(l) for l in open(path) if json.loads(l)["mesh"] == mesh]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], order[r["shape"]]))
+    print(f"\n### Mesh {mesh} ({rows[0]['n_chips']} chips)\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "MODEL_FLOPs | useful | coll bytes | per-dev | fits |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} "
+            f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
+            f"| **{r['dominant']}** | {r['model_flops']:.2e} "
+            f"| {r['useful_ratio']:.2f} | {fmt_b(r['collective_bytes'])} "
+            f"| {fmt_b(r['per_device_bytes'])} | {'✓' if r['fits_hbm'] else '✗'} |"
+        )
+
+
+def hillclimb_table(path: str):
+    rows = [json.loads(l) for l in open(path)]
+    print("\n| tag | dominant | compute | memory | collective | coll bytes "
+          "| per-dev | fits | HLO flops (corr) |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(
+            f"| {r.get('tag','?')} | {r['dominant']} | {fmt_s(r['compute_s'])} "
+            f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
+            f"| {fmt_b(r['collective_bytes'])} | {fmt_b(r['per_device_bytes'])} "
+            f"| {'✓' if r['fits_hbm'] else '✗'} | {r['hlo_flops_corrected']:.3g} |"
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="dryrun_results.jsonl")
+    ap.add_argument("--hillclimb", default="hillclimb.jsonl")
+    args = ap.parse_args()
+    if os.path.exists(args.dryrun):
+        print("## §Roofline — baseline, every (arch × shape)")
+        dryrun_table(args.dryrun, "16x16")
+        print("\n## §Dry-run — multi-pod (pod axis shards)")
+        dryrun_table(args.dryrun, "2x16x16")
+    if os.path.exists(args.hillclimb):
+        print("\n## §Perf — hillclimb measurements")
+        hillclimb_table(args.hillclimb)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Beyond-paper: multi-tenant + multi-pod Lyapunov control.
+
+1. Multi-tenant: one vmapped Algorithm-1 controller drives N tenants with
+   different utilities/V against one shared service budget.
+2. Distributed: per-pod queues with global-drift control (pmean blend) —
+   a loaded pod sheds rate while idle pods absorb, keeping the aggregate
+   stable (DESIGN.md §2 extension).
+
+Run: PYTHONPATH=src python examples/multi_tenant.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lyapunov import distributed_action, drift_plus_penalty_action
+from repro.core.queueing import bounded_queue_step, QueueState
+from repro.core.utility import Utility
+
+RATES = jnp.arange(1.0, 11.0)
+
+
+def multi_tenant():
+    print("== multi-tenant: 3 tenants, one shared server (mu=12/slot) ==")
+    utils = [Utility("linear", 10.0), Utility("detection", 10.0), Utility("log", 10.0)]
+    V = jnp.asarray([150.0, 150.0, 150.0])
+    s_tabs = jnp.stack([u(RATES) for u in utils])          # (3, A)
+    q = QueueState.zeros((3,))
+    rng = jax.random.PRNGKey(0)
+
+    @jax.jit
+    def slot(q, key):
+        # each tenant picks its own rate from its own backlog/utility
+        f, _ = jax.vmap(
+            lambda qq, st, vv: drift_plus_penalty_action(qq, RATES, st, RATES, vv)
+        )(q.backlog, s_tabs, V)
+        # shared server: proportional service split across tenants
+        mu_total = 12.0
+        load = jnp.maximum(q.backlog + f, 1e-6)
+        mu = mu_total * load / load.sum()
+        return bounded_queue_step(q, mu, f, capacity=64.0), f
+
+    rates = []
+    for t in range(800):
+        rng, k = jax.random.split(rng)
+        q, f = slot(q, k)
+        rates.append(f)
+    rates = jnp.stack(rates)
+    for i, u in enumerate(("linear", "detection", "log")):
+        print(f"  tenant[{u:9s}] mean rate {float(rates[:,i].mean()):5.2f} "
+              f"backlog {float(q.backlog[i]):5.1f} dropped {float(q.dropped[i]):4.0f}")
+    print("  (concave utilities settle at lower rates — diminishing returns"
+        " priced against the same queue cost)\n")
+
+
+def per_pod():
+    print("== per-pod control with global drift (2 pods, mix=0.3) ==")
+    # pod 0 gets a service degradation mid-run; watch both pods adapt
+    q = QueueState.zeros((2,))
+    f_hist = []
+
+    @jax.jit
+    def slot(q, mu):
+        f = jax.vmap(
+            lambda qq: distributed_action(qq, RATES, RATES / 10.0, RATES, V=200.0,
+                                          axis_name="pod", mix=0.3),
+            axis_name="pod",
+        )(q.backlog)
+        return bounded_queue_step(q, mu, f, capacity=128.0), f
+
+    for t in range(600):
+        mu = jnp.asarray([4.0 if 200 <= t < 400 else 10.5, 10.5])  # pod0 brownout
+        q, f = slot(q, mu)
+        f_hist.append(f)
+    f_hist = jnp.stack(f_hist)
+    for name, sl in (("before brownout", slice(100, 200)),
+                     ("during brownout", slice(250, 400)),
+                     ("after recovery", slice(500, 600))):
+        print(f"  {name:16s} pod0 rate {float(f_hist[sl,0].mean()):5.2f} "
+              f"pod1 rate {float(f_hist[sl,1].mean()):5.2f}")
+    print(f"  final backlogs: {[round(float(b),1) for b in q.backlog]} "
+          f"dropped: {[float(d) for d in q.dropped]}")
+    print("  (pod1 also backs off slightly via the global-drift term — the"
+        " blended objective keeps the AGGREGATE stable)")
+
+
+if __name__ == "__main__":
+    multi_tenant()
+    per_pod()

@@ -1,0 +1,83 @@
+"""The paper's experiment on a REAL serving system (its Fig. 2, live).
+
+Three policies drive the same engine + request source:
+  adaptive (Algorithm 1)   — queue-aware, self-tuning
+  static max rate          — the paper's overflow failure mode
+  static min rate          — the paper's reliable-but-wasteful baseline
+
+Prints per-slot traces and an ASCII backlog plot.
+
+Run: PYTHONPATH=src python examples/serve_adaptive.py [--arch granite-3-2b]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.runtime import (AdaptiveScheduler, Engine, EngineConfig,
+                           RequestSource, StaticScheduler, latency_stats, serve)
+
+
+def ascii_plot(series: dict, height=12, width=60):
+    mx = max(max(v) for v in series.values()) or 1
+    rows = []
+    for name, v in series.items():
+        idx = np.linspace(0, len(v) - 1, width).astype(int)
+        scaled = [int(v[i] / mx * (height - 1)) for i in idx]
+        rows.append((name, scaled))
+    print(f"backlog (max={mx})")
+    for h in range(height - 1, -1, -1):
+        line = ""
+        for x in range(width):
+            ch = " "
+            for mark, (_, s) in zip("AXm", rows):
+                if s[x] == h:
+                    ch = mark
+            line += ch
+        print("|" + line)
+    print("+" + "-" * width)
+    for mark, (name, _) in zip("AXm", rows):
+        print(f"  {mark} = {name}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--horizon", type=int, default=40)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ecfg = EngineConfig(batch_slots=4, prompt_len=16, cache_len=64)
+    mk_src = lambda: RequestSource(vocab_size=cfg.vocab_size, prompt_len=16,
+                                   raw_rate=5, max_new_tokens=4)
+
+    runs = {}
+    for name, sched in [
+        ("adaptive(V=20)", AdaptiveScheduler(rates=tuple(float(f) for f in range(1, 6)),
+                                             V=20.0, capacity=32)),
+        ("static-max(f=5)", StaticScheduler(rate=5.0, capacity=32)),
+        ("static-min(f=1)", StaticScheduler(rate=1.0, capacity=32)),
+    ]:
+        eng = Engine(cfg, params, ecfg)
+        tr = serve(eng, sched, mk_src(), horizon=args.horizon, steps_per_slot=2)
+        runs[name] = (eng, sched, tr)
+        print(f"{name:18s} served={int(tr['served'].sum()):4d} "
+              f"dropped={sched.dropped:3d} tailQ={float(tr['backlog'][-5:].mean()):5.1f} "
+              f"meanRate={float(np.mean(sched.rate_history)):.2f} "
+              f"latency={latency_stats(eng)}")
+
+    print()
+    ascii_plot({k: v[2]["backlog"] for k, v in runs.items()})
+    print("\nadaptive keeps the queue bounded with ~max throughput;"
+          "\nstatic-max overflows (drops); static-min starves throughput.")
+
+
+if __name__ == "__main__":
+    main()

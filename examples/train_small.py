@@ -1,0 +1,66 @@
+"""End-to-end training driver: a ~100M-param model from the zoo family, real
+optimizer/schedule/data-pipeline/checkpointing, a few hundred steps.
+
+On this CPU container the default is a scaled-down variant (--preset cpu,
+~7M params, 300 steps, minutes); --preset full instantiates the real ~100M
+config (same code path) for TPU runs.
+
+Run: PYTHONPATH=src python examples/train_small.py [--steps 300] [--preset cpu]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.training import AdamW, train_loop
+from repro.training import checkpoint as ckpt
+from repro.training.data import SyntheticStream
+
+
+PRESETS = {
+    # ~7M params: fast on CPU, same family/code path as the zoo's dense archs
+    "cpu": ModelConfig(
+        name="train-small-cpu", arch_type="dense", n_layers=4, d_model=256,
+        n_heads=8, n_kv_heads=2, d_ff=1024, vocab_size=4096, dtype="float32",
+        attn_window=None, tie_embeddings=True,
+    ),
+    # ~110M params (GPT2-small-ish): the assignment's "~100M for a few
+    # hundred steps" — run this preset on real hardware.
+    "full": ModelConfig(
+        name="train-small-full", arch_type="dense", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=4, d_ff=3072, vocab_size=32768, dtype="bfloat16",
+        tie_embeddings=True,
+    ),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--preset", choices=PRESETS, default="cpu")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_small")
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    print(f"arch {cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+    stream = SyntheticStream(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                             batch_size=args.batch)
+    opt = AdamW(lr=3e-4, warmup=20, total_steps=args.steps)
+    params, opt_state, hist = train_loop(cfg, opt, stream, args.steps, log_every=20)
+    for h in hist:
+        print(f"  step {h['step']:4d}  loss {h['loss']:.4f}  lr {h['lr']:.2e} "
+              f"gnorm {h['grad_norm']:.2f}")
+    d = ckpt.save(args.ckpt_dir, {"params": params}, step=args.steps)
+    print(f"checkpoint -> {d}")
+    assert hist[-1]["loss"] < hist[0]["loss"], "loss must decrease"
+    print(f"loss fell {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

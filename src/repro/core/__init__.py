@@ -1,0 +1,38 @@
+"""Core: the paper's contribution — Lyapunov drift-plus-penalty rate control.
+
+Faithful pieces: queueing.queue_update (the paper's queue recursion),
+lyapunov.drift_plus_penalty_action (Algorithm 1), trace.fig2_experiment
+(the paper's trace-based evaluation). Extensions are documented per-module.
+"""
+from repro.core.lyapunov import (
+    LyapunovController,
+    VirtualQueue,
+    distributed_action,
+    drift_plus_penalty_action,
+)
+from repro.core.queueing import (
+    QueueState,
+    ServiceProcess,
+    bounded_queue_step,
+    queue_update,
+    simulate_queue,
+)
+from repro.core.trace import Fig2Config, fig2_experiment, summarize
+from repro.core.utility import Utility, paper_utility
+
+__all__ = [
+    "LyapunovController",
+    "VirtualQueue",
+    "distributed_action",
+    "drift_plus_penalty_action",
+    "QueueState",
+    "ServiceProcess",
+    "bounded_queue_step",
+    "queue_update",
+    "simulate_queue",
+    "Fig2Config",
+    "fig2_experiment",
+    "summarize",
+    "Utility",
+    "paper_utility",
+]

@@ -1,0 +1,150 @@
+"""Queue dynamics from the paper (Sec. II-C).
+
+The paper models the arrival queue of the FID pipeline as
+
+    Q(t+1) = max{Q(t) - mu(t), 0} + lambda(f(t))
+
+where Q(t) is the backlog, mu(t) the number of items the service drains in
+slot t, and lambda(f(t)) the arrivals induced by the controllable rate f(t).
+
+This module provides:
+  * ``queue_update`` — the exact one-step recursion (pure, jit/vmap-safe).
+  * ``QueueState`` — backlog plus overflow accounting for a *bounded* queue
+    (the paper's reliability failure mode is the overflow of a finite queue).
+  * ``simulate_queue`` — lax.scan simulator over an arrival/service trace.
+
+Everything is written so a vector of queues (multi-tenant / per-pod) is just
+a leading axis: all ops are elementwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QueueState(NamedTuple):
+    """Backlog state of one (or a vector of) bounded FIFO queue(s).
+
+    Attributes:
+      backlog:   current queue length Q(t)  (float32 — the paper's fluid model;
+                 arrival/service quanta need not be integral).
+      dropped:   cumulative arrivals dropped because the queue was full.
+      served:    cumulative departures.
+      overflowed: sticky flag — did backlog ever exceed ``capacity``?
+    """
+
+    backlog: jax.Array
+    dropped: jax.Array
+    served: jax.Array
+    overflowed: jax.Array
+
+    @staticmethod
+    def zeros(shape=(), dtype=jnp.float32) -> "QueueState":
+        z = jnp.zeros(shape, dtype)
+        return QueueState(z, z, z, jnp.zeros(shape, jnp.bool_))
+
+
+def queue_update(backlog: jax.Array, service: jax.Array, arrivals: jax.Array) -> jax.Array:
+    """The paper's recursion: Q(t+1) = max(Q(t) - mu(t), 0) + lambda(f(t))."""
+    return jnp.maximum(backlog - service, 0.0) + arrivals
+
+
+def bounded_queue_step(
+    state: QueueState,
+    service: jax.Array,
+    arrivals: jax.Array,
+    capacity: float | jax.Array = jnp.inf,
+) -> QueueState:
+    """One slot of a *bounded* queue: serve first, then admit up to capacity.
+
+    The unbounded recursion above is what the Lyapunov analysis stabilizes;
+    the bounded step is what a real system executes — arrivals beyond
+    ``capacity`` are dropped and counted, and ``overflowed`` latches whether
+    the bound was ever hit (the paper's reliability criterion).
+    """
+    after_service = jnp.maximum(state.backlog - service, 0.0)
+    served_now = state.backlog - after_service
+    room = jnp.maximum(capacity - after_service, 0.0)
+    admitted = jnp.minimum(arrivals, room)
+    dropped_now = arrivals - admitted
+    new_backlog = after_service + admitted
+    return QueueState(
+        backlog=new_backlog,
+        dropped=state.dropped + dropped_now,
+        served=state.served + served_now,
+        overflowed=jnp.logical_or(state.overflowed, dropped_now > 0),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceProcess:
+    """Stochastic service process mu(t).
+
+    kind:
+      "deterministic": mu(t) = rate.
+      "poisson":       mu(t) ~ Poisson(rate).
+      "markov":        two-state (fast/slow) Markov-modulated deterministic
+                       service — models the FID pipeline alternating between
+                       cheap (no face) and expensive (faces present) frames.
+    """
+
+    kind: str = "deterministic"
+    rate: float = 10.0
+    slow_rate: float = 4.0
+    p_stay: float = 0.9
+
+    def init_state(self) -> jax.Array:
+        return jnp.zeros((), jnp.int32)  # markov mode index; unused otherwise
+
+    def sample(self, key: jax.Array, state: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """Returns (mu_t, next_state)."""
+        if self.kind == "deterministic":
+            return jnp.asarray(self.rate, jnp.float32), state
+        if self.kind == "poisson":
+            return jax.random.poisson(key, self.rate).astype(jnp.float32), state
+        if self.kind == "markov":
+            flip = jax.random.bernoulli(key, 1.0 - self.p_stay)
+            nxt = jnp.where(flip, 1 - state, state)
+            mu = jnp.where(nxt == 0, self.rate, self.slow_rate)
+            return mu.astype(jnp.float32), nxt
+        raise ValueError(f"unknown service kind: {self.kind}")
+
+
+def simulate_queue(
+    arrivals_fn: Callable[[jax.Array, int], jax.Array],
+    service: ServiceProcess,
+    horizon: int,
+    key: jax.Array,
+    capacity: float = jnp.inf,
+) -> tuple[QueueState, dict]:
+    """Run the bounded queue for ``horizon`` slots under fixed policies.
+
+    arrivals_fn(key, t) -> arrivals at slot t (traced; t is a tracer).
+    Returns final state + per-slot trace dict {backlog, service, arrivals}.
+    """
+
+    def body(carry, t):
+        state, svc_state = carry
+        k_arr, k_svc = jax.random.split(jax.random.fold_in(key, t))
+        mu, svc_state = service.sample(k_svc, svc_state)
+        lam = arrivals_fn(k_arr, t)
+        state = bounded_queue_step(state, mu, lam, capacity)
+        return (state, svc_state), {
+            "backlog": state.backlog,
+            "service": mu,
+            "arrivals": lam,
+        }
+
+    init = (QueueState.zeros(), service.init_state())
+    (final, _), trace = jax.lax.scan(body, init, jnp.arange(horizon))
+    return final, trace
+
+
+@partial(jax.jit, static_argnames=("horizon",))
+def time_average_backlog(backlogs: jax.Array, horizon: int) -> jax.Array:
+    """(1/t) * sum Q(tau) — the stability functional the paper bounds."""
+    return jnp.sum(backlogs[:horizon]) / horizon

@@ -1,0 +1,48 @@
+"""Utility models S(f) for the controller's penalty term.
+
+The paper defines FID performance S(f(t)) = alpha(f(t)) / beta(t): the
+fraction of faces appearing in the raw feed that the system identifies at
+sampling rate f. Its own evaluation then assumes S is maximized by maximizing
+the processed-frame rate ("we made an assumption that maximizing the number of
+frames ... would also maximize the FID performance"), i.e. S proportional to
+f. We implement that *paper-faithful* utility plus physically-motivated
+concave alternatives (used by the beyond-paper experiments):
+
+  * linear:     S(f) = f / f_max                        (paper's evaluation)
+  * detection:  S(f) = 1 - (1 - p)**f                   (a face visible for a
+                 ~1s window is caught by at least one of f samples, each an
+                 independent detection w.p. p)
+  * log:        S(f) = log(1 + a f) / log(1 + a f_max)  (diminishing returns)
+
+All are normalized to S(f_max) = 1 and vectorized over f.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Utility:
+    kind: str = "linear"
+    f_max: float = 10.0
+    p_detect: float = 0.35   # per-sample detection probability ("detection")
+    a: float = 1.0           # curvature ("log")
+
+    def __call__(self, f):
+        f = jnp.asarray(f, jnp.float32)
+        if self.kind == "linear":
+            return f / self.f_max
+        if self.kind == "detection":
+            top = 1.0 - (1.0 - self.p_detect) ** f
+            bot = 1.0 - (1.0 - self.p_detect) ** self.f_max
+            return top / bot
+        if self.kind == "log":
+            return jnp.log1p(self.a * f) / jnp.log1p(self.a * self.f_max)
+        raise ValueError(f"unknown utility kind: {self.kind}")
+
+
+def paper_utility(f_max: float = 10.0) -> Utility:
+    """The utility the paper's own simulation optimizes (S ∝ processed rate)."""
+    return Utility(kind="linear", f_max=f_max)

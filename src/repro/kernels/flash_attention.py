@@ -1,0 +1,126 @@
+"""Pallas TPU flash attention (prefill/train forward).
+
+Grid: (B, H, nq, nk) — nk is the innermost (sequential on TPU) axis so the
+online-softmax running state (m, l, acc) lives in VMEM scratch across the
+KV sweep of one Q tile. Tiles:
+
+  q     (1, block_q, 1, hd)   VMEM    — one (batch, head) Q tile
+  k/v   (1, block_k, 1, hd)   VMEM    — KV head = q_head // G (GQA folding)
+  out   (1, block_q, 1, hd)   VMEM    — written on the last KV step
+
+block_q/block_k default 512/512: with hd=128 and f32 scratch the working set
+is ~ (512*128)*3 (q,k,v) * 2B + (512*128 + 2*512)*4B acc ≈ 0.7 MB — well
+under the ~16 MB VMEM of a v5e core, and all matmul dims are multiples of
+the 128-lane MXU. Causal masking skips fully-masked KV tiles via pl.when
+(no FLOPs spent above the diagonal). Optional sliding window.
+
+Numerics: scores/softmax in f32 (preferred_element_type), inputs bf16/f32.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                 *, scale, block_q, block_k, nk, causal, window):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # Tile is live unless it's entirely above the diagonal / outside window.
+    live = True
+    if causal:
+        live = k_start <= q_start + block_q - 1
+    if window is not None:
+        live = jnp.logical_and(live, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :]                       # (bq, hd)
+        k = k_ref[0, :, 0, :]                       # (bk, hd)
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                    # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,                 # (B, S, H, hd)
+    k: jax.Array,                 # (B, S, KVH, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    _, Sk, KVH, _ = k.shape
+    G = H // KVH
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, block_q, Sk, block_k)
+    nq, nk = Sq // block_q, Sk // block_k
+    scale = hd ** -0.5
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        nk=nk, causal=causal, window=window,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, qi, ki: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, qi, ki: (b, ki, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd), lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),      # m
+            pltpu.VMEM((block_q, 1), jnp.float32),      # l
+            pltpu.VMEM((block_q, hd), jnp.float32),     # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,54 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``impl`` selects the execution path:
+  "pallas"     — compiled TPU kernel (real hardware)
+  "interpret"  — Pallas interpret mode (kernel body run op-by-op; CPU tests)
+  "xla"        — the pure-XLA fallback with identical semantics
+
+On this CPU container everything defaults to "xla" for speed; tests validate
+"interpret" against the ref oracles so the TPU path is exercised end to end.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+from repro.models.attention import chunked_attention
+from repro.models.ssm import ssd_chunked
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "impl", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, window=None, impl="xla",
+                    block_q=512, block_k=512):
+    if impl == "xla":
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 block_q=block_q, block_k=block_k)
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, interpret=(impl == "interpret"),
+    )
+
+
+@partial(jax.jit, static_argnames=("window", "impl", "block_l"))
+def decode_attention(q, k, v, slot_pos, pos, *, window=None, impl="xla", block_l=512):
+    if impl == "xla":
+        from repro.kernels.ref import decode_attention_ref
+
+        return decode_attention_ref(q, k, v, slot_pos, pos, window=window)
+    return _da.decode_attention(
+        q, k, v, slot_pos, pos, window=window, block_l=block_l,
+        interpret=(impl == "interpret"),
+    )
+
+
+@partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd(x, dt, A, Bm, Cm, *, chunk=128, impl="xla"):
+    if impl == "xla":
+        y, st = ssd_chunked(x, dt, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32), chunk)
+        return y, st
+    return _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=(impl == "interpret"))

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (naive, O(S^2) / sequential).
+
+These are deliberately the *dumbest correct* implementations — full score
+matrices, step-by-step recurrences — so kernel tests compare against
+something independently simple, not against another optimized path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=None):
+    """q (B,Sq,H,hd), k/v (B,Sk,KVH,hd) -> (B,Sq,H,hd). Full softmax."""
+    B, Sq, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    kk = jnp.repeat(k, G, axis=2)
+    vv = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * hd ** -0.5
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(vv.dtype), vv).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, slot_pos, pos, *, window=None):
+    """q (B,H,hd), cache k/v (B,L,KVH,hd), slot_pos (B,L), pos (B,)."""
+    B, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    kk = jnp.repeat(k, G, axis=2)
+    vv = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bhd,blhd->bhl", q, kk).astype(jnp.float32) * hd ** -0.5
+    valid = (slot_pos >= 0) & (slot_pos <= pos[:, None])
+    if window is not None:
+        valid &= slot_pos > (pos[:, None] - window)
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhl,blhd->bhd", p.astype(vv.dtype), vv).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    """Sequential SSD recurrence, one step at a time (the literal SSM).
+
+    x (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,N).
+    Returns y (B,S,H,P), final state (B,H,P,N).
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(state, t):
+        xt = x[:, t].astype(jnp.float32)              # (B,H,P)
+        dtt = dt[:, t].astype(jnp.float32)            # (B,H)
+        Bt = Bm[:, t].astype(jnp.float32)             # (B,N)
+        Ct = Cm[:, t].astype(jnp.float32)
+        decay = jnp.exp(dtt * A)                      # (B,H)
+        contrib = jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, Bt)
+        state = decay[..., None, None] * state + contrib
+        y = jnp.einsum("bn,bhpn->bhp", Ct, state)
+        return state, y
+
+    state = jnp.zeros((B, H, P, N), jnp.float32)
+    state, ys = jax.lax.scan(step, state, jnp.arange(S))
+    return jnp.swapaxes(ys, 0, 1).astype(x.dtype), state

@@ -1,0 +1,87 @@
+"""Assigned input shapes and ShapeDtypeStruct builders for the dry-run.
+
+  train_4k       seq_len=  4,096  global_batch=256   train_step
+  prefill_32k    seq_len= 32,768  global_batch= 32   prefill
+  decode_32k     seq_len= 32,768  global_batch=128   serve_step (1 new token)
+  long_500k      seq_len=524,288  global_batch=  1   serve_step (1 new token)
+
+Decode shapes lower serve_step with a KV cache covering seq_len: full cache
+for decode_32k; for long_500k the *sub-quadratic variants* run — SSM/hybrid
+natively (O(1) state / bounded local window), dense/vlm/audio via their
+sliding-window variant (ring cache of cfg.attn_window slots). No arch skips
+any shape (see DESIGN.md §4). Everything here is ShapeDtypeStruct — no
+allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCase("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCase("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCase("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCase("long_500k", "decode", 524288, 1),
+}
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def effective_window(cfg: ModelConfig, case: ShapeCase) -> Optional[int]:
+    """Sliding-window engaged only for long_500k on windowed-variant archs;
+    hybrids always use their local window (handled inside the model)."""
+    if case.name == "long_500k" and cfg.attn_window and not cfg.is_hybrid:
+        return cfg.attn_window
+    return None
+
+
+def cache_len_for(cfg: ModelConfig, case: ShapeCase) -> int:
+    w = effective_window(cfg, case)
+    if w is not None:
+        return w
+    return case.seq_len
+
+
+def input_specs(cfg: ModelConfig, case: ShapeCase) -> dict:
+    """Batch ShapeDtypeStructs for the given shape case."""
+    B, S = case.global_batch, case.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if case.kind == "train":
+        out = {"tokens": sds((B, S), jnp.int32), "targets": sds((B, S), jnp.int32)}
+    elif case.kind == "prefill":
+        out = {"tokens": sds((B, S), jnp.int32)}
+    else:  # decode: prompt spec only used to eval_shape the DecodeState
+        out = {"tokens": sds((B, 128), jnp.int32)}
+    if cfg.arch_type == "vlm":
+        out["patches"] = sds((B, cfg.num_prefix_tokens, cfg.d_model), dt)
+    if cfg.is_encdec:
+        out["frames"] = sds((B, cfg.enc_seq, cfg.d_model), dt)
+    return out
+
+
+def decode_inputs(cfg: ModelConfig, case: ShapeCase):
+    """(state_shapes, tokens_spec) for serve_step lowering."""
+    from repro.models.model import abstract_params, decode_state_shape
+
+    assert case.kind == "decode"
+    params = abstract_params(cfg)
+    batch = input_specs(cfg, case)
+    state = decode_state_shape(params, batch, cfg, cache_len_for(cfg, case))
+    toks = sds((case.global_batch,), jnp.int32)
+    return state, toks

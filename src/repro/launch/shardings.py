@@ -1,0 +1,222 @@
+"""Parameter / optimizer / activation / cache PartitionSpec rules.
+
+Megatron-style TP over the ``model`` axis, DP over ("pod","data"), ZeRO-1
+for optimizer moments. Rules are path-based over the param pytree and check
+divisibility against the mesh (dims that don't divide replicate — e.g.
+mamba2's 24 SSD heads on a 16-way model axis; the arch is 130M params so
+replication is the right call, see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import batch_axes
+
+
+def _axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return "/".join(out)
+
+
+def _leaf_spec(pstr: str, shape: tuple, cfg: ModelConfig, model: int) -> P:
+    """PartitionSpec for one *per-layer* leaf (no stack axis)."""
+    div = lambda d: d % model == 0 and model > 1
+
+    def last(name):
+        return pstr.endswith(name)
+
+    # embeddings: vocab-shard when divisible, else shard d_model (unembed
+    # then contracts the sharded dim -> psum; beats full replication)
+    if last("embed/tok"):
+        if div(shape[0]):
+            return P("model", None)
+        return P(None, "model") if div(shape[1]) else P(None, None)
+    if last("embed/head"):
+        return P(None, "model") if div(shape[1]) else P("model" if div(shape[0]) else None, None)
+    # attention (D, H, hd) / (H, hd, D)
+    if last("wq") or last("wk") or last("wv"):
+        H = shape[-2]
+        return P(None, "model", None) if div(H) else P(None, None, None)
+    if last("wo"):
+        H = shape[-3]
+        return P("model", None, None) if div(H) else P(None, None, None)
+    # dense mlp
+    if last("w_gate") or last("w_up"):
+        if len(shape) == 3:  # moe experts (E, D, F)
+            return P("model", None, None) if div(shape[0]) else P(None, None, None)
+        return P(None, "model") if div(shape[-1]) else P(None, None)
+    if last("w_down"):
+        if len(shape) == 3:  # (E, F, D)
+            return P("model", None, None) if div(shape[0]) else P(None, None, None)
+        return P("model", None) if div(shape[0]) else P(None, None)
+    if last("router"):
+        return P(None, "model") if div(shape[-1]) else P(None, None)
+    # ssm
+    if last("in_proj"):
+        return P(None, "model") if div(shape[-1]) else P(None, None)
+    if last("out_proj"):
+        return P("model", None) if div(shape[0]) else P(None, None)
+    # rglru
+    if last("in_x") or last("in_y"):
+        return P(None, "model") if div(shape[-1]) else P(None, None)
+    if last("rec/out") or last("out"):
+        return P("model", None) if div(shape[0]) else P(None, None)
+    # everything else (norm scales, conv, gates, biases, A_log...)
+    return P(*([None] * len(shape)))
+
+
+def sanitize_spec(spec: P, shape: tuple, mesh) -> P:
+    """Drop sharding on any dim the mesh axes don't divide evenly — pjit
+    rejects non-divisible *argument* shardings (e.g. granite's vocab 49155
+    on a 16-way model axis). Falls back to replication for that dim."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, ax in zip(shape, parts):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = int(np.prod([_axis_size(mesh, a) for a in axes]))
+        out.append(ax if n > 0 and dim % n == 0 else None)
+    return P(*out)
+
+
+def param_specs(abstract_params: Any, cfg: ModelConfig, mesh) -> Any:
+    """PartitionSpec tree matching the params tree (stack leaves get a
+    leading None for the layer-scan axis)."""
+    model = _axis_size(mesh, "model")
+
+    def rule(path, leaf):
+        pstr = _path_str(path)
+        shape = tuple(leaf.shape)
+        stacked = "/stack/" in f"/{pstr}/" or pstr.startswith("stack/")
+        if stacked and len(shape) >= 1:
+            spec = P(None, *_leaf_spec(pstr, shape[1:], cfg, model))
+        else:
+            spec = _leaf_spec(pstr, shape, cfg, model)
+        return sanitize_spec(spec, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+def zero1_specs(pspecs: Any, abstract_params: Any, mesh) -> Any:
+    """Optimizer-moment specs: param spec + shard the largest replicated dim
+    over 'data' when divisible (ZeRO-1)."""
+    data = _axis_size(mesh, "data")
+
+    def rule(spec: P, leaf):
+        if data <= 1:
+            return spec
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        best, best_dim = -1, -1
+        for i, (p, d) in enumerate(zip(parts, leaf.shape)):
+            if p is None and d % data == 0 and d > best:
+                best, best_dim = d, i
+        if best_dim >= 0 and best >= data:
+            parts[best_dim] = "data"
+        return P(*parts)
+
+    return jax.tree.map(rule, pspecs, abstract_params)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# --------------------------------------------------------------- activations
+def batch_spec(mesh, batch: int, *more) -> P:
+    """Shard the batch dim over ("pod","data") when divisible, else None."""
+    ba = batch_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in ba]))
+    return P(ba if batch % n == 0 and n > 1 else None, *more)
+
+
+def train_batch_specs(mesh, cfg: ModelConfig, batch: int) -> dict:
+    s = {"tokens": batch_spec(mesh, batch, None),
+         "targets": batch_spec(mesh, batch, None)}
+    if cfg.arch_type == "vlm":
+        s["patches"] = batch_spec(mesh, batch, None, None)
+    if cfg.is_encdec:
+        s["frames"] = batch_spec(mesh, batch, None, None)
+    return s
+
+
+def activation_spec(mesh, batch: int) -> P:
+    """Residual-stream constraint (B, S, D): batch over DP axes; seq over
+    'model' (Megatron sequence parallelism) so remat-saved residuals are
+    1/model-th per chip."""
+    ba = batch_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in ba]))
+    bspec = ba if batch % n == 0 and n > 1 else None
+    return P(bspec, "model", None)
+
+
+# -------------------------------------------------------------------- caches
+def decode_state_specs(state_shapes: Any, cfg: ModelConfig, mesh, batch: int) -> Any:
+    """Specs for DecodeState.
+
+    Batch (axis 1 of stacked cache leaves, axis 0 of pos/last_tok) shards
+    over the DP axes. The KV-cache *sequence* axis shards over 'model' —
+    GQA head counts (8, 1) rarely divide a 16-way TP axis, but the cache
+    length always does, and S-sharding is also what the distributed
+    flash-decode path wants (each model shard owns a contiguous cache
+    stripe). SSD states shard the head-dim P; recurrent states their width.
+    batch-1 long-context additionally folds the DP axes into the seq dim.
+    """
+    ba = batch_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in ba]))
+    model = _axis_size(mesh, "model")
+    b_ok = batch % n == 0 and n > 1
+
+    def seq_axes(S: int):
+        """axes for a cache sequence dim: model (+ DP when batch unsharded)."""
+        if not b_ok and model > 1 and n > 1 and S % (model * n) == 0:
+            return ("model",) + ba
+        if model > 1 and S % model == 0:
+            return ("model",)
+        return None
+
+    def rule(path, leaf):
+        pstr = _path_str(path)
+        shape = tuple(leaf.shape)
+        if pstr in ("pos", "last_tok"):
+            return P(ba if b_ok else None)
+        parts = [None] * len(shape)
+        if len(shape) >= 2 and b_ok:
+            parts[1] = ba
+        if pstr.endswith("k") or pstr.endswith("v"):          # (L,B,S,KVH,hd)
+            parts[2] = seq_axes(shape[2])
+        elif pstr.endswith("slot_pos"):                        # (L,B,S)
+            parts[2] = seq_axes(shape[2])
+        elif pstr.endswith("ssd"):                             # (L,B,H,P,N)
+            if model > 1 and shape[3] % model == 0:
+                parts[3] = "model"
+        elif pstr.endswith("conv"):                            # (L,B,W-1,ch)
+            if model > 1 and shape[3] % model == 0:
+                parts[3] = "model"
+        elif pstr.endswith("h"):                               # (L,B,R)
+            if model > 1 and shape[2] % model == 0:
+                parts[2] = "model"
+        return sanitize_spec(P(*parts), shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, state_shapes)

@@ -1,0 +1,19 @@
+from repro.models.model import (
+    DecodeState,
+    abstract_params,
+    decode_step,
+    forward,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+__all__ = [
+    "DecodeState",
+    "abstract_params",
+    "decode_step",
+    "forward",
+    "init_params",
+    "loss_fn",
+    "prefill",
+]

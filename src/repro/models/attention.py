@@ -1,0 +1,405 @@
+"""Attention: GQA/MQA, qk-norm, RoPE, sliding window, cross-attn, KV cache.
+
+Two execution paths:
+
+* ``chunked_attention`` — memory-bounded online-softmax attention in pure
+  XLA (lax.scan over KV blocks inside a scan over Q blocks). This is the
+  default for train/prefill everywhere (CPU dry-run, smoke tests) because it
+  lowers on any backend with O(block²) temporaries instead of O(S²). The
+  Pallas flash kernel (repro.kernels.flash_attention) is the TPU-targeted
+  drop-in with identical semantics, validated against the same oracle.
+* ``decode_attention`` — single-token attention against a KV cache. The
+  cache is a uniform ring buffer: ``cache_len = window or max_len``; each
+  slot stores the *absolute* position it holds (slot_pos), so full-cache and
+  sliding-window decode share one code path (slot validity is computed from
+  slot_pos, not layout).
+
+Shapes: x (B, S, D); q (B, S, H, hd); k,v (B, S, KVH, hd); caches
+(B, cache_len, KVH, hd) with slot_pos (B, cache_len) int32 (-1 = empty).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, cdtype, dense_init, headwise_rmsnorm
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------- params
+def attn_init(key, cfg: ModelConfig, cross: bool = False):
+    D, H, KVH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    dt = cdtype(cfg)
+    p = {
+        "wq": dense_init(ks[0], D, H * hd, dt).reshape(D, H, hd),
+        "wk": dense_init(ks[1], D, KVH * hd, dt).reshape(D, KVH, hd),
+        "wv": dense_init(ks[2], D, KVH * hd, dt).reshape(D, KVH, hd),
+        "wo": dense_init(ks[3], H * hd, D, dt).reshape(H, hd, D),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, L, KVH, hd) — RoPE already applied
+    v: jax.Array          # (B, L, KVH, hd)
+    slot_pos: jax.Array   # (B, L) int32, absolute position held; -1 empty
+
+    @property
+    def cache_len(self) -> int:
+        return self.k.shape[1]
+
+
+def cache_dtype(cfg: ModelConfig):
+    """KV-cache storage dtype (e.g. float8_e4m3fn for the §Perf memory knob)."""
+    return jnp.dtype(cfg.cache_dtype) if cfg.cache_dtype else cdtype(cfg)
+
+
+def kv_cache_init(batch: int, cache_len: int, cfg: ModelConfig) -> KVCache:
+    KVH, hd = cfg.n_kv_heads, cfg.head_dim_
+    dt = cache_dtype(cfg)
+    return KVCache(
+        k=jnp.zeros((batch, cache_len, KVH, hd), dt),
+        v=jnp.zeros((batch, cache_len, KVH, hd), dt),
+        slot_pos=jnp.full((batch, cache_len), -1, jnp.int32),
+    )
+
+
+# ------------------------------------------------- chunked online-softmax
+#
+# Differentiable via a FLASH BACKWARD (custom_vjp): the forward saves only
+# (q, k, v, o, lse); the backward re-materializes each (q-block, k-block)
+# score tile and accumulates dq/dk/dv. Without this, the fwd scans would
+# stash every per-tile softmax for the bwd — ~2 GiB/layer/device at 4k
+# train shapes (measured: 76 GiB temp vs 11 GiB with flash-bwd; see
+# EXPERIMENTS.md §Perf).
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    prefix_len: int = 0,
+    q_offset: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+) -> jax.Array:
+    """Online-softmax attention over KV blocks. q:(B,Sq,H,hd) k,v:(B,Sk,KVH,hd).
+
+    Memory: O(block_q * block_k) per (head-group) instead of O(Sq*Sk).
+    ``window`` restricts attention to keys with qpos - window < kpos <= qpos.
+    ``prefix_len`` > 0 gives prefix-LM masking: keys with kpos < prefix_len
+    are visible to every query (PaliGemma-style bidirectional prefix).
+    ``q_offset`` is the absolute position of q[0] (cross-block prefill).
+    Non-divisible sequence lengths are zero-padded; padded keys sit at
+    positions >= Sk so the causal mask hides them from real queries.
+    """
+    Sq_real, Sk_real = q.shape[1], k.shape[1]
+    block_q = min(block_q, Sq_real)
+    block_k = min(block_k, Sk_real)
+    pad_q = (-Sq_real) % block_q
+    pad_k = (-Sk_real) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    k_limit = Sk_real if (pad_k and not causal) else None
+
+    f = _make_flash(causal, window, prefix_len, q_offset, block_q, block_k, k_limit)
+    out = f(q, k, v)
+    if pad_q:
+        out = out[:, :Sq_real]
+    return out
+
+
+def _tile_mask(qpos, kpos, causal, window, prefix_len, k_limit):
+    mask = jnp.ones((qpos.shape[0], kpos.shape[0]), jnp.bool_)
+    if causal:
+        cmask = kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            cmask &= kpos[None, :] > (qpos[:, None] - window)
+        if prefix_len:
+            cmask |= kpos[None, :] < prefix_len
+        mask &= cmask
+    if k_limit is not None:
+        mask &= kpos[None, :] < k_limit
+    return mask
+
+
+def _flash_fwd_impl(q, k, v, causal, window, prefix_len, q_offset, block_q, block_k, k_limit):
+    """Tiled forward. Returns (out (B,Sq,H,hd), lse (B,KVH,G,Sq))."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KVH, _ = k.shape
+    G = H // KVH
+    scale = hd ** -0.5
+    nq, nk = Sq // block_q, Sk // block_k
+    qg = q.reshape(B, nq, block_q, KVH, G, hd)
+    kb = k.reshape(B, nk, block_k, KVH, hd)
+    vb = v.reshape(B, nk, block_k, KVH, hd)
+
+    def q_block(qi, qblk):
+        qpos = q_offset + qi * block_q + jnp.arange(block_q)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            kj, kblk, vblk = inputs
+            kpos = kj * block_k + jnp.arange(block_k)
+            s = jnp.einsum(
+                "bqkgh,bskh->bkgqs", qblk, kblk, preferred_element_type=jnp.float32
+            ) * scale
+            mask = _tile_mask(qpos, kpos, causal, window, prefix_len, k_limit)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(vblk.dtype), vblk)
+            acc = acc * alpha[..., None] + pv.astype(jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, KVH, G, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, KVH, G, block_q, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kb.swapaxes(0, 1), vb.swapaxes(0, 1))
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]            # (B,KVH,G,bq,hd)
+        lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), NEG_INF)
+        return out.transpose(0, 3, 1, 2, 4), lse                 # (B,bq,KVH,G,hd)
+
+    _, (outs, lses) = jax.lax.scan(
+        lambda _, x: (None, q_block(*x)), None, (jnp.arange(nq), qg.swapaxes(0, 1))
+    )  # outs (nq,B,bq,KVH,G,hd); lses (nq,B,KVH,G,bq)
+    out = outs.swapaxes(0, 1).reshape(B, Sq, H, hd).astype(q.dtype)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, KVH, G, Sq)
+    return out, lse
+
+
+def _flash_bwd_impl(q, k, v, o, lse, do, causal, window, prefix_len, q_offset,
+                    block_q, block_k, k_limit):
+    """Flash backward: recompute tiles from (q,k,v,lse); O(bq*bk) memory."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KVH, _ = k.shape
+    G = H // KVH
+    scale = hd ** -0.5
+    nq, nk = Sq // block_q, Sk // block_k
+    qg = q.reshape(B, nq, block_q, KVH, G, hd).swapaxes(0, 1)
+    kb = k.reshape(B, nk, block_k, KVH, hd)
+    vb = v.reshape(B, nk, block_k, KVH, hd)
+    dog = do.reshape(B, nq, block_q, KVH, G, hd).swapaxes(0, 1)
+    og = o.reshape(B, nq, block_q, KVH, G, hd).swapaxes(0, 1)
+    lseg = lse.reshape(B, KVH, G, nq, block_q).transpose(3, 0, 1, 2, 4)  # (nq,B,KVH,G,bq)
+    # D_i = rowsum(do * o)  (B,KVH,G,bq) per q block
+    Dg = jnp.einsum("nbqkgh,nbqkgh->nbkgq", dog.astype(jnp.float32), og.astype(jnp.float32))
+
+    def q_step(carry, inputs):
+        dk_acc, dv_acc = carry                                   # (nk,B,bk,KVH,hd) f32
+        qi, qblk, dob, ob, lseb, Db = inputs
+        qpos = q_offset + qi * block_q + jnp.arange(block_q)
+
+        def kv_step(dq_acc, inputs2):
+            kj, kblk, vblk = inputs2
+            kpos = kj * block_k + jnp.arange(block_k)
+            s = jnp.einsum(
+                "bqkgh,bskh->bkgqs", qblk, kblk, preferred_element_type=jnp.float32
+            ) * scale
+            mask = _tile_mask(qpos, kpos, causal, window, prefix_len, k_limit)
+            s = jnp.where(mask, s, NEG_INF)
+            p = jnp.exp(s - lseb[..., None])                     # normalized probs
+            dv_blk = jnp.einsum("bkgqs,bqkgh->bskh", p, dob.astype(jnp.float32))
+            dp = jnp.einsum("bqkgh,bskh->bkgqs", dob.astype(jnp.float32),
+                            vblk.astype(jnp.float32))
+            ds = p * (dp - Db[..., None])                        # (B,KVH,G,bq,bk)
+            dq_blk = jnp.einsum("bkgqs,bskh->bqkgh", ds, kblk.astype(jnp.float32)) * scale
+            dk_blk = jnp.einsum("bkgqs,bqkgh->bskh", ds, qblk.astype(jnp.float32)) * scale
+            return dq_acc + dq_blk, (dk_blk, dv_blk)
+
+        dq0 = jnp.zeros((B, block_q, KVH, G, hd), jnp.float32)
+        dq, (dk_blks, dv_blks) = jax.lax.scan(
+            kv_step, dq0, (jnp.arange(nk), kb.swapaxes(0, 1), vb.swapaxes(0, 1))
+        )
+        return (dk_acc + dk_blks, dv_acc + dv_blks), dq
+
+    dk0 = jnp.zeros((nk, B, block_k, KVH, hd), jnp.float32)
+    dv0 = jnp.zeros((nk, B, block_k, KVH, hd), jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(
+        q_step, (dk0, dv0), (jnp.arange(nq), qg, dog, og, lseg, Dg)
+    )
+    dq = dqs.swapaxes(0, 1).reshape(B, Sq, H, hd).astype(q.dtype)
+    dk = dk.swapaxes(0, 1).reshape(B, Sk, KVH, hd).astype(k.dtype)
+    dv = dv.swapaxes(0, 1).reshape(B, Sk, KVH, hd).astype(v.dtype)
+    return dq, dk, dv
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash(causal, window, prefix_len, q_offset, block_q, block_k, k_limit):
+    meta = (causal, window, prefix_len, q_offset, block_q, block_k, k_limit)
+
+    @jax.custom_vjp
+    def f(q, k, v):
+        return _flash_fwd_impl(q, k, v, *meta)[0]
+
+    def fwd(q, k, v):
+        o, lse = _flash_fwd_impl(q, k, v, *meta)
+        return o, (q, k, v, o, lse)
+
+    def bwd(res, do):
+        q, k, v, o, lse = res
+        return _flash_bwd_impl(q, k, v, o, lse, do, *meta)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+# --------------------------------------------------------------- full pass
+def attn_forward(
+    params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jax.Array] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    prefix_len: int = 0,
+    kv_x: Optional[jax.Array] = None,
+    use_rope: bool = True,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    kv_x: if given, keys/values come from it (cross-attention, no rope/mask).
+    """
+    B, S, D = x.shape
+    src = kv_x if kv_x is not None else x
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"])
+    if "q_norm" in params:
+        q = headwise_rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = headwise_rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    if use_rope and kv_x is None:
+        pos = positions if positions is not None else jnp.arange(S)[None, :]
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    out = chunked_attention(
+        q, k, v, causal=causal and kv_x is None, window=window, prefix_len=prefix_len
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def attn_prefill(
+    params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    cache_len: int,
+    *,
+    window: Optional[int] = None,
+    prefix_len: int = 0,
+) -> tuple[jax.Array, KVCache]:
+    """Causal self-attention over the prompt + build the decode cache.
+
+    Stores the last ``cache_len`` (window or max) roped K/V into a ring cache
+    positioned so that slot index = absolute_pos % cache_len.
+    """
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if "q_norm" in params:
+        q = headwise_rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = headwise_rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    pos = jnp.arange(S)[None, :]
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    out = chunked_attention(q, k, v, causal=True, window=window, prefix_len=prefix_len)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+    cache = kv_cache_init(B, cache_len, cfg)
+    cdt = cache_dtype(cfg)
+    n = min(S, cache_len)
+    tail = jnp.arange(S - n, S)                       # absolute positions kept
+    slots = tail % cache_len                          # ring placement
+    cache = KVCache(
+        k=cache.k.at[:, slots].set(k[:, S - n :].astype(cdt)),
+        v=cache.v.at[:, slots].set(v[:, S - n :].astype(cdt)),
+        slot_pos=cache.slot_pos.at[:, slots].set(tail[None, :].astype(jnp.int32)),
+    )
+    return y, cache
+
+
+def attn_decode(
+    params,
+    x: jax.Array,            # (B, D) — one new token's residual input
+    cache: KVCache,
+    pos: jax.Array,          # (B,) absolute position of the new token
+    cfg: ModelConfig,
+    *,
+    window: Optional[int] = None,
+) -> tuple[jax.Array, KVCache]:
+    """One decode step: rope at pos, ring-write, attend over valid slots."""
+    B, D = x.shape
+    L = cache.cache_len
+    q = jnp.einsum("bd,dhk->bhk", x, params["wq"])
+    k = jnp.einsum("bd,dhk->bhk", x, params["wk"])
+    v = jnp.einsum("bd,dhk->bhk", x, params["wv"])
+    if "q_norm" in params:
+        q = headwise_rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = headwise_rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    k = apply_rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+
+    slot = (pos % L).astype(jnp.int32)                # (B,)
+    b_idx = jnp.arange(B)
+    cdt = cache.k.dtype
+    cache = KVCache(
+        k=cache.k.at[b_idx, slot].set(k.astype(cdt)),
+        v=cache.v.at[b_idx, slot].set(v.astype(cdt)),
+        slot_pos=cache.slot_pos.at[b_idx, slot].set(pos.astype(jnp.int32)),
+    )
+
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, hd)
+    s = jnp.einsum(
+        "bkgh,blkh->bkgl", qg, cache.k.astype(q.dtype),
+        preferred_element_type=jnp.float32,
+    ) * (hd ** -0.5)
+    valid = (cache.slot_pos >= 0) & (cache.slot_pos <= pos[:, None])
+    if window is not None:
+        valid &= cache.slot_pos > (pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgl,blkh->bkgh", p.astype(q.dtype), cache.v.astype(q.dtype))
+    out = out.reshape(B, H, hd)
+    y = jnp.einsum("bhk,hkd->bd", out, params["wo"])
+    return y, cache
+
+
+def cross_attn_cache(params, enc_out: jax.Array):
+    """Precompute cross-attention K/V from encoder output (B, Se, D)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"])
+    return {"k": k, "v": v}
+
+
+def cross_attn_decode(params, x: jax.Array, xcache, cfg: ModelConfig) -> jax.Array:
+    """One-token cross-attention against fixed encoder K/V."""
+    B, D = x.shape
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    G = H // KVH
+    q = jnp.einsum("bd,dhk->bhk", x, params["wq"]).reshape(B, KVH, G, hd)
+    s = jnp.einsum(
+        "bkgh,blkh->bkgl", q, xcache["k"], preferred_element_type=jnp.float32
+    ) * (hd ** -0.5)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgl,blkh->bkgh", p.astype(xcache["v"].dtype), xcache["v"])
+    return jnp.einsum("bhk,hkd->bd", out.reshape(B, H, hd), params["wo"])

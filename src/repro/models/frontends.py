@@ -1,0 +1,27 @@
+"""Modality frontends — STUBS by assignment carve-out.
+
+[audio]/[vlm] architectures specify the transformer backbone only; the mel-
+spectrogram + conv feature extractor (audio) and the SigLIP ViT + projector
+(VLM) are not implemented. ``input_specs`` (launch/shapes.py) provides
+precomputed frame/patch embeddings with these shapes; the helpers here
+generate synthetic embeddings of the same shape for smoke tests/examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import cdtype
+
+
+def audio_frame_embeddings(key, batch: int, cfg: ModelConfig, n_frames: int | None = None):
+    """Stand-in for (mel-spectrogram -> conv encoder) output: (B, T, D)."""
+    T = n_frames or cfg.enc_seq
+    return 0.02 * jax.random.normal(key, (batch, T, cfg.d_model), cdtype(cfg))
+
+
+def vision_patch_embeddings(key, batch: int, cfg: ModelConfig):
+    """Stand-in for (SigLIP -> projector) output: (B, P, D)."""
+    P = cfg.num_prefix_tokens
+    return 0.02 * jax.random.normal(key, (batch, P, cfg.d_model), cdtype(cfg))

@@ -1,0 +1,114 @@
+"""Shared layer primitives: norms, rotary embeddings, gated MLP, embeddings.
+
+Pure-functional: params are plain nested dicts of jnp arrays; every layer is
+``apply(params, x, ...)``. Initializers return the same tree structure so
+``jax.eval_shape`` gives ShapeDtypeStruct trees for the dry-run without ever
+allocating.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------- init utils
+def _normal(key, shape, dtype, scale):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return _normal(key, (d_in, d_out), dtype, scale)
+
+
+# -------------------------------------------------------------------- norms
+def rmsnorm_init(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    """RMSNorm in f32, cast back to input dtype."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def headwise_rmsnorm(scale, x, eps=1e-6):
+    """qk-norm: RMSNorm over the head_dim of (..., H, hd)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (...,S,1,hd/2)
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2 :]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- mlp
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None):
+    d_ff = d_ff if d_ff is not None else cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = cdtype(cfg)
+    return {
+        "w_gate": dense_init(k1, cfg.d_model, d_ff, dt),
+        "w_up": dense_init(k2, cfg.d_model, d_ff, dt),
+        "w_down": dense_init(k3, d_ff, cfg.d_model, dt),
+    }
+
+
+def _act(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+def mlp(params, x, act: str = "silu"):
+    h = _act(act, x @ params["w_gate"]) * (x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# --------------------------------------------------------------- embeddings
+def embedding_init(key, cfg: ModelConfig):
+    dt = cdtype(cfg)
+    out = {"tok": _normal(key, (cfg.vocab_size, cfg.d_model), dt, 0.02)}
+    if not cfg.tie_embeddings:
+        out["head"] = dense_init(jax.random.fold_in(key, 1), cfg.d_model, cfg.vocab_size, dt)
+    return out
+
+
+def embed(params, tokens, cfg: ModelConfig):
+    return params["tok"][tokens]
+
+
+def unembed(params, h, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        logits = h @ params["tok"].T
+    else:
+        logits = h @ params["head"]
+    if cfg.attn_logit_softcap:  # gemma-style final softcap reuse
+        c = cfg.attn_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits

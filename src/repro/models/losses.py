@@ -1,0 +1,106 @@
+"""Vocab-blocked ("flash") cross-entropy with a custom VJP.
+
+The standard LM loss materializes f32 logits (T, V) — for 150k-vocab models
+at 1M tokens that is the single largest train activation (2.5 GiB/device at
+qwen3 train_4k even vocab-sharded). This computes logsumexp + gold logit in
+an online scan over vocab blocks (saving only (h, lse, gold) — O(T) extra),
+and recomputes block logits in the backward:
+
+  dlogits_blk = (softmax_blk - onehot_blk) * dnll
+  dh   += dlogits_blk @ W_blk
+  dW_b  = dlogits_blk^T @ h
+
+Enabled via ``cfg.loss_vocab_block > 0`` (§Perf iteration G). Exactness vs
+the dense loss is tested in tests/test_perf_knobs.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _block_logits(h, w_blk):
+    return jax.lax.dot_general(
+        h, w_blk, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (T, blk)
+
+
+def _fwd_scan(h, w, block):
+    """Online logsumexp + gold gather over vocab blocks. Returns (lse, gold_fn input)."""
+    T, D = h.shape
+    V = w.shape[0]
+    nb = V // block
+    wb = w.reshape(nb, block, D)
+
+    def step(carry, inp):
+        m, s = carry
+        bi, w_blk = inp
+        lg = _block_logits(h, w_blk)                    # (T, blk) f32
+        m_new = jnp.maximum(m, lg.max(axis=-1))
+        s = s * jnp.exp(m - m_new) + jnp.exp(lg - m_new[:, None]).sum(-1)
+        return (m_new, s), None
+
+    m0 = jnp.full((T,), -1e30, jnp.float32)
+    s0 = jnp.zeros((T,), jnp.float32)
+    (m, s), _ = jax.lax.scan(step, (m0, s0), (jnp.arange(nb), wb))
+    return m + jnp.log(jnp.maximum(s, 1e-30))
+
+
+@functools.lru_cache(maxsize=None)
+def _make_blocked_nll(block: int):
+    @jax.custom_vjp
+    def f(h, w, targets):
+        lse = _fwd_scan(h, w, block)
+        gold = _gold(h, w, targets)
+        return lse - gold
+
+    def _gold(h, w, targets):
+        wt = w[targets]                                  # (T, D) gather
+        return jnp.einsum("td,td->t", h.astype(jnp.float32), wt.astype(jnp.float32))
+
+    def fwd(h, w, targets):
+        lse = _fwd_scan(h, w, block)
+        gold = _gold(h, w, targets)
+        return lse - gold, (h, w, targets, lse)
+
+    def bwd(res, dnll):
+        h, w, targets, lse = res
+        T, D = h.shape
+        V = w.shape[0]
+        nb = V // block
+        wb = w.reshape(nb, block, D)
+
+        def step(dh_acc, inp):
+            bi, w_blk = inp
+            lg = _block_logits(h, w_blk)                 # (T, blk)
+            p = jnp.exp(lg - lse[:, None])
+            onehot = (targets[:, None] - bi * block) == jnp.arange(block)[None, :]
+            dl = (p - onehot.astype(jnp.float32)) * dnll[:, None]
+            dh_acc = dh_acc + jax.lax.dot_general(
+                dl, w_blk.astype(jnp.float32), (((1,), (0,)), ((), ()))
+            )
+            dw_blk = jax.lax.dot_general(
+                dl, h.astype(jnp.float32), (((0,), (0,)), ((), ()))
+            )                                            # (blk, D)
+            return dh_acc, dw_blk
+
+        dh, dwb = jax.lax.scan(
+            step, jnp.zeros((T, D), jnp.float32), (jnp.arange(nb), wb)
+        )
+        dw = dwb.reshape(V, D)
+        return dh.astype(h.dtype), dw.astype(w.dtype), None
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def blocked_nll(h: jax.Array, w: jax.Array, targets: jax.Array, block: int) -> jax.Array:
+    """Per-token NLL for logits = h @ w.T, never materializing (T, V).
+
+    h: (T, D); w: (V, D) unembedding rows; targets: (T,) int32 (>=0).
+    V must be padded to a multiple of ``block`` by the caller.
+    """
+    assert w.shape[0] % block == 0, (w.shape, block)
+    return _make_blocked_nll(block)(h, w, targets)

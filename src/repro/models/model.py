@@ -1,0 +1,224 @@
+"""Top-level Model API used by training, serving, and the dry-run.
+
+  init_params(key, cfg)                      -> params pytree
+  forward(params, batch, cfg)                -> (logits, aux)     full-seq
+  loss_fn(params, batch, cfg)                -> (loss, metrics)   train
+  prefill(params, batch, cfg, cache_len)     -> (last_logits, DecodeState)
+  decode_step(params, state, tokens, cfg)    -> (logits, DecodeState)
+
+Batch dict keys (shape-kind dependent):
+  tokens   (B, S) int32              always (decoder text tokens)
+  targets  (B, S) int32              training (-1 = no loss)
+  frames   (B, T_enc, D)             audio enc-dec (stub embeddings)
+  patches  (B, P, D)                 vlm (stub embeddings)
+
+DecodeState carries layer caches + encoder/cross state + positions; it is a
+pure pytree so jit/shard the whole thing.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.models.layers import cdtype, embed, embedding_init, rmsnorm, rmsnorm_init, unembed
+from repro.sharding.ctx import constrain
+
+
+class DecodeState(NamedTuple):
+    caches: Any          # list of per-segment stacked caches
+    pos: jax.Array       # (B,) next absolute position to write
+    last_tok: jax.Array  # (B,) int32 last emitted/fed token
+
+
+def init_params(key, cfg: ModelConfig):
+    k_emb, k_stack, k_enc, k_out = jax.random.split(key, 4)
+    params = {
+        "embed": embedding_init(k_emb, cfg),
+        "stack": T.stack_init(k_stack, cfg, "decoder"),
+        "ln_f": rmsnorm_init(cfg.d_model),
+    }
+    if cfg.is_encdec:
+        params["encoder"] = {
+            "stack": T.stack_init(k_enc, cfg, "encoder"),
+            "ln_f": rmsnorm_init(cfg.d_model),
+        }
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct tree of params — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def _encode(params, frames, cfg: ModelConfig):
+    h, _ = T.forward_hidden(params["encoder"]["stack"], frames, cfg, role="encoder")
+    return rmsnorm(params["encoder"]["ln_f"], h, cfg.norm_eps)
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    """Token (+ prefix) embedding. Returns (h, prefix_len, enc_out)."""
+    h = embed(params["embed"], batch["tokens"], cfg)
+    if cfg.arch_type in ("dense", "vlm", "audio"):  # gemma-style scaling
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    prefix_len = 0
+    enc_out = None
+    if cfg.arch_type == "vlm" and "patches" in batch:
+        h = jnp.concatenate([batch["patches"].astype(h.dtype), h], axis=1)
+        prefix_len = batch["patches"].shape[1]
+    if cfg.is_encdec:
+        enc_out = _encode(params, batch["frames"].astype(h.dtype), cfg)
+    return h, prefix_len, enc_out
+
+
+def forward(params, batch, cfg: ModelConfig, *, shape_window: Optional[int] = None):
+    """Full-sequence logits (training / evaluation)."""
+    h, prefix_len, enc_out = _embed_inputs(params, batch, cfg)
+    h = constrain(h)
+    h, aux = T.forward_hidden(
+        params["stack"], h, cfg, enc_out=enc_out,
+        prefix_len=prefix_len, shape_window=shape_window,
+    )
+    if prefix_len:
+        h = h[:, prefix_len:]
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    logits = unembed(params["embed"], h, cfg)
+    return logits, aux
+
+
+def _pick_vocab_block(V: int, target: int) -> int:
+    """Largest divisor of V that is <= target (blocked CE needs V % blk == 0)."""
+    best = 1
+    d = 1
+    while d * d <= V:
+        if V % d == 0:
+            if d <= target:
+                best = max(best, d)
+            q = V // d
+            if q <= target:
+                best = max(best, q)
+        d += 1
+    return best
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """Causal LM loss (f32 logits) + MoE aux losses. targets -1 = masked.
+
+    cfg.loss_vocab_block > 0 switches to the vocab-blocked flash CE
+    (repro.models.losses) — the (T, V) logit tensor is never materialized.
+    """
+    targets = batch["targets"]
+    mask = (targets >= 0).astype(jnp.float32)
+    t = jnp.maximum(targets, 0)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    if cfg.loss_vocab_block and cfg.tie_embeddings and not cfg.attn_logit_softcap:
+        from repro.models.losses import blocked_nll
+
+        h, prefix_len, enc_out = _embed_inputs(params, batch, cfg)
+        h = constrain(h)
+        h, aux = T.forward_hidden(params["stack"], h, cfg, enc_out=enc_out,
+                                  prefix_len=prefix_len)
+        if prefix_len:
+            h = h[:, prefix_len:]
+        h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+        B, S, D = h.shape
+        blk = _pick_vocab_block(cfg.vocab_size, cfg.loss_vocab_block)
+        nll = blocked_nll(
+            h.reshape(B * S, D), params["embed"]["tok"], t.reshape(-1), blk
+        ).reshape(B, S)
+        nll = nll * mask
+        loss = nll.sum() / denom
+        metrics = {"nll": loss, "tokens": denom}
+        if cfg.is_moe:
+            loss = loss + cfg.router_aux_coef * aux["lb_loss"] + 1e-3 * aux["z_loss"]
+            metrics.update({k: aux[k] for k in ("lb_loss", "z_loss", "drop_frac")})
+        metrics["loss"] = loss
+        return loss, metrics
+
+    logits, aux = forward(params, batch, cfg)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    loss = nll.sum() / denom
+    metrics = {"nll": loss, "tokens": denom}
+    if cfg.is_moe:
+        loss = loss + cfg.router_aux_coef * aux["lb_loss"] + 1e-3 * aux["z_loss"]
+        metrics.update({k: aux[k] for k in ("lb_loss", "z_loss", "drop_frac")})
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# -------------------------------------------------------------------- serve
+def prefill(params, batch, cfg: ModelConfig, cache_len: int,
+            *, shape_window: Optional[int] = None,
+            batch_block: Optional[int] = None):
+    """Process the prompt; build decode caches; return last-position logits.
+
+    batch_block: process the request batch in slices of this size
+    (lax.scan), bounding live full-sequence activations to one slice —
+    long-prompt prefill (32k) of the big dense archs only fits HBM this way
+    (EXPERIMENTS.md §Perf E). Output caches are identical.
+    """
+    B = batch["tokens"].shape[0]
+    if batch_block and B > batch_block and B % batch_block == 0:
+        nb = B // batch_block
+        sliced = jax.tree.map(
+            lambda x: x.reshape(nb, batch_block, *x.shape[1:]), batch
+        )
+
+        def body(_, mb):
+            return None, prefill(params, mb, cfg, cache_len,
+                                 shape_window=shape_window)
+
+        _, (lgs, states) = jax.lax.scan(body, None, sliced)
+        logits = lgs.reshape(B, *lgs.shape[2:])
+
+        def merge(leaf):
+            if leaf.ndim >= 3:        # stacked cache leaf (nb, L, bb, ...)
+                return jnp.moveaxis(leaf, 0, 1).reshape(
+                    leaf.shape[1], B, *leaf.shape[3:]
+                )
+            return leaf.reshape(B)    # pos / last_tok (nb, bb)
+
+        state = jax.tree.map(merge, states)
+        return logits, state
+
+    h, prefix_len, enc_out = _embed_inputs(params, batch, cfg)
+    h = constrain(h)
+    h, caches = T.prefill_hidden(
+        params["stack"], h, cfg, cache_len=cache_len, enc_out=enc_out,
+        prefix_len=prefix_len, shape_window=shape_window,
+    )
+    hl = rmsnorm(params["ln_f"], h[:, -1], cfg.norm_eps)
+    logits = unembed(params["embed"], hl[:, None], cfg)[:, 0]
+    B = batch["tokens"].shape[0]
+    pos0 = jnp.full((B,), batch["tokens"].shape[1] + prefix_len, jnp.int32)
+    state = DecodeState(
+        caches=caches, pos=pos0, last_tok=batch["tokens"][:, -1].astype(jnp.int32)
+    )
+    return logits, state
+
+
+def decode_step(params, state: DecodeState, tokens, cfg: ModelConfig,
+                *, shape_window: Optional[int] = None):
+    """One decode step for the whole batch. tokens: (B,) int32."""
+    h = embed(params["embed"], tokens[:, None], cfg)[:, 0]
+    if cfg.arch_type in ("dense", "vlm", "audio"):
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    h, caches = T.decode_hidden(
+        params["stack"], h, state.caches, state.pos, cfg, shape_window=shape_window
+    )
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    logits = unembed(params["embed"], h[:, None], cfg)[:, 0]
+    return logits, DecodeState(caches=caches, pos=state.pos + 1, last_tok=tokens)
+
+
+def decode_state_shape(params_or_abstract, batch_spec, cfg: ModelConfig, cache_len: int):
+    """eval_shape of prefill's DecodeState (dry-run serve_step inputs)."""
+    return jax.eval_shape(
+        lambda p, b: prefill(p, b, cfg, cache_len)[1], params_or_abstract, batch_spec
+    )

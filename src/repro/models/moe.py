@@ -1,0 +1,144 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-bounded gather dispatch.
+
+Dispatch strategy (gather/scatter, XLA-native):
+  1. router logits (T, E) -> top-k experts + softmax-renormalized weights.
+  2. position_in_expert via cumsum over the one-hot assignment matrix;
+     slots beyond capacity C = ceil(top_k*T/E * capacity_factor) are dropped
+     (token keeps its other assignments — GShard-style capacity dropping).
+  3. an (E, C) index table gathers tokens into per-expert buffers,
+     (E, C, D) @ (E, D, F) batched matmuls run the experts,
+     scatter-add puts weighted outputs back into (T, D).
+
+This is sharding-friendly: the expert dimension E shards over the `model`
+mesh axis (expert parallelism, 64/16 = 4 experts per chip) and T over
+`data`; the gather/scatter become all-to-all-ish collectives inserted by
+SPMD. The shard_map a2a variant is the §Perf beyond-paper optimization.
+
+DeepSeekMoE extras: ``n_shared_experts`` always-on experts whose output is
+added to the routed output; ``first_k_dense`` handled in transformer.py.
+
+Aux losses: switch-style load-balance loss (mean over experts of
+fraction_dispatched * mean_router_prob * E) and router z-loss.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _act, cdtype, dense_init, mlp, mlp_init
+from repro.sharding.ctx import constrain_moe
+
+
+def moe_init(key, cfg: ModelConfig):
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    dt = cdtype(cfg)
+    p = {
+        "router": dense_init(ks[0], D, E, jnp.float32),  # router kept in f32
+        "w_gate": (D ** -0.5 * jax.random.normal(ks[1], (E, D, F), jnp.float32)).astype(dt),
+        "w_up": (D ** -0.5 * jax.random.normal(ks[2], (E, D, F), jnp.float32)).astype(dt),
+        "w_down": (F ** -0.5 * jax.random.normal(ks[3], (E, F, D), jnp.float32)).astype(dt),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], cfg, d_ff=cfg.n_shared_experts * F)
+    return p
+
+
+def expert_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = math.ceil(cfg.top_k * n_tokens / cfg.n_experts * cfg.capacity_factor)
+    # pad to a multiple of 8 lanes and keep >= top_k for tiny smoke shapes
+    return max(int(math.ceil(c / 8) * 8), cfg.top_k)
+
+
+def moe_ffn(params, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """x: (..., D) -> (..., D), plus aux metrics {lb_loss, z_loss, drop_frac}.
+
+    Long sequences (prefill_32k: ~1M tokens) are dispatched in blocks of
+    cfg.moe_block tokens (lax.scan): capacity C scales with the *block*, so
+    the (E,C,D) gather buffers stay bounded instead of growing with T —
+    this is what makes MoE prefill fit HBM (EXPERIMENTS.md §Perf D).
+    """
+    lead = x.shape[:-1]
+    D = x.shape[-1]
+    T = math.prod(lead) if lead else 1
+    xt = x.reshape(T, D)
+
+    blk = cfg.moe_block
+    if T > blk and T % blk == 0:
+        xb = xt.reshape(T // blk, blk, D)
+
+        def body(_, xs):
+            y, aux = _moe_block(params, xs, cfg)
+            return None, (y, aux)
+
+        _, (yb, auxb) = jax.lax.scan(body, None, xb)
+        y = yb.reshape(*lead, D)
+        aux = jax.tree.map(lambda a: jnp.mean(a, axis=0), auxb)
+        return y, aux
+    y, aux = _moe_block(params, xt, cfg)
+    return y.reshape(*lead, D), aux
+
+
+def _moe_block(params, xt: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """Dispatch + expert compute + combine for one (T, D) token block."""
+    T, D = xt.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = expert_capacity(T, cfg)
+
+    logits = xt.astype(jnp.float32) @ params["router"]          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                      # (T, K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)      # renormalize
+
+    # --- capacity assignment ------------------------------------------------
+    flat_e = top_e.reshape(-1)                                   # (T*K,) expert id
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)          # (T*K, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) * onehot - 1           # (T*K, E)
+    pos = jnp.max(pos_in_e, axis=-1)                             # (T*K,) slot or -1
+    keep = (pos >= 0) & (pos < C)
+    tok_id = jnp.repeat(jnp.arange(T), K)
+
+    # (E, C) gather table; dropped slots point at token 0 but are masked out.
+    slot_e = jnp.where(keep, flat_e, 0)
+    slot_c = jnp.where(keep, pos, C - 1)
+    table = jnp.full((E, C), 0, jnp.int32).at[slot_e, slot_c].set(
+        jnp.where(keep, tok_id, 0).astype(jnp.int32), mode="drop"
+    )
+    table_valid = jnp.zeros((E, C), jnp.bool_).at[slot_e, slot_c].set(keep, mode="drop")
+
+    # --- expert compute -----------------------------------------------------
+    xe = xt[table]                                               # (E, C, D)
+    xe = constrain_moe(jnp.where(table_valid[..., None], xe, 0))
+    h = _act(cfg.act, jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, params["w_up"]
+    )
+    h = constrain_moe(h)
+    ye = constrain_moe(jnp.einsum("ecf,efd->ecd", h, params["w_down"]))  # (E, C, D)
+
+    # --- combine ------------------------------------------------------------
+    weight = jnp.where(keep, top_p.reshape(-1), 0.0)              # (T*K,)
+    slot_w = jnp.zeros((E, C), jnp.float32).at[slot_e, slot_c].set(weight, mode="drop")
+    y = jnp.zeros((T, D), jnp.float32).at[table.reshape(-1)].add(
+        (ye * slot_w[..., None]).reshape(E * C, D).astype(jnp.float32)
+    )
+    y = y.astype(xt.dtype)
+
+    if cfg.n_shared_experts:
+        y = y + mlp(params["shared"], xt, cfg.act)
+
+    # --- aux losses ---------------------------------------------------------
+    frac_dispatch = jnp.mean(
+        jax.nn.one_hot(top_e, E, dtype=jnp.float32).sum(1), axis=0
+    ) / K                                                         # (E,)
+    mean_prob = jnp.mean(probs, axis=0)
+    lb_loss = E * jnp.sum(frac_dispatch * mean_prob)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = {
+        "lb_loss": lb_loss,
+        "z_loss": z_loss,
+        "drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return y, aux

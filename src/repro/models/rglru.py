@@ -1,0 +1,124 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: x-branch = Conv1D(width 4) -> RG-LRU ; y-branch = GeLU(linear).
+Output = linear_out(x_branch * y_branch). The RG-LRU recurrence:
+
+    r_t = sigmoid(W_a x_t + b_a)        (recurrence gate, block-diagonal W)
+    i_t = sigmoid(W_x x_t + b_x)        (input gate)
+    a_t = a^(c * r_t), a = sigmoid(lam) (per-channel learnable decay, c=8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Prefill uses jax.lax.associative_scan over (log a_t, b_t) pairs — the scan
+maps onto TPU's parallel-prefix pattern rather than a sequential GPU kernel
+(hardware adaptation; see DESIGN.md). Decode is the O(R) recurrence.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import cdtype, dense_init
+
+_C = 8.0  # Griffin's fixed temperature on the recurrence gate
+
+
+class RecState(NamedTuple):
+    conv: jax.Array  # (B, W-1, R)
+    h: jax.Array     # (B, R) f32
+
+
+def rglru_init(key, cfg: ModelConfig):
+    D, R, W, nb = cfg.d_model, cfg.lru_width_, cfg.conv_width, cfg.lru_heads
+    ks = jax.random.split(key, 6)
+    dt = cdtype(cfg)
+    bs = R // nb
+    return {
+        "in_x": dense_init(ks[0], D, R, dt),
+        "in_y": dense_init(ks[1], D, R, dt),
+        "conv_w": (0.1 * jax.random.normal(ks[2], (W, R), jnp.float32)).astype(dt),
+        "conv_b": jnp.zeros((R,), dt),
+        # block-diagonal gate weights (nb blocks of bs x bs), f32
+        "w_a": bs ** -0.5 * jax.random.normal(ks[3], (nb, bs, bs), jnp.float32),
+        "b_a": jnp.zeros((R,), jnp.float32),
+        "w_x": bs ** -0.5 * jax.random.normal(ks[4], (nb, bs, bs), jnp.float32),
+        "b_x": jnp.zeros((R,), jnp.float32),
+        # lambda init so a = sigmoid(lam) in (0.9, 0.999)
+        "lam": jnp.linspace(2.2, 6.9, R),
+        "out": dense_init(ks[5], R, D, dt),
+    }
+
+
+def _block_diag(x, w, b):
+    """x: (..., R) -> block-diagonal linear with (nb, bs, bs) weights."""
+    nb, bs, _ = w.shape
+    xs = x.reshape(*x.shape[:-1], nb, bs).astype(jnp.float32)
+    y = jnp.einsum("...ni,nij->...nj", xs, w)
+    return y.reshape(*x.shape[:-1], nb * bs) + b
+
+
+def _gates(params, x):
+    """Returns (log_a, gated_input) both f32, shapes (..., R)."""
+    r = jax.nn.sigmoid(_block_diag(x, params["w_a"], params["b_a"]))
+    i = jax.nn.sigmoid(_block_diag(x, params["w_x"], params["b_x"]))
+    log_a = -_C * r * jax.nn.softplus(-params["lam"])  # c*r*log(sigmoid(lam))
+    a2 = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * x.astype(jnp.float32))
+    return log_a, gated
+
+
+def _conv(u, w, b, state_conv=None):
+    W = w.shape[0]
+    if state_conv is not None:
+        u_ext = jnp.concatenate([state_conv.astype(u.dtype), u], axis=1)
+    else:
+        u_ext = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(u_ext[:, i : i + u.shape[1]] * w[i] for i in range(W))
+    return out + b, u_ext[:, -(W - 1) :]
+
+
+def rglru_forward_with_state(params, h, cfg: ModelConfig, init: RecState | None = None):
+    """Full-sequence Griffin recurrent block. h: (B,S,D)."""
+    B, S, D = h.shape
+    x = h @ params["in_x"]
+    y_gate = jax.nn.gelu(h @ params["in_y"], approximate=True)
+    x, new_conv = _conv(x, params["conv_w"], params["conv_b"], init.conv if init else None)
+    log_a, gated = _gates(params, x)
+
+    # h_t = exp(log_a_t) h_{t-1} + gated_t  — associative scan over time.
+    def combine(c1, c2):
+        (la1, b1), (la2, b2) = c1, c2
+        return la1 + la2, b1 * jnp.exp(la2) + b2
+
+    h0 = init.h if init is not None else jnp.zeros((B, x.shape[-1]), jnp.float32)
+    # fold initial state into the first element
+    gated = gated.at[:, 0].add(h0 * jnp.exp(log_a[:, 0]))
+    la_cum, hs = jax.lax.associative_scan(combine, (log_a, gated), axis=1)
+    out = (hs.astype(h.dtype) * y_gate) @ params["out"]
+    return out, RecState(conv=new_conv, h=hs[:, -1])
+
+
+def rglru_forward(params, h, cfg: ModelConfig):
+    return rglru_forward_with_state(params, h, cfg)[0]
+
+
+def rec_state_init(batch: int, cfg: ModelConfig) -> RecState:
+    R, W = cfg.lru_width_, cfg.conv_width
+    return RecState(
+        conv=jnp.zeros((batch, W - 1, R), cdtype(cfg)),
+        h=jnp.zeros((batch, R), jnp.float32),
+    )
+
+
+def rglru_decode(params, h: jax.Array, state: RecState, cfg: ModelConfig):
+    """One-token step. h: (B,D)."""
+    x = h @ params["in_x"]                                       # (B,R)
+    y_gate = jax.nn.gelu(h @ params["in_y"], approximate=True)
+    win = jnp.concatenate([state.conv, x[:, None]], axis=1)      # (B,W,R)
+    x = jnp.einsum("bwr,wr->br", win, params["conv_w"]) + params["conv_b"]
+    log_a, gated = _gates(params, x)
+    h_new = jnp.exp(log_a) * state.h + gated
+    out = (h_new.astype(h.dtype) * y_gate) @ params["out"]
+    return out, RecState(conv=win[:, 1:], h=h_new)

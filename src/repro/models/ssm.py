@@ -1,0 +1,209 @@
+"""Mamba-2 block: SSD (state-space duality) chunked scan + O(1) decode.
+
+Block layout follows arXiv:2405.21060 (single group, G=1):
+  in_proj: D -> [z (d_inner), x (d_inner), B (N), C (N), dt (H)]
+  causal conv1d (width W) over the [x, B, C] channels,
+  SSD: h_{t} = exp(dt_t * A_h) h_{t-1} + dt_t * x_t ⊗ B_t ;  y_t = C_t · h_t
+  y = y + D_h * x ; gated RMSNorm by z; out_proj: d_inner -> D.
+
+Train/prefill uses the chunked SSD algorithm (lax.scan over chunks of length
+Q): intra-chunk quadratic term (the "attention-like" matmul the MXU likes)
+plus inter-chunk state passing — this is the TPU adaptation of the paper's
+GPU kernel (chunk sizes picked for MXU/VMEM, not warps). The Pallas kernel
+in repro.kernels.ssd_scan implements the same math; this module is the
+reference/XLA path.
+
+Decode carries SSMState = (conv ring buffer, SSD state (B, H, P, N)).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import cdtype, dense_init
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # (B, W-1, conv_ch) — last W-1 pre-conv inputs
+    ssd: jax.Array    # (B, H, P, N) f32 — recurrent state
+
+
+def ssm_init(key, cfg: ModelConfig):
+    D, di, N, H, W = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.conv_width
+    conv_ch = di + 2 * N
+    ks = jax.random.split(key, 4)
+    dt = cdtype(cfg)
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * di + 2 * N + H, dt),
+        "conv_w": (0.1 * jax.random.normal(ks[1], (W, conv_ch), jnp.float32)).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),            # f32, A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[3], di, D, dt),
+    }
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z, x, Bm, Cm, dt = jnp.split(proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    return z, x, Bm, Cm, dt
+
+
+def _gated_norm(scale, x, z, eps):
+    xf = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def _causal_conv(u, w, b):
+    """u: (B,S,ch), w: (W,ch) depthwise causal conv, left-padded."""
+    W = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + u.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P), dt: (B,S,H) (post-softplus), A: (H,) negative,
+    Bm/Cm: (B,S,N). Returns y (B,S,H,P), final state (B,H,P,N) f32.
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    S_real = S
+    pad = (-S) % chunk
+    if pad:
+        # dt=0 on padded steps => decay exp(0)=1 and zero contribution, so the
+        # final state is exactly the state after S_real steps.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // chunk
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+
+    dA = dtc * A  # (B,nc,Q,H) negative increments
+    LA = jnp.cumsum(dA, axis=2)  # within-chunk cumulative log-decay
+
+    def chunk_step(state, inp):
+        xq, dtq, Bq, Cq, dAq, LAq = inp  # leading dim B (scanned over nc)
+        # intra-chunk: M[q,s] = exp(LA[q]-LA[s]) for s<=q. Mask the EXPONENT
+        # (not the exp) — for s>q the diff is positive and can overflow, and
+        # grad-of-where(exp(inf)) is inf*0 = NaN through the backward pass.
+        diff = LAq[:, :, None, :] - LAq[:, None, :, :]          # (B,Q,Q,H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+        diff = jnp.where(mask[None, :, :, None], diff, -1e9)
+        M = jnp.exp(diff)
+        G = jnp.einsum("bqn,bsn->bqs", Cq, Bq)                   # (B,Q,Q)
+        W = G[..., None] * M * dtq[:, None, :, :]                # (B,Q,Q,H)
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", W.astype(xq.dtype), xq)
+        # inter-chunk: contribution of carried state
+        decay_q = jnp.exp(LAq)                                   # (B,Q,H)
+        y_inter = jnp.einsum(
+            "bqn,bhpn,bqh->bqhp", Cq.astype(jnp.float32), state, decay_q
+        ).astype(xq.dtype)
+        # state update: S' = exp(sum dA) S + sum_s exp(LA[Q]-LA[s]) dt_s x_s B_s^T
+        tail = jnp.exp(LAq[:, -1:, :] - LAq)                     # (B,Q,H)
+        contrib = jnp.einsum(
+            "bqh,bqhp,bqn->bhpn",
+            (tail * dtq).astype(jnp.float32),
+            xq.astype(jnp.float32),
+            Bq.astype(jnp.float32),
+        )
+        state = jnp.exp(dAq.sum(1))[:, :, None, None] * state + contrib
+        return state, y_intra + y_inter
+
+    init = (
+        init_state
+        if init_state is not None
+        else jnp.zeros((Bsz, H, P, N), jnp.float32)
+    )
+    swap = lambda t: jnp.swapaxes(t, 0, 1)  # scan over chunks
+    final, yc = jax.lax.scan(
+        chunk_step, init, (swap(xc), swap(dtc), swap(Bc), swap(Cc), swap(dA), swap(LA))
+    )
+    y = jnp.swapaxes(yc, 0, 1).reshape(Bsz, S, H, P)
+    if pad:
+        y = y[:, :S_real]
+    return y, final
+
+
+def ssm_forward(params, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence Mamba-2 block (train/prefill). h: (B,S,D)."""
+    y, _ = ssm_forward_with_state(params, h, cfg)
+    return y
+
+
+def ssm_forward_with_state(params, h, cfg: ModelConfig, init: SSMState | None = None):
+    B, S, D = h.shape
+    di, N, H, P, W = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_headdim, cfg.conv_width
+    proj = h @ params["in_proj"]
+    z, x, Bm, Cm, dtr = _split_proj(proj, cfg)
+    u = jnp.concatenate([x, Bm, Cm], axis=-1)
+    if init is not None:
+        u_ext = jnp.concatenate([init.conv.astype(u.dtype), u], axis=1)
+        conv = _causal_conv(u_ext, params["conv_w"], params["conv_b"])[:, W - 1 :]
+    else:
+        conv = _causal_conv(u, params["conv_w"], params["conv_b"])
+    x, Bm, Cm = conv[..., :di], conv[..., di : di + N], conv[..., di + N :]
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"])
+    xh = x.reshape(B, S, H, P)
+    y, ssd_state = ssd_chunked(
+        xh, dt, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32), cfg.ssm_chunk,
+        init.ssd if init is not None else None,
+    )
+    y = (y.astype(jnp.float32) + params["D"][None, None, :, None] * xh.astype(jnp.float32))
+    y = y.reshape(B, S, di).astype(h.dtype)
+    y = _gated_norm(params["norm"], y, z, cfg.norm_eps)
+    out = (y @ params["out_proj"]).astype(h.dtype)
+    new_conv = (
+        jnp.concatenate([init.conv.astype(u.dtype), u], axis=1)[:, -(W - 1) :]
+        if init is not None
+        else u[:, -(W - 1) :] if S >= W - 1
+        else jnp.pad(u, ((0, 0), (W - 1 - S, 0), (0, 0)))
+    )
+    return out, SSMState(conv=new_conv, ssd=ssd_state)
+
+
+def ssm_state_init(batch: int, cfg: ModelConfig) -> SSMState:
+    di, N, H, P, W = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_headdim, cfg.conv_width
+    conv_ch = di + 2 * N
+    return SSMState(
+        conv=jnp.zeros((batch, W - 1, conv_ch), cdtype(cfg)),
+        ssd=jnp.zeros((batch, H, P, N), jnp.float32),
+    )
+
+
+def ssm_decode(params, h: jax.Array, state: SSMState, cfg: ModelConfig):
+    """One-token recurrent step. h: (B,D) -> (B,D), updated state. O(H*P*N)."""
+    B, D = h.shape
+    di, N, H, P, W = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_headdim, cfg.conv_width
+    proj = h @ params["in_proj"]
+    z, x, Bm, Cm, dtr = _split_proj(proj, cfg)
+    u = jnp.concatenate([x, Bm, Cm], axis=-1)                     # (B, conv_ch)
+    win = jnp.concatenate([state.conv, u[:, None]], axis=1)       # (B, W, ch)
+    conv = jax.nn.silu(jnp.einsum("bwc,wc->bc", win, params["conv_w"]) + params["conv_b"])
+    x, Bm, Cm = conv[..., :di], conv[..., di : di + N], conv[..., di + N :]
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    xh = x.reshape(B, H, P).astype(jnp.float32)
+    decay = jnp.exp(dt * A)                                        # (B,H)
+    contrib = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bm.astype(jnp.float32))
+    ssd = decay[:, :, None, None] * state.ssd + contrib
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), ssd)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(B, di).astype(h.dtype)
+    y = _gated_norm(params["norm"], y, z, cfg.norm_eps)
+    out = (y @ params["out_proj"]).astype(h.dtype)
+    return out, SSMState(conv=win[:, 1:], ssd=ssd)

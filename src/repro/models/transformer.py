@@ -1,0 +1,359 @@
+"""Stack builder: composes blocks into layer-scanned segments.
+
+A model is a list of SEGMENTS. Each segment is (kind, n) with parameters
+stacked along a leading layer axis, executed with jax.lax.scan (+ optional
+per-layer remat). Heterogeneous architectures (hybrid Griffin pattern,
+DeepSeek's dense-first-layer) are expressed as multiple segments; the
+hybrid pattern itself becomes one "group" segment whose body runs the
+pattern (rec, rec, attn) so the scan stays homogeneous.
+
+Segment kinds:
+  attn       self-attention + dense MLP           (dense, vlm, enc w/ causal=False)
+  attn_moe   self-attention + MoE FFN             (olmoe, deepseek routed layers)
+  ssm        Mamba-2 SSD block (no FFN)           (mamba2)
+  group      Griffin pattern: rec, rec, local-attn each + MLP (recurrentgemma)
+  rec        single RG-LRU block + MLP            (hybrid remainder layers)
+  dec        self-attn + cross-attn + MLP         (audio decoder)
+
+Decode caches mirror the segment list; each segment's cache is stacked along
+the same leading axis and scanned together with its params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import rglru as R
+from repro.models import ssm as S
+from repro.models.layers import mlp, mlp_init, rmsnorm, rmsnorm_init
+from repro.sharding.ctx import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str
+    n: int
+
+
+def plan_segments(cfg: ModelConfig, role: str = "decoder") -> tuple[Segment, ...]:
+    """Derive the segment plan for a config. role: decoder | encoder."""
+    if role == "encoder":
+        return (Segment("attn", cfg.n_enc_layers),)
+    if cfg.is_encdec:
+        return (Segment("dec", cfg.n_layers),)
+    if cfg.is_hybrid:
+        plen = len(cfg.block_pattern)
+        n_groups, rem = divmod(cfg.n_layers, plen)
+        segs = []
+        if n_groups:
+            segs.append(Segment("group", n_groups))
+        for i in range(rem):  # trailing partial pattern, one segment per layer
+            kind = cfg.block_pattern[i]
+            segs.append(Segment("rec" if kind == "rec" else "attn", 1))
+        return tuple(segs)
+    if cfg.is_ssm:
+        return (Segment("ssm", cfg.n_layers),)
+    if cfg.is_moe:
+        segs = []
+        if cfg.first_k_dense:
+            segs.append(Segment("attn", cfg.first_k_dense))
+        segs.append(Segment("attn_moe", cfg.n_layers - cfg.first_k_dense))
+        return tuple(segs)
+    return (Segment("attn", cfg.n_layers),)
+
+
+# ----------------------------------------------------------------- init
+def _block_init(kind: str, key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    if kind == "attn":
+        return {
+            "ln1": rmsnorm_init(cfg.d_model),
+            "attn": A.attn_init(ks[0], cfg),
+            "ln2": rmsnorm_init(cfg.d_model),
+            "mlp": mlp_init(ks[1], cfg),
+        }
+    if kind == "attn_moe":
+        return {
+            "ln1": rmsnorm_init(cfg.d_model),
+            "attn": A.attn_init(ks[0], cfg),
+            "ln2": rmsnorm_init(cfg.d_model),
+            "moe": MOE.moe_init(ks[1], cfg),
+        }
+    if kind == "ssm":
+        return {"ln1": rmsnorm_init(cfg.d_model), "ssm": S.ssm_init(ks[0], cfg)}
+    if kind == "rec":
+        return {
+            "ln1": rmsnorm_init(cfg.d_model),
+            "rec": R.rglru_init(ks[0], cfg),
+            "ln2": rmsnorm_init(cfg.d_model),
+            "mlp": mlp_init(ks[1], cfg),
+        }
+    if kind == "group":
+        out = {}
+        for i, bk in enumerate(cfg.block_pattern):
+            sub = "rec" if bk == "rec" else "attn"
+            out[f"b{i}_{sub}"] = _block_init(sub, ks[i], cfg)
+        return out
+    if kind == "dec":
+        return {
+            "ln1": rmsnorm_init(cfg.d_model),
+            "attn": A.attn_init(ks[0], cfg),
+            "lnx": rmsnorm_init(cfg.d_model),
+            "xattn": A.attn_init(ks[1], cfg, cross=True),
+            "ln2": rmsnorm_init(cfg.d_model),
+            "mlp": mlp_init(ks[2], cfg),
+        }
+    raise ValueError(kind)
+
+
+def stack_init(key, cfg: ModelConfig, role: str = "decoder"):
+    """Returns list of stacked per-segment param pytrees."""
+    segs = plan_segments(cfg, role)
+    out = []
+    for si, seg in enumerate(segs):
+        keys = jax.random.split(jax.random.fold_in(key, si), seg.n)
+        out.append(jax.vmap(lambda k, kind=seg.kind: _block_init(kind, k, cfg))(keys))
+    return out
+
+
+# --------------------------------------------------------------- full pass
+def _ffn(p, h, cfg: ModelConfig):
+    if "moe" in p:
+        y, aux = MOE.moe_ffn(p["moe"], rmsnorm(p["ln2"], h, cfg.norm_eps), cfg)
+        return h + y, aux
+    y = mlp(p["mlp"], rmsnorm(p["ln2"], h, cfg.norm_eps), cfg.act)
+    return h + y, None
+
+
+def _window_for(kind: str, cfg: ModelConfig, shape_window: Optional[int]) -> Optional[int]:
+    """Effective attention window: hybrids always use their local window;
+    dense archs use shape_window (set for long_500k's sliding variant)."""
+    if cfg.is_hybrid:
+        return cfg.local_window
+    return shape_window
+
+
+def _block_forward(kind, p, h, cfg: ModelConfig, *, causal, window, prefix_len, enc_out):
+    aux = None
+    if kind in ("attn", "attn_moe"):
+        a = A.attn_forward(
+            p["attn"], rmsnorm(p["ln1"], h, cfg.norm_eps), cfg,
+            causal=causal, window=window, prefix_len=prefix_len,
+        )
+        h, aux = _ffn(p, h + a, cfg)
+    elif kind == "ssm":
+        h = h + S.ssm_forward(p["ssm"], rmsnorm(p["ln1"], h, cfg.norm_eps), cfg)
+    elif kind == "rec":
+        a = R.rglru_forward(p["rec"], rmsnorm(p["ln1"], h, cfg.norm_eps), cfg)
+        h, aux = _ffn(p, h + a, cfg)
+    elif kind == "group":
+        auxes = []
+        for i, bk in enumerate(cfg.block_pattern):
+            sub = "rec" if bk == "rec" else "attn"
+            h, a2 = _group_sub_forward(
+                sub, p[f"b{i}_{sub}"], h, cfg, causal=causal,
+                window=cfg.local_window, prefix_len=prefix_len,
+            )
+            if a2 is not None:
+                auxes.append(a2)
+        aux = auxes[0] if auxes else None
+    elif kind == "dec":
+        a = A.attn_forward(
+            p["attn"], rmsnorm(p["ln1"], h, cfg.norm_eps), cfg,
+            causal=True, window=window,
+        )
+        h = h + a
+        x = A.attn_forward(p["xattn"], rmsnorm(p["lnx"], h, cfg.norm_eps), cfg, kv_x=enc_out)
+        h, aux = _ffn(p, h + x, cfg)
+    else:
+        raise ValueError(kind)
+    return constrain(h), aux
+
+
+def _group_sub_forward(sub, p, h, cfg, *, causal, window, prefix_len):
+    if sub == "rec":
+        a = R.rglru_forward(p["rec"], rmsnorm(p["ln1"], h, cfg.norm_eps), cfg)
+    else:
+        a = A.attn_forward(
+            p["attn"], rmsnorm(p["ln1"], h, cfg.norm_eps), cfg,
+            causal=causal, window=window, prefix_len=prefix_len,
+        )
+    return _ffn(p, h + a, cfg)
+
+
+def forward_hidden(
+    stack,
+    h: jax.Array,
+    cfg: ModelConfig,
+    *,
+    role: str = "decoder",
+    enc_out: Optional[jax.Array] = None,
+    prefix_len: int = 0,
+    shape_window: Optional[int] = None,
+) -> tuple[jax.Array, dict]:
+    """Run the full stack over (B, S, D). Returns (h, aux_losses)."""
+    segs = plan_segments(cfg, role)
+    causal = role != "encoder"
+    aux_acc = {"lb_loss": 0.0, "z_loss": 0.0, "drop_frac": 0.0}
+    n_moe = 0
+    for seg, params in zip(segs, stack):
+        window = _window_for(seg.kind, cfg, shape_window)
+
+        def body(carry, p, kind=seg.kind, window=window):
+            hh, acc = carry
+            hh, aux = _block_forward(
+                kind, p, hh, cfg, causal=causal, window=window,
+                prefix_len=prefix_len, enc_out=enc_out,
+            )
+            if aux is not None:
+                acc = {
+                    "lb_loss": acc["lb_loss"] + aux["lb_loss"],
+                    "z_loss": acc["z_loss"] + aux["z_loss"],
+                    "drop_frac": acc["drop_frac"] + aux["drop_frac"],
+                }
+            return (hh, acc), None
+
+        if cfg.remat:
+            if cfg.remat_policy == "dots":
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                )
+            else:
+                body = jax.checkpoint(body)
+        (h, aux_acc), _ = jax.lax.scan(body, (h, aux_acc), params)
+        if seg.kind in ("attn_moe",) or (seg.kind == "group" and cfg.is_moe):
+            n_moe += seg.n
+    if n_moe:
+        aux_acc = {k: v / n_moe for k, v in aux_acc.items()}
+    return h, aux_acc
+
+
+# ------------------------------------------------------------------ prefill
+def _block_prefill(kind, p, h, cfg: ModelConfig, *, cache_len, window, prefix_len, enc_out):
+    """Returns (h, cache) for one layer."""
+    if kind in ("attn", "attn_moe"):
+        a, kv = A.attn_prefill(
+            p["attn"], rmsnorm(p["ln1"], h, cfg.norm_eps), cfg, cache_len,
+            window=window, prefix_len=prefix_len,
+        )
+        h, _ = _ffn(p, h + a, cfg)
+        return constrain(h), kv
+    if kind == "ssm":
+        y, st = S.ssm_forward_with_state(p["ssm"], rmsnorm(p["ln1"], h, cfg.norm_eps), cfg)
+        return constrain(h + y), st
+    if kind == "rec":
+        a, st = R.rglru_forward_with_state(p["rec"], rmsnorm(p["ln1"], h, cfg.norm_eps), cfg)
+        h, _ = _ffn(p, h + a, cfg)
+        return constrain(h), st
+    if kind == "group":
+        caches = {}
+        for i, bk in enumerate(cfg.block_pattern):
+            sub = "rec" if bk == "rec" else "attn"
+            pp = p[f"b{i}_{sub}"]
+            if sub == "rec":
+                a, st = R.rglru_forward_with_state(
+                    pp["rec"], rmsnorm(pp["ln1"], h, cfg.norm_eps), cfg
+                )
+                caches[f"b{i}"] = st
+            else:
+                a, st = A.attn_prefill(
+                    pp["attn"], rmsnorm(pp["ln1"], h, cfg.norm_eps), cfg,
+                    min(cache_len, cfg.local_window), window=cfg.local_window,
+                )
+                caches[f"b{i}"] = st
+            h, _ = _ffn(pp, h + a, cfg)
+        return constrain(h), caches
+    if kind == "dec":
+        a, kv = A.attn_prefill(
+            p["attn"], rmsnorm(p["ln1"], h, cfg.norm_eps), cfg, cache_len, window=window
+        )
+        h = h + a
+        x = A.attn_forward(p["xattn"], rmsnorm(p["lnx"], h, cfg.norm_eps), cfg, kv_x=enc_out)
+        xc = A.cross_attn_cache(p["xattn"], enc_out)
+        h, _ = _ffn(p, h + x, cfg)
+        return constrain(h), {"self": kv, "cross": xc}
+    raise ValueError(kind)
+
+
+def prefill_hidden(stack, h, cfg: ModelConfig, *, cache_len, enc_out=None,
+                   prefix_len: int = 0, shape_window: Optional[int] = None):
+    """Full-prompt pass building decode caches. Returns (h, caches)."""
+    segs = plan_segments(cfg, "decoder")
+    caches = []
+    for seg, params in zip(segs, stack):
+        window = _window_for(seg.kind, cfg, shape_window)
+
+        def body(hh, p, kind=seg.kind, window=window):
+            hh, cache = _block_prefill(
+                kind, p, hh, cfg, cache_len=cache_len, window=window,
+                prefix_len=prefix_len, enc_out=enc_out,
+            )
+            return hh, cache
+
+        h, seg_cache = jax.lax.scan(body, h, params)
+        caches.append(seg_cache)
+    return h, caches
+
+
+# ------------------------------------------------------------------- decode
+def _block_decode(kind, p, h, cache, pos, cfg: ModelConfig, *, window):
+    if kind in ("attn", "attn_moe"):
+        a, cache = A.attn_decode(
+            p["attn"], rmsnorm(p["ln1"], h, cfg.norm_eps), cache, pos, cfg, window=window
+        )
+        h, _ = _ffn(p, h + a, cfg)
+        return h, cache
+    if kind == "ssm":
+        y, cache = S.ssm_decode(p["ssm"], rmsnorm(p["ln1"], h, cfg.norm_eps), cache, cfg)
+        return h + y, cache
+    if kind == "rec":
+        a, cache = R.rglru_decode(p["rec"], rmsnorm(p["ln1"], h, cfg.norm_eps), cache, cfg)
+        h, _ = _ffn(p, h + a, cfg)
+        return h, cache
+    if kind == "group":
+        new = {}
+        for i, bk in enumerate(cfg.block_pattern):
+            sub = "rec" if bk == "rec" else "attn"
+            pp = p[f"b{i}_{sub}"]
+            if sub == "rec":
+                a, st = R.rglru_decode(pp["rec"], rmsnorm(pp["ln1"], h, cfg.norm_eps), cache[f"b{i}"], cfg)
+            else:
+                a, st = A.attn_decode(
+                    pp["attn"], rmsnorm(pp["ln1"], h, cfg.norm_eps), cache[f"b{i}"],
+                    pos, cfg, window=cfg.local_window,
+                )
+            new[f"b{i}"] = st
+            h, _ = _ffn(pp, h + a, cfg)
+        return h, new
+    if kind == "dec":
+        a, kv = A.attn_decode(
+            p["attn"], rmsnorm(p["ln1"], h, cfg.norm_eps), cache["self"], pos, cfg, window=window
+        )
+        h = h + a
+        x = A.cross_attn_decode(p["xattn"], rmsnorm(p["lnx"], h, cfg.norm_eps), cache["cross"], cfg)
+        h, _ = _ffn(p, h + x, cfg)
+        return h, {"self": kv, "cross": cache["cross"]}
+    raise ValueError(kind)
+
+
+def decode_hidden(stack, h, caches, pos, cfg: ModelConfig, *, shape_window=None):
+    """One-token pass. h: (B, D). Returns (h, new_caches)."""
+    segs = plan_segments(cfg, "decoder")
+    new_caches = []
+    for seg, params, cache in zip(segs, stack, caches):
+        window = _window_for(seg.kind, cfg, shape_window)
+
+        def body(hh, pc, kind=seg.kind, window=window):
+            p, c = pc
+            hh, c = _block_decode(kind, p, hh, c, pos, cfg, window=window)
+            return hh, c
+
+        h, seg_cache = jax.lax.scan(body, h, (params, cache))
+        new_caches.append(seg_cache)
+    return h, new_caches

@@ -1,0 +1,10 @@
+from repro.roofline.analysis import (
+    HBM_BW,
+    HBM_CAP,
+    ICI_BW,
+    PEAK_FLOPS,
+    Roofline,
+    analytic_workload,
+    build_roofline,
+    parse_collectives,
+)

@@ -1,0 +1,295 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+    compute    = FLOPs            / (chips * 197e12  bf16 FLOP/s)
+    memory     = HBM bytes        / (chips * 819e9   B/s)
+    collective = collective bytes / (chips * 50e9    B/s per ICI link)
+
+Sources & caveats (verified empirically on this jax/XLA build):
+
+* ``compiled.cost_analysis()`` counts a ``lax.scan`` body ONCE — not
+  multiplied by the trip count. All models here scan over layers, so raw
+  cost_analysis FLOPs understate by ~n_layers. We therefore report BOTH:
+  the raw numbers, and a corrected estimate
+      corrected = outside + L * (raw - outside)
+  with ``outside`` = analytic embed/unembed/loss FLOPs (the only large
+  compute outside the layer scan). The *primary* compute/memory terms in
+  the table come from the exact analytic workload model below (shape-level
+  formulas, independent of XLA accounting); the HLO numbers cross-check it.
+* Collective bytes are NOT in cost_analysis: we parse the compiled HLO
+  text, attribute each all-gather/all-reduce/reduce-scatter/all-to-all/
+  collective-permute its wire-byte cost from its result shape and op type,
+  and multiply collectives inside ``while``-loop bodies (the layer scan) by
+  the scanned-layer count. This is what the §Perf loop optimizes.
+* ``memory_analysis()`` is per-device; argument+temp bytes vs the 16 GiB
+  v5e HBM is the fit criterion reported in §Dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+from repro.launch.shapes import ShapeCase, cache_len_for, effective_window
+
+PEAK_FLOPS = 197e12     # bf16 per chip (TPU v5e)
+HBM_BW = 819e9          # B/s per chip
+ICI_BW = 50e9           # B/s per link
+HBM_CAP = 16 * 2 ** 30  # v5e HBM per chip
+DTYPE_BYTES = 2         # bf16
+
+
+# ----------------------------------------------------------- analytic model
+def analytic_workload(cfg: ModelConfig, case: ShapeCase) -> dict:
+    """Exact FLOPs / HBM-bytes model for one step of the given shape case.
+
+    Returns dict with total_flops, hbm_bytes, model_flops (6*N_active*T),
+    flops_outside (embed/unembed/loss — used for the HLO scan correction).
+    """
+    B, S = case.global_batch, case.seq_len
+    D, V = cfg.d_model, cfg.vocab_size
+    hd = cfg.head_dim_
+    H, KVH = cfg.n_heads, cfg.n_kv_heads
+    N_total, N_active = cfg.param_count(), cfg.active_param_count()
+
+    if case.kind == "train":
+        T = B * S
+        fwd_mult, tok = 3.0, T          # fwd + bwd = 3x fwd matmul flops
+    elif case.kind == "prefill":
+        T = B * S
+        fwd_mult, tok = 1.0, T
+    else:  # decode: one token per sequence
+        T = B
+        fwd_mult, tok = 1.0, T
+
+    # parameter matmul flops: 2 * active_params * tokens (embed lookup free)
+    emb_params = V * D * (1 if cfg.tie_embeddings else 2)
+    mat_flops = 2.0 * (N_active - emb_params) * tok
+    unembed_flops = 2.0 * D * V * tok
+    outside = unembed_flops * fwd_mult
+
+    # attention score/value flops
+    attn_flops = 0.0
+    n_attn, attn_ctx = _attention_layers_and_context(cfg, case)
+    if case.kind in ("train", "prefill"):
+        attn_flops = n_attn * B * 4.0 * H * hd * attn_ctx  # 2 matmuls x 2S'
+    else:
+        attn_flops = n_attn * B * 4.0 * H * hd * attn_ctx
+    # ssd flops (chunked): intra-chunk (Q^2) + state terms
+    ssd_flops = 0.0
+    if cfg.ssm_state:
+        Hs, P, Nst, Q = cfg.n_ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_chunk
+        if case.kind == "decode":
+            ssd_flops = cfg.n_layers * B * Hs * (4.0 * P * Nst)
+        else:
+            per_tok = Hs * (2.0 * Q * P + 2.0 * Nst + 4.0 * P * Nst)
+            ssd_flops = cfg.n_layers * B * S * per_tok
+
+    total = (mat_flops + unembed_flops) * fwd_mult + (attn_flops + ssd_flops) * (
+        3.0 if case.kind == "train" else 1.0
+    )
+
+    # HBM traffic: every step streams active params once; decode also streams
+    # the KV/state caches; train streams params ~3x (fwd, bwd, opt) + grads.
+    param_bytes = N_active * DTYPE_BYTES
+    cache_bytes = _cache_bytes(cfg, case)
+    if case.kind == "train":
+        act_bytes = cfg.n_layers * B * S * D * DTYPE_BYTES * 2  # remat saves
+        hbm = N_total * DTYPE_BYTES * 3 + N_total * 8 + act_bytes
+    elif case.kind == "prefill":
+        hbm = param_bytes + B * S * D * DTYPE_BYTES * 2 * cfg.n_layers
+    else:
+        hbm = param_bytes + cache_bytes
+    return {
+        "total_flops": total,
+        "flops_outside": outside,
+        "hbm_bytes": float(hbm),
+        "model_flops": 6.0 * N_active * tok if case.kind == "train" else 2.0 * N_active * tok,
+        "attn_flops": attn_flops,
+        "cache_bytes": cache_bytes,
+        "params": N_total,
+        "active_params": N_active,
+    }
+
+
+def _attention_layers_and_context(cfg: ModelConfig, case: ShapeCase):
+    """(#attention layers, summed context length per query position)."""
+    B, S = case.global_batch, case.seq_len
+    if cfg.is_ssm:
+        return 0, 0.0
+    if cfg.is_hybrid:
+        n_attn = sum(1 for i in range(cfg.n_layers) if cfg.pattern_at(i) == "attn")
+        win = cfg.local_window
+    else:
+        n_attn = cfg.n_layers + (cfg.n_enc_layers if cfg.is_encdec else 0)
+        win = effective_window(cfg, case)
+    if case.kind == "decode":
+        return n_attn, float(min(win or S, S))  # one query over its context
+    if win and win < S:
+        # ramp 1..win then flat win: total = win*(win+1)/2 + (S-win)*win
+        total = win * (win + 1) / 2 + (S - win) * win
+        return n_attn, float(total)
+    return n_attn, float(S) * (S + 1) / 2.0
+
+
+def _cache_bytes(cfg: ModelConfig, case: ShapeCase) -> float:
+    import numpy as _np
+
+    B = case.global_batch
+    L = cache_len_for(cfg, case)
+    kv_bytes = _np.dtype(cfg.cache_dtype).itemsize if cfg.cache_dtype else DTYPE_BYTES
+    total = 0.0
+    if cfg.is_ssm:
+        total += cfg.n_layers * B * (
+            cfg.n_ssm_heads * cfg.ssm_headdim * cfg.ssm_state * 4
+            + (cfg.conv_width - 1) * (cfg.d_inner + 2 * cfg.ssm_state) * DTYPE_BYTES
+        )
+        return total
+    if cfg.is_hybrid:
+        for i in range(cfg.n_layers):
+            if cfg.pattern_at(i) == "rec":
+                total += B * (cfg.lru_width_ * 4 + (cfg.conv_width - 1) * cfg.lru_width_ * DTYPE_BYTES)
+            else:
+                total += B * min(cfg.local_window, L) * cfg.n_kv_heads * cfg.head_dim_ * 2 * kv_bytes
+        return total
+    kv = cfg.n_layers * B * L * cfg.n_kv_heads * cfg.head_dim_ * 2 * kv_bytes
+    if cfg.is_encdec:
+        kv += cfg.n_layers * B * cfg.enc_seq * cfg.n_kv_heads * cfg.head_dim_ * 2 * DTYPE_BYTES
+    return kv
+
+
+# ------------------------------------------------------------- HLO parsing
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_TUPLE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_WIRE_FACTOR = {
+    "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(dt: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def parse_collectives(hlo_text: str, while_mult: float = 1.0) -> dict:
+    """Sum wire bytes per collective kind from compiled HLO text.
+
+    Collectives inside computations whose name contains 'while' (the layer
+    scan body/cond) are multiplied by ``while_mult`` (scanned layer count).
+    Bytes are wire-cost-weighted result-shape bytes (see module docstring).
+    """
+    totals: dict = {}
+    count = 0
+    current_mult = 1.0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if ls.startswith("%") and ls.endswith("{") and "(" in ls:
+            current_mult = while_mult if "while" in ls.split("(")[0] else 1.0
+            continue
+        if ls.startswith("ENTRY"):
+            current_mult = 1.0
+            continue
+        m = _COLL_RE.search(ls)
+        if not m:
+            continue
+        kind = m.group(3)
+        if m.group(1):
+            nbytes = _shape_bytes(m.group(1), m.group(2))
+        else:  # tuple result: sum members
+            paren = ls.split("= (", 1)[1].split(")", 1)[0]
+            nbytes = sum(_shape_bytes(d, s) for d, s in _TUPLE_RE.findall(paren))
+        totals[kind] = totals.get(kind, 0.0) + nbytes * _WIRE_FACTOR[kind] * current_mult
+        count += 1
+    totals["n_ops"] = count
+    return totals
+
+
+# --------------------------------------------------------------- the report
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_raw: float
+    hlo_flops_corrected: float
+    useful_ratio: float
+    collective_bytes: float
+    per_device_bytes: float
+    fits_hbm: bool
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def build_roofline(
+    cfg: ModelConfig,
+    case: ShapeCase,
+    n_chips: int,
+    cost: dict,
+    hlo_text: str,
+    mem_stats,
+) -> Roofline:
+    wl = analytic_workload(cfg, case)
+    mult = _total_scanned_layers(cfg)
+    coll = parse_collectives(hlo_text, while_mult=mult)
+    coll_bytes = sum(v for k, v in coll.items() if k != "n_ops")
+
+    raw = float(cost.get("flops", 0.0)) * n_chips  # cost_analysis is per-device
+    outside = wl["flops_outside"]
+    corrected = outside + mult * max(raw - outside, 0.0)
+
+    compute_s = wl["total_flops"] / (n_chips * PEAK_FLOPS)
+    memory_s = wl["hbm_bytes"] / (n_chips * HBM_BW)
+    collective_s = coll_bytes / (n_chips * ICI_BW)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    per_dev = 0.0
+    fits = True
+    if mem_stats is not None:
+        per_dev = float(
+            getattr(mem_stats, "argument_size_in_bytes", 0)
+            + getattr(mem_stats, "temp_size_in_bytes", 0)
+            + getattr(mem_stats, "output_size_in_bytes", 0)
+            - getattr(mem_stats, "alias_size_in_bytes", 0)  # donated buffers
+        )
+        fits = per_dev < HBM_CAP
+
+    return Roofline(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=wl["model_flops"],
+        hlo_flops_raw=raw,
+        hlo_flops_corrected=corrected,
+        # model_flops / analytic total: the "useful" share of compiled compute
+        # (attention quadratics, routing overhead, qk-norm etc. are the gap).
+        # HLO-based ratios are unreliable here because cost_analysis counts
+        # nested scan bodies once (see module docstring).
+        useful_ratio=wl["model_flops"] / wl["total_flops"] if wl["total_flops"] else 0.0,
+        collective_bytes=coll_bytes,
+        per_device_bytes=per_dev,
+        fits_hbm=fits,
+    )
+
+
+def _total_scanned_layers(cfg: ModelConfig) -> float:
+    n = cfg.n_layers + (cfg.n_enc_layers if cfg.is_encdec else 0)
+    if cfg.is_hybrid:  # group scan: trip count = n_groups, body = pattern
+        return max(cfg.n_layers // len(cfg.block_pattern), 1)
+    return float(n)

@@ -1,0 +1,15 @@
+from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.request import Request, RequestSource
+from repro.runtime.scheduler import AdaptiveScheduler, StaticScheduler
+from repro.runtime.server import latency_stats, serve
+
+__all__ = [
+    "Engine",
+    "EngineConfig",
+    "Request",
+    "RequestSource",
+    "AdaptiveScheduler",
+    "StaticScheduler",
+    "latency_stats",
+    "serve",
+]

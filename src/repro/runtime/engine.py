@@ -1,0 +1,156 @@
+"""Continuous-batching inference engine.
+
+Fixed decode slots (batch dimension B). Each slot holds one in-flight
+request's KV/recurrent cache row. Per engine step:
+
+  1. fill free slots: pop pending requests, run bucketed prefill (batch 1,
+     fixed prompt_len), splice the new cache row into the batch cache at the
+     slot index (pure jit'd dynamic-update on axis 1 — caches are stacked
+     (layers, B, ...)),
+  2. one fused decode step over all B slots (inactive slots compute but are
+     masked out — the standard continuous-batching trade),
+  3. retire finished requests (max_new_tokens reached), freeing slots.
+
+The engine reports per-step service counts — the mu(t) the Lyapunov
+controller observes. Model-agnostic: works for every registered arch via
+the Model API (prefill/decode_step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.runtime.request import Request
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    batch_slots: int = 8
+    prompt_len: int = 32
+    cache_len: int = 128
+    greedy: bool = True           # False => temperature/top-k sampling
+    temperature: float = 1.0
+    top_k: int = 0                # 0 = full distribution
+    seed: int = 0
+    shape_window: Optional[int] = None
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig, extra_batch=None):
+        self.cfg, self.params, self.ecfg = cfg, params, ecfg
+        self.extra = extra_batch or {}
+        B, P = ecfg.batch_slots, ecfg.prompt_len
+
+        def _prefill(params, batch):
+            return M.prefill(params, batch, cfg, ecfg.cache_len,
+                             shape_window=ecfg.shape_window)
+
+        def _sample(logits, key):
+            if ecfg.greedy:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            lg = logits.astype(jnp.float32) / max(ecfg.temperature, 1e-6)
+            if ecfg.top_k:
+                kth = jnp.sort(lg, axis=-1)[:, -ecfg.top_k][:, None]
+                lg = jnp.where(lg < kth, -1e30, lg)
+            return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+
+        def _decode(params, state, toks, key):
+            logits, state = M.decode_step(params, state, toks, cfg,
+                                          shape_window=ecfg.shape_window)
+            return _sample(logits, key), state
+
+        def _splice(state, one, slot):
+            """Insert batch-1 prefill state into batch state at slot."""
+            caches = jax.tree.map(
+                lambda big, new: jax.lax.dynamic_update_index_in_dim(
+                    big, new[:, 0], slot, axis=1
+                ),
+                state.caches, one.caches,
+            )
+            return M.DecodeState(
+                caches=caches,
+                pos=state.pos.at[slot].set(one.pos[0]),
+                last_tok=state.last_tok.at[slot].set(one.last_tok[0]),
+            )
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+        self._splice = jax.jit(_splice, static_argnames=("slot",))
+
+        # boot: empty batch state from a dummy prefill over the whole batch
+        boot = {"tokens": jnp.zeros((B, P), jnp.int32), **self.extra}
+        _, self.state = self._prefill(params, boot)
+        self._key = jax.random.PRNGKey(ecfg.seed)
+        self.active: list = [None] * B
+        self.pending: list = []
+        self.finished: list = []
+        self.slot_age = np.zeros(B, np.int32)
+        self.steps = 0
+        self.served_history: list = []
+
+    # ------------------------------------------------------------------
+    def queue_len(self) -> int:
+        return len(self.pending)
+
+    def submit(self, reqs: list) -> None:
+        self.pending.extend(reqs)
+
+    def free_slots(self) -> list:
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    def _admit_one(self, req: Request, slot: int, now: int) -> None:
+        toks = np.asarray(req.tokens[: self.ecfg.prompt_len], np.int32)
+        if len(toks) < self.ecfg.prompt_len:  # bucketed prefill: pad by cycling
+            toks = np.resize(toks, self.ecfg.prompt_len)
+        batch = {"tokens": jnp.asarray(toks)[None, :], **_slice_extra(self.extra, 1)}
+        logits, one = self._prefill(self.params, batch)
+        self.state = self._splice(self.state, one, slot)
+        req.start_slot = now
+        req.generated = [int(jnp.argmax(logits[0]))]
+        self.active[slot] = req
+        self.slot_age[slot] = 1  # first token came from prefill
+
+    def step(self, now: int) -> dict:
+        """One engine slot: admit -> decode -> retire. Returns metrics."""
+        for slot in self.free_slots():
+            if not self.pending:
+                break
+            self._admit_one(self.pending.pop(0), slot, now)
+
+        n_active = sum(r is not None for r in self.active)
+        if n_active:
+            toks = jnp.asarray(
+                [r.generated[-1] if r else 0 for r in self.active], jnp.int32
+            )
+            self._key, sub = jax.random.split(self._key)
+            nxt, self.state = self._decode(self.params, self.state, toks, sub)
+            nxt = np.asarray(nxt)
+            for i, r in enumerate(self.active):
+                if r is None:
+                    continue
+                r.generated.append(int(nxt[i]))
+                self.slot_age[i] += 1
+                if self.slot_age[i] >= r.max_new_tokens:
+                    r.finish_slot = now
+                    self.finished.append(r)
+                    self.active[i] = None
+
+        served = len([r for r in self.finished if r.finish_slot == now])
+        self.served_history.append(served)
+        self.steps += 1
+        return {
+            "active": n_active,
+            "queue": len(self.pending),
+            "served": served,
+            "finished_total": len(self.finished),
+        }
+
+
+def _slice_extra(extra: dict, b: int) -> dict:
+    return {k: v[:b] for k, v in extra.items()}

@@ -1,0 +1,61 @@
+"""Roofline-derived service-rate (mu) estimation for the scheduler.
+
+DESIGN.md §2: the controller's mu estimate can come from the same compiled
+artifact the dry-run produces — the decode step's dominant roofline term
+gives steps/sec on the target hardware, and batch_slots converts that to
+requests/slot. This lets an operator pick the action set F and V *before*
+deploying, instead of measuring on live traffic.
+
+    est = estimate_mu("qwen3-8b", batch_slots=128, max_new_tokens=16)
+    sched = AdaptiveScheduler(rates=est.suggested_rates(), V=...)
+
+On real hardware the engine's measured served/slot replaces this prior; the
+Lyapunov controller is robust to the difference (it only ever observes Q).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import get_config
+from repro.launch.shapes import SHAPES, ShapeCase
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS, analytic_workload
+
+
+@dataclasses.dataclass(frozen=True)
+class MuEstimate:
+    arch: str
+    step_s: float            # roofline-bound seconds per decode step (batch)
+    batch_slots: int
+    max_new_tokens: int
+    slot_s: float            # wall seconds per control slot
+
+    @property
+    def requests_per_slot(self) -> float:
+        steps_per_slot = self.slot_s / self.step_s
+        return steps_per_slot * self.batch_slots / self.max_new_tokens
+
+    def suggested_rates(self, n: int = 10) -> tuple:
+        """Action set spanning (0, ~1.2x mu] — the controller needs at least
+        one stabilizing action and headroom above mu to probe."""
+        top = max(self.requests_per_slot * 1.2, float(n))
+        return tuple(round(top * i / n, 2) for i in range(1, n + 1))
+
+
+def estimate_mu(
+    arch: str,
+    *,
+    batch_slots: int = 128,
+    max_new_tokens: int = 16,
+    slot_s: float = 1.0,
+    n_chips: int = 256,
+    shape: str = "decode_32k",
+) -> MuEstimate:
+    cfg = get_config(arch)
+    case = SHAPES[shape]
+    case = ShapeCase(case.name, case.kind, case.seq_len, batch_slots)
+    wl = analytic_workload(cfg, case)
+    compute_s = wl["total_flops"] / (n_chips * PEAK_FLOPS)
+    memory_s = wl["hbm_bytes"] / (n_chips * HBM_BW)
+    step_s = max(compute_s, memory_s)
+    return MuEstimate(arch=arch, step_s=step_s, batch_slots=batch_slots,
+                      max_new_tokens=max_new_tokens, slot_s=slot_s)

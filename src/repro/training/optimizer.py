@@ -1,0 +1,80 @@
+"""AdamW + cosine schedule, hand-rolled (no optax dependency).
+
+Moments are stored in f32 regardless of param dtype. ``zero1_specs`` extends
+a param PartitionSpec tree for ZeRO-1: each moment additionally shards its
+largest replicated dim over the ``data`` axis when divisible (optimizer
+state is 8 bytes/param in f32 pairs — the dominant memory term for training
+big dense models; see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamState:
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(z, params),
+            nu=jax.tree.map(z, params),
+        )
+
+    def schedule(self, step) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(self.warmup, 1), 1.0)
+        t = jnp.clip((step - self.warmup) / max(self.total_steps - self.warmup, 1), 0.0, 1.0)
+        cos = self.min_lr_frac + (1 - self.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return self.lr * warm * cos
+
+    def update(self, grads, state: AdamState, params):
+        """Returns (new_params, new_state, metrics)."""
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-9))
+        step = state.step + 1
+        lr = self.schedule(step)
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            mh, vh = m / b1c, v / b2c
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.mu)
+        flat_v = tdef.flatten_up_to(state.nu)
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, AdamState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr}

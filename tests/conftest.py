@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Smoke tests / benches must see ONE device — the 512-device dry-run flag is
+# set ONLY inside repro.launch.dryrun (see the system design notes).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,65 @@
+"""Paper validation: the four Fig. 2 curves and their claimed behaviors."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core.trace import Fig2Config, fig2_experiment, summarize
+
+
+@pytest.fixture(scope="module")
+def result():
+    return fig2_experiment(Fig2Config())
+
+
+def test_service_trace_mean_below_threshold(result):
+    """The sim mimics a system that diverges at 10 fps: mean service < 10."""
+    m = float(jnp.mean(result["service"]))
+    assert 9.0 < m < 10.0
+
+
+def test_fixed_10_overflows(result):
+    """(1, red): fixed max rate -> queue diverges (grows ~linearly)."""
+    b = result["fixed_10"]["backlog"]
+    third = len(b) // 3
+    assert float(b[-1]) > 500.0  # ~ +0.4/slot drift over the horizon
+    # linear growth: last-third mean ~ (5/3)x middle-third mean; require >1.3x
+    assert float(jnp.mean(b[-third:])) > 1.3 * float(jnp.mean(b[third : 2 * third]))
+
+
+def test_controller_stabilizes_both_V(result):
+    """(2 black, 3 blue): backlog bounded, not growing."""
+    for k in ("V_high", "V_low"):
+        b = result[k]["backlog"]
+        half = len(b) // 2
+        assert float(jnp.max(b)) < 200.0
+        # no trend: late mean within 3x early mean (both past warmup)
+        assert float(jnp.mean(b[-500:])) < 3.0 * float(jnp.mean(b[half : half + 500])) + 5.0
+
+
+def test_backlog_ordering_O_of_V(result):
+    """Larger V -> larger stationary backlog (O(V) bound)."""
+    s = summarize(result)
+    assert s["V_high"]["tail_mean_backlog"] > s["V_low"]["tail_mean_backlog"]
+
+
+def test_utility_ordering_O_of_1_over_V(result):
+    """Larger V -> mean rate (utility) closer to optimal."""
+    s = summarize(result)
+    assert s["V_high"]["mean_rate"] > s["V_low"]["mean_rate"]
+    assert s["V_high"]["mean_rate"] > s["fixed_1"]["mean_rate"]
+
+
+def test_fixed_1_stable_lowest_utility(result):
+    """(4, green): stable but the worst utility."""
+    s = summarize(result)
+    assert s["fixed_1"]["tail_mean_backlog"] <= 1.5
+    for k in ("V_high", "V_low", "fixed_10"):
+        assert s[k]["mean_rate"] > s["fixed_1"]["mean_rate"]
+
+
+def test_no_overflow_with_bounded_queue():
+    """With a finite queue, the controller never drops; fixed-10 does."""
+    cfg = Fig2Config(capacity=150.0)
+    res = fig2_experiment(cfg)
+    assert float(res["fixed_10"]["final"].dropped) > 0.0
+    assert float(res["V_high"]["final"].dropped) == 0.0
+    assert float(res["V_low"]["final"].dropped) == 0.0

