@@ -105,6 +105,60 @@ def bench_serving_engine(quick=False):
     derived = (
         f"served={int(tr['served'].sum())};dropped={sch.dropped}"
         f";tail_backlog={float(tr['backlog'][-5:].mean()):.1f}"
+        f";dispatches_per_slot={float(tr['dispatches'].mean()):.2f}"
+    )
+    return us, derived
+
+
+def bench_serve_fused_vs_legacy(quick=False):
+    """Control-slot cost before/after batched admission + fused decode.
+
+    Same scheduler, source seed, and engine config; the only difference is
+    the serve loop's dispatch pattern: legacy = k batch-1 prefills +
+    steps_per_slot decode dispatches per slot, fused = <= 1 bucketed
+    prefill + 1 scan decode dispatch. Reports requests/sec and
+    jit-dispatches/slot for both. us_per_call = fused us per control slot.
+    """
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.runtime import AdaptiveScheduler, Engine, EngineConfig, RequestSource, serve
+
+    cfg = get_config("granite-3-2b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    steps_per_slot = 4
+    horizon = 10 if quick else 30
+    reps = 2 if quick else 3
+
+    def run(fused):
+        mk_sched = lambda: AdaptiveScheduler(
+            rates=tuple(float(f) for f in range(1, 9)), V=20.0, capacity=32)
+        eng = Engine(cfg, params, EngineConfig(batch_slots=4, prompt_len=16,
+                                               cache_len=64))
+        mk_src = lambda s: RequestSource(vocab_size=cfg.vocab_size, prompt_len=16,
+                                         raw_rate=8, max_new_tokens=5, seed=s)
+        serve(eng, mk_sched(), mk_src(0), horizon=6,
+              steps_per_slot=steps_per_slot, fused=fused)  # warm the jits
+        best_rps, best_t, disp = 0.0, 0.0, 0.0
+        for rep in range(reps):
+            eng.pending.clear()  # no backlog carryover between reps
+            sch = mk_sched()
+            t0 = time.perf_counter()
+            tr = serve(eng, sch, mk_src(rep + 1), horizon=horizon,
+                       steps_per_slot=steps_per_slot, fused=fused)
+            dt = time.perf_counter() - t0
+            rps = int(tr["served"].sum()) / dt  # served paired with ITS time
+            if rps > best_rps:
+                best_rps, best_t = rps, dt
+            disp = float(tr["dispatches"].mean())
+        return best_rps, best_t, disp
+
+    rps_f, t_fused, disp_f = run(True)
+    rps_l, _, disp_l = run(False)
+    us = t_fused / horizon * 1e6
+    derived = (
+        f"fused_rps={rps_f:.1f};legacy_rps={rps_l:.1f}"
+        f";speedup={rps_f / rps_l:.2f}x"
+        f";fused_disp_per_slot={disp_f:.2f};legacy_disp_per_slot={disp_l:.2f}"
     )
     return us, derived
 
@@ -168,6 +222,10 @@ def bench_roofline_table():
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows to a BENCH_*.json file")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark-name filter")
     args, _ = ap.parse_known_args()
 
     benches = [
@@ -175,17 +233,29 @@ def main() -> None:
         ("v_sweep_OV_tradeoff", bench_v_sweep),
         ("controller_overhead", bench_controller_overhead),
         ("serving_engine_e2e", lambda: bench_serving_engine(args.quick)),
+        ("serve_fused_vs_legacy", lambda: bench_serve_fused_vs_legacy(args.quick)),
         ("flash_attention_xla", lambda: bench_flash_attention(args.quick)),
         ("ssd_scan_xla", lambda: bench_ssd_scan(args.quick)),
         ("roofline_table", bench_roofline_table),
     ]
+    if args.only:
+        keep = set(args.only.split(","))
+        benches = [(n, f) for n, f in benches if n in keep]
+    rows = []
     print("name,us_per_call,derived")
     for name, fn in benches:
         try:
             us, derived = fn()
             print(f"{name},{us:.1f},{derived}")
+            rows.append({"name": name, "us_per_call": round(us, 1),
+                         "derived": derived})
         except Exception as e:  # keep the harness robust
             print(f"{name},nan,ERROR:{type(e).__name__}:{e}")
+            rows.append({"name": name, "us_per_call": None,
+                         "derived": f"ERROR:{type(e).__name__}:{e}"})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -16,8 +16,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.lyapunov import drift_plus_penalty_action
+from repro.control import DriftPlusPenalty
 from repro.core.queueing import QueueState, bounded_queue_step
+from repro.core.utility import paper_utility
 from repro.models import init_params, prefill
 from repro.models.frontends import vision_patch_embeddings
 
@@ -43,14 +44,18 @@ def main():
         return jnp.argmax(logits, -1)
 
     key = jax.random.PRNGKey(1)
-    s_tab = RATES / RATES[-1]
+    policy = DriftPlusPenalty(
+        rates=tuple(float(r) for r in np.asarray(RATES)), V=V,
+        utility=paper_utility(float(RATES[-1])),
+    )
+    carry = policy.init()
     q = QueueState.zeros()
     appeared = identified = processed = 0
     backlog_hist, rate_hist = [], []
 
     for t in range(HORIZON):
-        # Algorithm 1: pick the sampling rate from the observed backlog
-        f_star, _ = drift_plus_penalty_action(q.backlog, RATES, s_tab, RATES, V)
+        # Algorithm 1 via the unified Policy API: backlog in, rate out
+        f_star, carry = policy.act(carry, q.backlog)
         f = float(f_star)
         # camera produces RAW_FPS frames; a face appears in each w.p. 0.4
         faces = rng.random(RAW_FPS) < 0.4

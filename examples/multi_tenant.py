@@ -16,7 +16,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 
-from repro.core.lyapunov import distributed_action, drift_plus_penalty_action
+from repro.control import distributed_action, multi_tenant_action
 from repro.core.queueing import bounded_queue_step, QueueState
 from repro.core.utility import Utility
 
@@ -33,10 +33,9 @@ def multi_tenant():
 
     @jax.jit
     def slot(q, key):
-        # each tenant picks its own rate from its own backlog/utility
-        f, _ = jax.vmap(
-            lambda qq, st, vv: drift_plus_penalty_action(qq, RATES, st, RATES, vv)
-        )(q.backlog, s_tabs, V)
+        # each tenant picks its own rate from its own backlog/utility —
+        # one vmap over the single Algorithm-1 implementation
+        f = multi_tenant_action(q.backlog, RATES, s_tabs, RATES, V)
         # shared server: proportional service split across tenants
         mu_total = 12.0
         load = jnp.maximum(q.backlog + f, 1e-6)

@@ -13,14 +13,18 @@ import jax
 import jax.numpy as jnp
 
 # ----------------------------------------------------------------- 1. control
-from repro.core import LyapunovController, ServiceProcess, paper_utility
+# One Policy API drives everything: the same DriftPlusPenalty object used
+# here in a pure simulation is what the serving scheduler consumes in [3].
+from repro.control import DriftPlusPenalty, closed_loop
+from repro.core import ServiceProcess, paper_utility
 
-controller = LyapunovController(
+policy = DriftPlusPenalty(
     rates=tuple(float(f) for f in range(1, 11)),  # F = {1..10} frames/slot
     V=100.0,                                      # utility/stability knob
     utility=paper_utility(10.0),                  # S(f) = f / f_max
 )
-trace = controller.run(
+trace = closed_loop(
+    policy,
     ServiceProcess(kind="markov", rate=10.8, slow_rate=8.4, p_stay=0.9),
     horizon=2000,
     key=jax.random.PRNGKey(0),
@@ -41,15 +45,18 @@ print(f"[2] train {cfg.name}: loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3
 
 # ------------------------------------------------------------------ 3. serve
 from repro.models import init_params
-from repro.runtime import (AdaptiveScheduler, Engine, EngineConfig,
+from repro.runtime import (Engine, EngineConfig, PolicyScheduler,
                            RequestSource, latency_stats, serve)
 
 cfg = get_config("granite-3-2b", smoke=True)
 params = init_params(jax.random.PRNGKey(0), cfg)
 engine = Engine(cfg, params, EngineConfig(batch_slots=4, prompt_len=16, cache_len=64))
-sched = AdaptiveScheduler(rates=tuple(float(f) for f in range(1, 6)), V=20.0, capacity=32)
+sched = PolicyScheduler(  # the SAME Policy class as section [1]
+    policy=DriftPlusPenalty(rates=tuple(float(f) for f in range(1, 6)), V=20.0),
+    capacity=32)
 source = RequestSource(vocab_size=cfg.vocab_size, prompt_len=16, raw_rate=5, max_new_tokens=4)
 tr = serve(engine, sched, source, horizon=25, steps_per_slot=2)
 print(f"[3] serve {cfg.name}: {int(tr['served'].sum())} requests completed, "
       f"{sched.dropped} dropped, tail backlog {float(tr['backlog'][-5:].mean()):.1f}, "
-      f"latency {latency_stats(engine)}")
+      f"{float(tr['dispatches'].mean()):.1f} jit dispatches/slot (batched admission"
+      f" + fused decode), latency {latency_stats(engine)}")

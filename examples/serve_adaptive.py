@@ -19,9 +19,10 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.control import DriftPlusPenalty, Static
 from repro.models import init_params
-from repro.runtime import (AdaptiveScheduler, Engine, EngineConfig,
-                           RequestSource, StaticScheduler, latency_stats, serve)
+from repro.runtime import (Engine, EngineConfig, PolicyScheduler,
+                           RequestSource, latency_stats, serve)
 
 
 def ascii_plot(series: dict, height=12, width=60):
@@ -59,18 +60,20 @@ def main():
                                    raw_rate=5, max_new_tokens=4)
 
     runs = {}
-    for name, sched in [
-        ("adaptive(V=20)", AdaptiveScheduler(rates=tuple(float(f) for f in range(1, 6)),
-                                             V=20.0, capacity=32)),
-        ("static-max(f=5)", StaticScheduler(rate=5.0, capacity=32)),
-        ("static-min(f=1)", StaticScheduler(rate=1.0, capacity=32)),
+    for name, policy in [
+        ("adaptive(V=20)", DriftPlusPenalty(rates=tuple(float(f) for f in range(1, 6)),
+                                            V=20.0)),
+        ("static-max(f=5)", Static(rate=5.0)),
+        ("static-min(f=1)", Static(rate=1.0)),
     ]:
         eng = Engine(cfg, params, ecfg)
+        sched = PolicyScheduler(policy=policy, capacity=32)
         tr = serve(eng, sched, mk_src(), horizon=args.horizon, steps_per_slot=2)
         runs[name] = (eng, sched, tr)
         print(f"{name:18s} served={int(tr['served'].sum()):4d} "
               f"dropped={sched.dropped:3d} tailQ={float(tr['backlog'][-5:].mean()):5.1f} "
               f"meanRate={float(np.mean(sched.rate_history)):.2f} "
+              f"disp/slot={float(tr['dispatches'].mean()):.2f} "
               f"latency={latency_stats(eng)}")
 
     print()

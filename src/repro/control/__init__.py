@@ -1,0 +1,30 @@
+"""The unified control plane: one Policy API from trace-sim to serving.
+
+``drift_plus_penalty_action`` (Algorithm 1) lives in exactly one place —
+``repro.control.policy`` — behind the ``Policy`` protocol. The trace
+simulator, the serving scheduler, and the distributed/multi-tenant paths all
+consume policies through this package. See DESIGN.md.
+"""
+from repro.control.distributed import distributed_action, multi_tenant_action
+from repro.control.policy import (
+    DriftPlusPenalty,
+    LatencyAware,
+    Policy,
+    Static,
+    VirtualQueue,
+    drift_plus_penalty_action,
+)
+from repro.control.rollout import closed_loop, rollout
+
+__all__ = [
+    "DriftPlusPenalty",
+    "LatencyAware",
+    "Policy",
+    "Static",
+    "VirtualQueue",
+    "closed_loop",
+    "distributed_action",
+    "drift_plus_penalty_action",
+    "multi_tenant_action",
+    "rollout",
+]

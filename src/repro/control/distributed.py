@@ -1,0 +1,61 @@
+"""Distributed and multi-tenant axes of the Policy layer (DESIGN.md §2).
+
+Both are thin compositions over the single Algorithm-1 implementation in
+``repro.control.policy`` — a leading axis on Q for tenants, an
+``axis_name``-mapped mean for pods. Nothing here re-derives the decision
+rule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.control.policy import drift_plus_penalty_action
+
+
+def distributed_action(
+    local_backlog: jax.Array,
+    rates: jax.Array,
+    utilities: jax.Array,
+    arrivals: jax.Array,
+    V: float,
+    axis_name: str,
+    mix: float = 0.5,
+) -> jax.Array:
+    """Per-pod Algorithm 1 against a blend of local and global backlog.
+
+    Intended to run inside shard_map with ``axis_name`` mapped over pods:
+    each pod observes its own queue but penalizes arrivals by
+    mix*Q_local + (1-mix)*mean_pods(Q) so pods with slack absorb load while
+    the aggregate stays stable. mix=1 recovers fully-local control.
+    """
+    global_backlog = jax.lax.pmean(local_backlog, axis_name)
+    blended = mix * local_backlog + (1.0 - mix) * global_backlog
+    f_star, _ = drift_plus_penalty_action(blended, rates, utilities, arrivals, V)
+    return f_star
+
+
+def multi_tenant_action(
+    backlogs: jax.Array,
+    rates: jax.Array,
+    utility_tables: jax.Array,
+    arrival_tables: jax.Array,
+    V: jax.Array,
+) -> jax.Array:
+    """N tenants, one decision each, heterogeneous utilities/V.
+
+    Args:
+      backlogs:       (N,) per-tenant Q(t).
+      rates:          (A,) shared action set F.
+      utility_tables: (N, A) per-tenant S(f).
+      arrival_tables: (N, A) per-tenant lambda(f) (or (A,), broadcast).
+      V:              (N,) or scalar trade-off knob.
+
+    Returns (N,) chosen rates — one vmap over the single Algorithm 1.
+    """
+    V = jnp.broadcast_to(jnp.asarray(V, jnp.float32), backlogs.shape)
+    arrival_tables = jnp.broadcast_to(arrival_tables, utility_tables.shape)
+    f_star, _ = jax.vmap(
+        lambda q, s, lam, v: drift_plus_penalty_action(q, rates, s, lam, v)
+    )(backlogs, utility_tables, arrival_tables, V)
+    return f_star

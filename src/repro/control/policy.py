@@ -1,0 +1,206 @@
+"""The Policy protocol and the ONE implementation of Algorithm 1.
+
+This module is the single source of truth for the paper's drift-plus-penalty
+decision (``drift_plus_penalty_action``). Every consumer — the trace
+simulator (`repro.core.trace`), the serving scheduler
+(`repro.runtime.scheduler`), the distributed/multi-tenant paths
+(`repro.control.distributed`) — goes through the ``Policy`` protocol defined
+here, so the controller that the Lyapunov analysis certifies is the
+controller the system runs. See DESIGN.md §2.
+
+Faithful core
+-------------
+``drift_plus_penalty_action`` implements the paper's per-slot decision
+
+    f*(t) = argmax_{f in F} { V * S(f) - Q(t) * lambda(f) }
+
+exactly: it evaluates the drift-plus-penalty functional over the finite
+action set F and returns the maximizer. It is a pure function of
+(Q, F, S(F), lambda(F), V), written with jnp ops only, so it is jit-able,
+vmap-able (multi-tenant control = leading axis on Q), and usable inside
+lax.scan (the closed-loop simulator) and shard_map (distributed control).
+
+Ties are broken toward the *lowest* rate (conservative), matching the paper's
+Algorithm 1 which takes ``>=`` and scans F in increasing order — the last
+maximizer wins there; we pick argmax over T with first-wins on the reversed
+order to get identical behavior for strictly-increasing S.
+
+The Policy protocol
+-------------------
+A policy is a frozen (hashable — usable as a jit static argument) dataclass
+with three methods, all pure and scan/vmap/jit-compatible:
+
+    init()            -> carry            policy state (a pytree; () if none)
+    act(carry, Q)     -> (f*, carry')     one slot's decision
+    arrivals(f*)      -> lambda(f*)       arrivals the decision induces
+
+``act`` takes the observed backlog Q(t) (scalar or batched — leading axes
+broadcast) and returns the chosen rate plus the updated policy state
+(virtual queues advance here, priced by the chosen action).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.utility import Utility, paper_utility
+
+
+def drift_plus_penalty_action(
+    backlog: jax.Array,
+    rates: jax.Array,
+    utilities: jax.Array,
+    arrivals: jax.Array,
+    V: float | jax.Array,
+    extra_penalty: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """The paper's Algorithm 1, lines 3-7, for one observation of Q(t).
+
+    Args:
+      backlog:   Q(t), scalar or batched (leading axes broadcast against F).
+      rates:     the action set F, shape (A,).
+      utilities: S(f) for f in F, shape (A,).
+      arrivals:  lambda(f) for f in F, shape (A,).
+      V:         utility/stability trade-off.
+      extra_penalty: optional additional per-action penalty, shape
+        broadcastable to backlog[..., None] * arrivals — used by virtual
+        queues (latency/energy constraints).
+
+    Returns:
+      (f_star, T_star): chosen rate and the achieved functional value,
+      shapes = backlog's shape.
+    """
+    backlog = jnp.asarray(backlog, jnp.float32)
+    T = V * utilities - backlog[..., None] * arrivals
+    if extra_penalty is not None:
+        T = T - extra_penalty
+    idx = jnp.argmax(T, axis=-1)  # first maximizer = lowest rate on ties
+    f_star = jnp.take(rates, idx)
+    T_star = jnp.take_along_axis(T, idx[..., None], axis=-1)[..., 0]
+    return f_star, T_star
+
+
+class VirtualQueue(NamedTuple):
+    """Neely virtual queue for a time-average constraint E[y] <= budget."""
+
+    value: jax.Array
+    budget: jax.Array
+
+    @staticmethod
+    def make(budget: float, shape=()) -> "VirtualQueue":
+        return VirtualQueue(jnp.zeros(shape, jnp.float32), jnp.asarray(budget, jnp.float32))
+
+    def step(self, y: jax.Array) -> "VirtualQueue":
+        return VirtualQueue(jnp.maximum(self.value + y - self.budget, 0.0), self.budget)
+
+
+@runtime_checkable
+class Policy(Protocol):
+    """Backlog in, rate out — the one interface every control plane speaks."""
+
+    def init(self) -> Any: ...
+
+    def act(self, carry: Any, backlog: jax.Array) -> tuple[jax.Array, Any]: ...
+
+    def arrivals(self, f_star: jax.Array) -> jax.Array: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class Static:
+    """Fixed-rate baseline (the paper's comparison curves)."""
+
+    rate: float
+
+    def init(self) -> Any:
+        return ()
+
+    def act(self, carry: Any, backlog: jax.Array) -> tuple[jax.Array, Any]:
+        backlog = jnp.asarray(backlog, jnp.float32)
+        return jnp.broadcast_to(jnp.float32(self.rate), backlog.shape), carry
+
+    def arrivals(self, f_star: jax.Array) -> jax.Array:
+        return f_star
+
+    def tables(self) -> tuple[jax.Array, jax.Array, jax.Array]:
+        f = jnp.asarray([self.rate], jnp.float32)
+        return f, jnp.ones_like(f), f
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftPlusPenalty:
+    """Algorithm 1 over a discrete rate set F — the paper's controller.
+
+    arrival_gain maps the decision to induced load: lambda(f) =
+    arrival_gain * f. The paper's setting has lambda(f) = f (every sampled
+    frame enters the queue); a batched-ingest system may use f * batch.
+    """
+
+    rates: tuple[float, ...]
+    V: float
+    utility: Utility = None  # type: ignore[assignment]
+    arrival_gain: float = 1.0
+
+    def __post_init__(self):
+        if self.utility is None:
+            object.__setattr__(self, "utility", paper_utility(max(self.rates)))
+        # tables built once at construction (a non-field attr: hash/eq stay
+        # field-based) so eager per-slot act() callers don't rebuild device
+        # constants; building lazily inside a jit trace would cache tracers.
+        f = jnp.asarray(self.rates, jnp.float32)
+        object.__setattr__(self, "_tables", (f, self.utility(f), self.arrival_gain * f))
+
+    def tables(self) -> tuple[jax.Array, jax.Array, jax.Array]:
+        return self._tables
+
+    def init(self) -> Any:
+        return ()
+
+    def act(self, carry: Any, backlog: jax.Array) -> tuple[jax.Array, Any]:
+        f, s, lam = self.tables()
+        f_star, _ = drift_plus_penalty_action(backlog, f, s, lam, self.V)
+        return f_star, carry
+
+    def arrivals(self, f_star: jax.Array) -> jax.Array:
+        return self.arrival_gain * f_star
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyAware:
+    """Algorithm 1 plus a virtual queue pricing a time-average cost budget.
+
+    The per-slot cost is y(f) = cost_gain * f (service latency / energy both
+    scale with the processed rate); the Neely construction keeps
+    avg y <= cost_budget by adding  Z(t) * y(f)  to the penalty term. The
+    virtual queue Z lives in the policy carry and advances inside ``act``.
+    """
+
+    rates: tuple[float, ...]
+    V: float
+    utility: Utility = None  # type: ignore[assignment]
+    arrival_gain: float = 1.0
+    cost_gain: float = 1.0
+    cost_budget: float = 4.0
+
+    def __post_init__(self):
+        if self.utility is None:
+            object.__setattr__(self, "utility", paper_utility(max(self.rates)))
+        f = jnp.asarray(self.rates, jnp.float32)
+        object.__setattr__(self, "_tables", (f, self.utility(f), self.arrival_gain * f))
+
+    def tables(self) -> tuple[jax.Array, jax.Array, jax.Array]:
+        return self._tables
+
+    def init(self) -> VirtualQueue:
+        return VirtualQueue.make(self.cost_budget)
+
+    def act(self, carry: VirtualQueue, backlog: jax.Array) -> tuple[jax.Array, VirtualQueue]:
+        f, s, lam = self.tables()
+        extra = carry.value[..., None] * (self.cost_gain * f)
+        f_star, _ = drift_plus_penalty_action(backlog, f, s, lam, self.V, extra)
+        return f_star, carry.step(self.cost_gain * f_star)
+
+    def arrivals(self, f_star: jax.Array) -> jax.Array:
+        return self.arrival_gain * f_star

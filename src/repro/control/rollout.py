@@ -1,0 +1,97 @@
+"""Closed-loop rollouts of any Policy — trace-based and stochastic.
+
+Two entry points, both lax.scan bodies over the bounded queue recursion:
+
+  * ``rollout(policy, mus)`` — trace-based (the paper's evaluation style):
+    the service trace mu(t) is given, so different policies run against
+    *identical* service realizations and curves differ only by policy.
+  * ``closed_loop(policy, service, horizon, key)`` — the service process is
+    sampled inside the loop (optionally Poisson-thinned arrivals), the
+    fully-stochastic setting the Lyapunov bounds cover.
+
+Both return the same per-slot trace dict {backlog, rate, utility?, vq?}
+plus "final" (the QueueState), so downstream analysis (Fig. 2 summaries,
+the V-sweep benchmark) is policy-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.control.policy import Policy, VirtualQueue
+from repro.core.queueing import QueueState, ServiceProcess, bounded_queue_step
+
+
+def _vq_value(carry) -> Optional[jax.Array]:
+    return carry.value if isinstance(carry, VirtualQueue) else None
+
+
+def rollout(
+    policy: Policy,
+    mus: jax.Array,
+    capacity: float | jax.Array = jnp.inf,
+) -> dict:
+    """Run ``policy`` against a pre-generated service trace mu(t).
+
+    Per slot: observe Q -> act -> arrivals lambda(f*) -> bounded queue step.
+    Pure and jit-able (policy is static via closure).
+    """
+
+    def body(carry, mu):
+        qstate, pcarry = carry
+        f_star, pcarry = policy.act(pcarry, qstate.backlog)
+        qstate = bounded_queue_step(qstate, mu, policy.arrivals(f_star), capacity)
+        out = {"backlog": qstate.backlog, "rate": f_star}
+        vq = _vq_value(pcarry)
+        if vq is not None:
+            out["vq"] = vq
+        return (qstate, pcarry), out
+
+    (final, _), trace = jax.lax.scan(body, (QueueState.zeros(), policy.init()), mus)
+    trace["final"] = final
+    return trace
+
+
+def closed_loop(
+    policy: Policy,
+    service: ServiceProcess,
+    horizon: int,
+    key: jax.Array,
+    capacity: float | jax.Array = jnp.inf,
+    stochastic_arrivals: bool = False,
+    utility=None,
+) -> dict:
+    """Fully-stochastic rollout: the service process is sampled in-loop.
+
+    Returns per-slot {backlog, rate, utility, service[, vq]} — ``utility``
+    is reported with S(f*) when a utility fn is supplied (for O(1/V) plots).
+    """
+
+    def body(carry, t):
+        qstate, pcarry, svc_state = carry
+        k = jax.random.fold_in(key, t)
+        k_svc, k_arr = jax.random.split(k)
+        f_star, pcarry = policy.act(pcarry, qstate.backlog)
+        lam = policy.arrivals(f_star)
+        if stochastic_arrivals:
+            lam = jax.random.poisson(k_arr, lam).astype(jnp.float32)
+        mu, svc_state = service.sample(k_svc, svc_state)
+        qstate = bounded_queue_step(qstate, mu, lam, capacity)
+        out = {
+            "backlog": qstate.backlog,
+            "rate": f_star,
+            "service": mu,
+        }
+        if utility is not None:
+            out["utility"] = utility(f_star)
+        vq = _vq_value(pcarry)
+        if vq is not None:
+            out["vq"] = vq
+        return (qstate, pcarry, svc_state), out
+
+    init = (QueueState.zeros(), policy.init(), service.init_state())
+    (final, _, _), trace = jax.lax.scan(body, init, jnp.arange(horizon))
+    trace["final"] = final
+    return trace

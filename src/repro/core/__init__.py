@@ -1,15 +1,17 @@
 """Core: the paper's contribution — Lyapunov drift-plus-penalty rate control.
 
 Faithful pieces: queueing.queue_update (the paper's queue recursion),
-lyapunov.drift_plus_penalty_action (Algorithm 1), trace.fig2_experiment
-(the paper's trace-based evaluation). Extensions are documented per-module.
+``repro.control.policy.drift_plus_penalty_action`` (Algorithm 1 — re-exported
+here via the lyapunov compatibility module), trace.fig2_experiment (the
+paper's trace-based evaluation). Extensions are documented per-module.
+
+Layering note: queueing and utility are leaf modules and import eagerly;
+lyapunov and trace sit ON TOP of the unified control plane (repro.control),
+so they are exposed lazily (PEP 562) to keep core's leaves importable from
+inside repro.control without a cycle.
 """
-from repro.core.lyapunov import (
-    LyapunovController,
-    VirtualQueue,
-    distributed_action,
-    drift_plus_penalty_action,
-)
+import importlib
+
 from repro.core.queueing import (
     QueueState,
     ServiceProcess,
@@ -17,8 +19,17 @@ from repro.core.queueing import (
     queue_update,
     simulate_queue,
 )
-from repro.core.trace import Fig2Config, fig2_experiment, summarize
 from repro.core.utility import Utility, paper_utility
+
+_LAZY = {
+    "LyapunovController": "repro.core.lyapunov",
+    "VirtualQueue": "repro.core.lyapunov",
+    "distributed_action": "repro.core.lyapunov",
+    "drift_plus_penalty_action": "repro.core.lyapunov",
+    "Fig2Config": "repro.core.trace",
+    "fig2_experiment": "repro.core.trace",
+    "summarize": "repro.core.trace",
+}
 
 __all__ = [
     "LyapunovController",
@@ -36,3 +47,9 @@ __all__ = [
     "Utility",
     "paper_utility",
 ]
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

@@ -1,97 +1,46 @@
-"""Drift-plus-penalty rate control (the paper's Algorithm 1) and extensions.
+"""Compatibility surface over the unified control plane (repro.control).
 
-Faithful core
--------------
-``drift_plus_penalty_action`` implements the paper's per-slot decision
-
-    f*(t) = argmax_{f in F} { V * S(f) - Q(t) * lambda(f) }
-
-exactly: it evaluates the drift-plus-penalty functional over the finite
-action set F and returns the maximizer. It is a pure function of
-(Q, F, S(F), lambda(F), V), written with jnp ops only, so it is jit-able,
-vmap-able (multi-tenant control = leading axis on Q), and usable inside
-lax.scan (the closed-loop simulator) and shard_map (distributed control).
-
-Ties are broken toward the *lowest* rate (conservative), matching the paper's
-Algorithm 1 which takes ``>=`` and scans F in increasing order — the last
-maximizer wins there; we pick argmax over T with first-wins on the reversed
-order to get identical behavior for strictly-increasing S.
-
-Extensions (beyond the paper, see DESIGN.md §2)
------------------------------------------------
-* ``VirtualQueue`` — time-average constraint queues (latency, energy): the
-  standard Neely construction Z(t+1) = max(Z(t) + y(t) - budget, 0); the
-  controller adds  - Z(t) * y(f)  to the functional.
-* ``LyapunovController`` — stateful wrapper bundling action set, utility,
-  arrival map, V, and optional virtual queues; exposes ``act`` (one slot) and
-  ``run`` (closed-loop lax.scan rollout against a service process).
-* ``distributed_action`` — per-pod queues with global drift: each pod runs
-  Algorithm 1 against the *mean* backlog over the ``pod`` axis (a pmean),
-  which stabilizes the aggregate queue while keeping the decision local.
+The paper's Algorithm 1 has exactly ONE implementation:
+``repro.control.policy.drift_plus_penalty_action``, consumed through the
+``Policy`` protocol (see DESIGN.md §2). This module re-exports it — plus
+``VirtualQueue`` and ``distributed_action`` — under their historical names,
+and keeps ``LyapunovController`` as a thin bundle of (policy, closed-loop
+rollout) for callers that want the one-object API.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.queueing import QueueState, ServiceProcess, bounded_queue_step
+from repro.control.distributed import distributed_action
+from repro.control.policy import (
+    DriftPlusPenalty,
+    LatencyAware,
+    Policy,
+    VirtualQueue,
+    drift_plus_penalty_action,
+)
+from repro.control.rollout import closed_loop
+from repro.core.queueing import ServiceProcess
 from repro.core.utility import Utility
 
-
-def drift_plus_penalty_action(
-    backlog: jax.Array,
-    rates: jax.Array,
-    utilities: jax.Array,
-    arrivals: jax.Array,
-    V: float | jax.Array,
-    extra_penalty: jax.Array | None = None,
-) -> tuple[jax.Array, jax.Array]:
-    """The paper's Algorithm 1, lines 3-7, for one observation of Q(t).
-
-    Args:
-      backlog:   Q(t), scalar or batched (leading axes broadcast against F).
-      rates:     the action set F, shape (A,).
-      utilities: S(f) for f in F, shape (A,).
-      arrivals:  lambda(f) for f in F, shape (A,).
-      V:         utility/stability trade-off.
-      extra_penalty: optional additional per-action penalty, shape
-        broadcastable to backlog[..., None] * arrivals — used by virtual
-        queues (latency/energy constraints).
-
-    Returns:
-      (f_star, T_star): chosen rate and the achieved functional value,
-      shapes = backlog's shape.
-    """
-    backlog = jnp.asarray(backlog, jnp.float32)
-    T = V * utilities - backlog[..., None] * arrivals
-    if extra_penalty is not None:
-        T = T - extra_penalty
-    idx = jnp.argmax(T, axis=-1)  # first maximizer = lowest rate on ties
-    f_star = jnp.take(rates, idx)
-    T_star = jnp.take_along_axis(T, idx[..., None], axis=-1)[..., 0]
-    return f_star, T_star
-
-
-class VirtualQueue(NamedTuple):
-    """Neely virtual queue for a time-average constraint E[y] <= budget."""
-
-    value: jax.Array
-    budget: jax.Array
-
-    @staticmethod
-    def make(budget: float, shape=()) -> "VirtualQueue":
-        return VirtualQueue(jnp.zeros(shape, jnp.float32), jnp.asarray(budget, jnp.float32))
-
-    def step(self, y: jax.Array) -> "VirtualQueue":
-        return VirtualQueue(jnp.maximum(self.value + y - self.budget, 0.0), self.budget)
+__all__ = [
+    "LyapunovController",
+    "VirtualQueue",
+    "distributed_action",
+    "drift_plus_penalty_action",
+]
 
 
 @dataclasses.dataclass(frozen=True)
 class LyapunovController:
     """Bundled Algorithm-1 controller over a discrete rate set.
+
+    A convenience wrapper: ``policy()`` yields the underlying Policy
+    (``DriftPlusPenalty``, or ``LatencyAware`` when a cost budget is set),
+    ``act`` evaluates one slot, ``run`` delegates to the shared closed-loop
+    rollout in ``repro.control.rollout``.
 
     arrival_map(f) -> lambda(f): expected arrivals per slot at rate f. The
     paper's setting has lambda(f) = f (each sampled frame enters the queue);
@@ -106,16 +55,25 @@ class LyapunovController:
     cost_gain: float = 0.0
     cost_budget: float = 0.0
 
+    def policy(self) -> Policy:
+        if self.cost_gain > 0.0:
+            return LatencyAware(
+                rates=self.rates, V=self.V, utility=self.utility,
+                arrival_gain=self.arrival_gain, cost_gain=self.cost_gain,
+                cost_budget=self.cost_budget,
+            )
+        return DriftPlusPenalty(
+            rates=self.rates, V=self.V, utility=self.utility,
+            arrival_gain=self.arrival_gain,
+        )
+
     def tables(self):
-        f = jnp.asarray(self.rates, jnp.float32)
-        return f, self.utility(f), self.arrival_gain * f
+        return self.policy().tables()
 
     def act(self, backlog: jax.Array, vq: VirtualQueue | None = None) -> jax.Array:
-        f, s, lam = self.tables()
-        extra = None
-        if vq is not None and self.cost_gain > 0.0:
-            extra = vq.value[..., None] * (self.cost_gain * f)
-        f_star, _ = drift_plus_penalty_action(backlog, f, s, lam, self.V, extra)
+        policy = self.policy()
+        carry = vq if vq is not None else policy.init()
+        f_star, _ = policy.act(carry, backlog)
         return f_star
 
     def run(
@@ -123,7 +81,7 @@ class LyapunovController:
         service: ServiceProcess,
         horizon: int,
         key: jax.Array,
-        capacity: float = jnp.inf,
+        capacity: float = float("inf"),
         stochastic_arrivals: bool = False,
     ) -> dict:
         """Closed-loop rollout: observe Q -> Alg.1 -> arrivals -> queue step.
@@ -131,59 +89,8 @@ class LyapunovController:
         Returns a trace dict of per-slot {backlog, rate, utility, service}.
         Pure function of (key, horizon); jit-able via partial static horizon.
         """
-        f_tab, s_tab, lam_tab = self.tables()
-        use_vq = self.cost_gain > 0.0
-
-        def body(carry, t):
-            qstate, vq, svc_state = carry
-            k = jax.random.fold_in(key, t)
-            k_svc, k_arr = jax.random.split(k)
-            extra = vq.value[..., None] * (self.cost_gain * f_tab) if use_vq else None
-            f_star, _ = drift_plus_penalty_action(
-                qstate.backlog, f_tab, s_tab, lam_tab, self.V, extra
-            )
-            lam = self.arrival_gain * f_star
-            if stochastic_arrivals:
-                lam = jax.random.poisson(k_arr, lam).astype(jnp.float32)
-            mu, svc_state = service.sample(k_svc, svc_state)
-            qstate = bounded_queue_step(qstate, mu, lam, capacity)
-            vq = vq.step(self.cost_gain * f_star) if use_vq else vq
-            out = {
-                "backlog": qstate.backlog,
-                "rate": f_star,
-                "utility": self.utility(f_star),
-                "service": mu,
-                "vq": vq.value,
-            }
-            return (qstate, vq, svc_state), out
-
-        init = (
-            QueueState.zeros(),
-            VirtualQueue.make(self.cost_budget),
-            service.init_state(),
+        return closed_loop(
+            self.policy(), service, horizon, key,
+            capacity=capacity, stochastic_arrivals=stochastic_arrivals,
+            utility=self.utility,
         )
-        (final, _, _), trace = jax.lax.scan(body, init, jnp.arange(horizon))
-        trace["final"] = final
-        return trace
-
-
-def distributed_action(
-    local_backlog: jax.Array,
-    rates: jax.Array,
-    utilities: jax.Array,
-    arrivals: jax.Array,
-    V: float,
-    axis_name: str,
-    mix: float = 0.5,
-) -> jax.Array:
-    """Per-pod Algorithm 1 against a blend of local and global backlog.
-
-    Intended to run inside shard_map with ``axis_name`` mapped over pods:
-    each pod observes its own queue but penalizes arrivals by
-    mix*Q_local + (1-mix)*mean_pods(Q) so pods with slack absorb load while
-    the aggregate stays stable. mix=1 recovers fully-local control.
-    """
-    global_backlog = jax.lax.pmean(local_backlog, axis_name)
-    blended = mix * local_backlog + (1.0 - mix) * global_backlog
-    f_star, _ = drift_plus_penalty_action(blended, rates, utilities, arrivals, V)
-    return f_star

@@ -23,8 +23,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.lyapunov import LyapunovController, drift_plus_penalty_action
-from repro.core.queueing import QueueState, ServiceProcess, bounded_queue_step
+from repro.control import DriftPlusPenalty, Policy, Static, rollout
+from repro.core.queueing import ServiceProcess
 from repro.core.utility import Utility, paper_utility
 
 
@@ -58,15 +58,14 @@ def make_service_trace(cfg: Fig2Config) -> jax.Array:
     return mus
 
 
+def rollout_policy(policy: Policy, mus: jax.Array, capacity: float = jnp.inf) -> dict:
+    """Any Policy against a shared service trace (the unified entry point)."""
+    return rollout(policy, mus, capacity=capacity)
+
+
 def rollout_fixed(mus: jax.Array, f: float, capacity: float = jnp.inf) -> dict:
     """Fixed-rate policy against a service trace."""
-
-    def body(state, mu):
-        state = bounded_queue_step(state, mu, jnp.asarray(f, jnp.float32), capacity)
-        return state, state.backlog
-
-    final, backlog = jax.lax.scan(body, QueueState.zeros(), mus)
-    return {"backlog": backlog, "rate": jnp.full_like(backlog, f), "final": final}
+    return rollout(Static(rate=float(f)), mus, capacity=capacity)
 
 
 def rollout_controller(
@@ -76,20 +75,16 @@ def rollout_controller(
     utility: Utility | None = None,
     capacity: float = jnp.inf,
 ) -> dict:
-    """Algorithm 1 closed-loop against the same service trace."""
+    """Algorithm 1 closed-loop against the same service trace.
+
+    lambda(f) = f (arrival_gain 1): every sampled frame enters the queue.
+    """
     utility = utility or paper_utility(cfg.f_max)
-    f_tab = jnp.arange(1, cfg.n_rates + 1, dtype=jnp.float32)
-    s_tab = utility(f_tab)
-    lam_tab = f_tab  # lambda(f) = f : every sampled frame enters the queue
-
-    def body(state, mu):
-        f_star, _ = drift_plus_penalty_action(state.backlog, f_tab, s_tab, lam_tab, V)
-        state = bounded_queue_step(state, mu, f_star, capacity)
-        return state, {"backlog": state.backlog, "rate": f_star}
-
-    final, trace = jax.lax.scan(body, QueueState.zeros(), mus)
-    trace["final"] = final
-    return trace
+    policy = DriftPlusPenalty(
+        rates=tuple(float(x) for x in range(1, cfg.n_rates + 1)),
+        V=float(V), utility=utility,
+    )
+    return rollout(policy, mus, capacity=capacity)
 
 
 @partial(jax.jit, static_argnames=("cfg",))

@@ -1,10 +1,12 @@
-"""Serving launcher: model + engine + Lyapunov admission control.
+"""Serving launcher: model + engine + Policy-driven admission control.
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke \
       --horizon 40 --policy adaptive
 
-``--policy static --rate 5`` runs the paper's fixed-rate baseline for
-comparison; ``--report`` prints the queue/latency trace summary.
+``--policy static --rate 5`` runs the paper's fixed-rate baseline;
+``--policy latency-aware`` adds a virtual-queue cost budget on the sampling
+rate. ``--legacy-loop`` switches the engine off the fused (1 prefill +
+1 decode dispatch per slot) path for before/after comparison.
 """
 from __future__ import annotations
 
@@ -15,15 +17,22 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import init_params
+from repro.control import LatencyAware
 from repro.runtime import (AdaptiveScheduler, Engine, EngineConfig,
-                           RequestSource, StaticScheduler, latency_stats, serve)
+                           PolicyScheduler, RequestSource, StaticScheduler,
+                           latency_stats, serve)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--policy", choices=["adaptive", "static"], default="adaptive")
+    ap.add_argument("--policy", choices=["adaptive", "static", "latency-aware"],
+                    default="adaptive")
+    ap.add_argument("--cost-budget", type=float, default=4.0,
+                    help="latency-aware: time-average rate budget")
+    ap.add_argument("--legacy-loop", action="store_true",
+                    help="per-step loop (k prefills + n decode dispatches)")
     ap.add_argument("--rate", type=float, default=5.0, help="static policy rate")
     ap.add_argument("--V", type=float, default=20.0)
     ap.add_argument("--raw-rate", type=int, default=5)
@@ -38,19 +47,25 @@ def main():
     params = init_params(jax.random.PRNGKey(0), cfg)
     engine = Engine(cfg, params, EngineConfig(
         batch_slots=args.slots, prompt_len=args.prompt_len, cache_len=args.cache_len))
+    rates = tuple(float(f) for f in range(1, args.raw_rate + 1))
     if args.policy == "adaptive":
-        sched = AdaptiveScheduler(
-            rates=tuple(float(f) for f in range(1, args.raw_rate + 1)),
-            V=args.V, capacity=args.capacity)
+        sched = AdaptiveScheduler(rates=rates, V=args.V, capacity=args.capacity)
+    elif args.policy == "latency-aware":
+        sched = PolicyScheduler(
+            policy=LatencyAware(rates=rates, V=args.V, cost_gain=1.0,
+                                cost_budget=args.cost_budget),
+            capacity=args.capacity)
     else:
         sched = StaticScheduler(rate=args.rate, capacity=args.capacity)
     src = RequestSource(vocab_size=cfg.vocab_size, prompt_len=args.prompt_len,
                         raw_rate=args.raw_rate, max_new_tokens=4)
-    tr = serve(engine, sched, src, horizon=args.horizon, steps_per_slot=2)
+    tr = serve(engine, sched, src, horizon=args.horizon, steps_per_slot=2,
+               fused=not args.legacy_loop)
     print(f"policy={args.policy} served={int(tr['served'].sum())} "
           f"dropped={sched.dropped} "
           f"tail_backlog={float(tr['backlog'][-5:].mean()):.1f} "
-          f"mean_rate={float(np.mean(sched.rate_history)):.2f}")
+          f"mean_rate={float(np.mean(sched.rate_history)):.2f} "
+          f"dispatches_per_slot={float(tr['dispatches'].mean()):.2f}")
     print("latency:", latency_stats(engine))
 
 

@@ -1,6 +1,10 @@
 from repro.runtime.engine import Engine, EngineConfig
 from repro.runtime.request import Request, RequestSource
-from repro.runtime.scheduler import AdaptiveScheduler, StaticScheduler
+from repro.runtime.scheduler import (
+    AdaptiveScheduler,
+    PolicyScheduler,
+    StaticScheduler,
+)
 from repro.runtime.server import latency_stats, serve
 
 __all__ = [
@@ -9,6 +13,7 @@ __all__ = [
     "Request",
     "RequestSource",
     "AdaptiveScheduler",
+    "PolicyScheduler",
     "StaticScheduler",
     "latency_stats",
     "serve",

@@ -1,19 +1,24 @@
 """Continuous-batching inference engine.
 
 Fixed decode slots (batch dimension B). Each slot holds one in-flight
-request's KV/recurrent cache row. Per engine step:
+request's KV/recurrent cache row. Per control slot (``step_slot``):
 
-  1. fill free slots: pop pending requests, run bucketed prefill (batch 1,
-     fixed prompt_len), splice the new cache row into the batch cache at the
-     slot index (pure jit'd dynamic-update on axis 1 — caches are stacked
-     (layers, B, ...)),
-  2. one fused decode step over all B slots (inactive slots compute but are
-     masked out — the standard continuous-batching trade),
+  1. batched admission: pop up to k pending requests for the k free slots,
+     run ONE bucketed prefill of batch k (fixed prompt_len), and splice all
+     k new cache rows into the batch cache with one jitted scatter on the
+     slot axis — replacing k sequential batch-1 prefill+splice dispatches,
+  2. fused decode: ``n_steps`` decode steps run inside a single jit'd
+     lax.scan over all B slots (inactive slots compute but are masked out —
+     the standard continuous-batching trade), returning per-step sampled
+     tokens so the host can attribute service mu(t) to individual steps,
   3. retire finished requests (max_new_tokens reached), freeing slots.
 
-The engine reports per-step service counts — the mu(t) the Lyapunov
-controller observes. Model-agnostic: works for every registered arch via
-the Model API (prefill/decode_step).
+So one control slot costs <= 1 prefill + 1 decode jit dispatch (tracked in
+``prefill_dispatches`` / ``decode_dispatches``), where the legacy per-step
+path (``step``, kept for equivalence tests and the before/after benchmark)
+costs k prefills + n_steps decodes. The engine reports per-step service
+counts — the mu(t) the Lyapunov controller observes. Model-agnostic: works
+for every registered arch via the Model API (prefill/decode_step).
 """
 from __future__ import annotations
 
@@ -65,6 +70,17 @@ class Engine:
                                           shape_window=ecfg.shape_window)
             return _sample(logits, key), state
 
+        def _decode_n(params, state, toks, key, n):
+            """n fused decode steps; returns per-step tokens (n, B)."""
+
+            def body(carry, i):
+                toks, state = carry
+                nxt, state = _decode(params, state, toks, jax.random.fold_in(key, i))
+                return (nxt, state), nxt
+
+            (_, state), outs = jax.lax.scan(body, (toks, state), jnp.arange(n))
+            return outs, state
+
         def _splice(state, one, slot):
             """Insert batch-1 prefill state into batch state at slot."""
             caches = jax.tree.map(
@@ -79,9 +95,28 @@ class Engine:
                 last_tok=state.last_tok.at[slot].set(one.last_tok[0]),
             )
 
+        def _splice_many(state, new, slots):
+            """Insert prefill rows at the given slot indices (one scatter).
+
+            Pad rows carry an out-of-range slot index; mode="drop" discards
+            them, so the bucketed batch-B prefill can splice any k <= B rows
+            with a single fixed-shape executable.
+            """
+            caches = jax.tree.map(
+                lambda big, nw: big.at[:, slots].set(nw, mode="drop"),
+                state.caches, new.caches,
+            )
+            return M.DecodeState(
+                caches=caches,
+                pos=state.pos.at[slots].set(new.pos, mode="drop"),
+                last_tok=state.last_tok.at[slots].set(new.last_tok, mode="drop"),
+            )
+
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
+        self._decode_n = jax.jit(_decode_n, static_argnames=("n",))
         self._splice = jax.jit(_splice, static_argnames=("slot",))
+        self._splice_many = jax.jit(_splice_many)
 
         # boot: empty batch state from a dummy prefill over the whole batch
         boot = {"tokens": jnp.zeros((B, P), jnp.int32), **self.extra}
@@ -93,6 +128,8 @@ class Engine:
         self.slot_age = np.zeros(B, np.int32)
         self.steps = 0
         self.served_history: list = []
+        self.prefill_dispatches = 0   # excludes the boot prefill
+        self.decode_dispatches = 0
 
     # ------------------------------------------------------------------
     def queue_len(self) -> int:
@@ -104,25 +141,71 @@ class Engine:
     def free_slots(self) -> list:
         return [i for i, r in enumerate(self.active) if r is None]
 
-    def _admit_one(self, req: Request, slot: int, now: int) -> None:
-        toks = np.asarray(req.tokens[: self.ecfg.prompt_len], np.int32)
+    def _bucket(self, tokens) -> np.ndarray:
+        toks = np.asarray(tokens[: self.ecfg.prompt_len], np.int32)
         if len(toks) < self.ecfg.prompt_len:  # bucketed prefill: pad by cycling
             toks = np.resize(toks, self.ecfg.prompt_len)
-        batch = {"tokens": jnp.asarray(toks)[None, :], **_slice_extra(self.extra, 1)}
+        return toks
+
+    def _admit_one(self, req: Request, slot: int, now: int) -> None:
+        """Legacy batch-1 admission (the fused path's equivalence oracle)."""
+        batch = {"tokens": jnp.asarray(self._bucket(req.tokens))[None, :],
+                 **_slice_extra(self.extra, 1)}
         logits, one = self._prefill(self.params, batch)
+        self.prefill_dispatches += 1
         self.state = self._splice(self.state, one, slot)
         req.start_slot = now
         req.generated = [int(jnp.argmax(logits[0]))]
         self.active[slot] = req
         self.slot_age[slot] = 1  # first token came from prefill
 
+    def admit_pending(self, now: int) -> int:
+        """Fill all free slots from the pending queue with ONE prefill.
+
+        k requests -> one bucketed prefill + one scatter splice, instead of
+        k (prefill + splice) dispatches. The prefill batch is padded to the
+        full batch_slots bucket so every admission reuses the boot prefill
+        executable (no per-k recompiles); pad rows are dropped by the
+        splice's out-of-range slot index. Returns k.
+        """
+        B, P = self.ecfg.batch_slots, self.ecfg.prompt_len
+        slots = self.free_slots()[: len(self.pending)]
+        if not slots:
+            return 0
+        reqs = [self.pending.pop(0) for _ in slots]
+        k = len(reqs)
+        toks = np.zeros((B, P), np.int32)
+        for j, r in enumerate(reqs):
+            toks[j] = self._bucket(r.tokens)
+        slot_idx = np.full(B, B, np.int32)  # B = out of range -> scatter drops
+        slot_idx[:k] = slots
+        batch = {"tokens": jnp.asarray(toks), **self.extra}
+        logits, new = self._prefill(self.params, batch)
+        self.prefill_dispatches += 1
+        self.state = self._splice_many(self.state, new, jnp.asarray(slot_idx))
+        first = np.asarray(jnp.argmax(logits[:k], axis=-1))
+        for j, (req, slot) in enumerate(zip(reqs, slots)):
+            req.start_slot = now
+            req.generated = [int(first[j])]
+            self.active[slot] = req
+            self.slot_age[slot] = 1  # first token came from prefill
+        return k
+
     def step(self, now: int) -> dict:
-        """One engine slot: admit -> decode -> retire. Returns metrics."""
+        """Legacy engine slot: admit one-by-one -> one decode -> retire."""
         for slot in self.free_slots():
             if not self.pending:
                 break
             self._admit_one(self.pending.pop(0), slot, now)
 
+        served = 0  # finishers THIS call (finish_slot alone double-counts
+        #             when the serve loop reuses `now` across engine steps)
+        for i, r in enumerate(self.active):  # already complete (prefill
+            if r is not None and self.slot_age[i] >= r.max_new_tokens:
+                r.finish_slot = now          # covered max_new_tokens<=1)
+                self.finished.append(r)
+                self.active[i] = None
+                served += 1
         n_active = sum(r is not None for r in self.active)
         if n_active:
             toks = jnp.asarray(
@@ -130,6 +213,7 @@ class Engine:
             )
             self._key, sub = jax.random.split(self._key)
             nxt, self.state = self._decode(self.params, self.state, toks, sub)
+            self.decode_dispatches += 1
             nxt = np.asarray(nxt)
             for i, r in enumerate(self.active):
                 if r is None:
@@ -140,14 +224,60 @@ class Engine:
                     r.finish_slot = now
                     self.finished.append(r)
                     self.active[i] = None
+                    served += 1
 
-        served = len([r for r in self.finished if r.finish_slot == now])
         self.served_history.append(served)
         self.steps += 1
         return {
             "active": n_active,
             "queue": len(self.pending),
             "served": served,
+            "finished_total": len(self.finished),
+        }
+
+    def step_slot(self, now: int, n_steps: int = 1) -> dict:
+        """One control slot, fused: batched admit -> scan decode -> retire.
+
+        Issues at most 1 prefill + 1 decode jit dispatch regardless of how
+        many requests are admitted or how many decode steps run. A slot
+        whose request finishes mid-scan keeps decoding (masked — its extra
+        tokens are discarded on the host), so per-step served counts mu(t)
+        match what the legacy per-step loop would observe; the one semantic
+        difference is that admission happens only at slot boundaries.
+        """
+        admitted = self.admit_pending(now)
+        n_active = sum(r is not None for r in self.active)
+        per_step = [0] * n_steps
+        if n_active:
+            toks = jnp.asarray(
+                [r.generated[-1] if r else 0 for r in self.active], jnp.int32
+            )
+            self._key, sub = jax.random.split(self._key)
+            all_toks, self.state = self._decode_n(
+                self.params, self.state, toks, sub, n=n_steps
+            )
+            self.decode_dispatches += 1
+            all_toks = np.asarray(all_toks)  # (n_steps, B)
+            for i, r in enumerate(self.active):
+                if r is None:
+                    continue
+                take = int(min(n_steps, r.max_new_tokens - self.slot_age[i]))
+                r.generated.extend(int(x) for x in all_toks[:take, i])
+                self.slot_age[i] += take
+                if self.slot_age[i] >= r.max_new_tokens:
+                    r.finish_slot = now
+                    self.finished.append(r)
+                    per_step[max(take - 1, 0)] += 1
+                    self.active[i] = None
+        served = sum(per_step)
+        self.served_history.append(served)
+        self.steps += n_steps
+        return {
+            "active": n_active,
+            "queue": len(self.pending),
+            "served": served,
+            "served_per_step": per_step,
+            "admitted": admitted,
             "finished_total": len(self.finished),
         }
 

@@ -1,44 +1,115 @@
-"""Lyapunov admission scheduler — the paper's Algorithm 1 driving the engine.
+"""Policy-driven admission scheduler — the control plane meeting the engine.
 
-Each control slot the scheduler observes the engine's backlog Q(t) (pending
-requests), evaluates f* = argmax_f { V*S(f) - Q(t)*lambda(f) } over the
-discrete sampling-rate set, and tells the request source to sample at f*.
-The queue is bounded (capacity) so sustained mis-control shows up as drops —
-exactly the paper's reliability failure. A static scheduler (fixed rate) is
-provided as the paper's baseline comparison.
+``PolicyScheduler`` consumes any ``repro.control.Policy``: each control slot
+it observes the engine's backlog Q(t) (pending requests), evaluates the
+policy (for ``DriftPlusPenalty`` that is the paper's Algorithm 1,
+f* = argmax_f { V*S(f) - Q(t)*lambda(f) }), and tells the request source to
+sample at f*. The queue is bounded (capacity) so sustained mis-control shows
+up as drops — exactly the paper's reliability failure.
+
+Hot-path note: the per-slot decision is ONE module-level jitted function
+over device-resident tables (F, S(F), lambda(F) are uploaded once per
+scheduler and passed as arrays). Because the jit cache keys on shapes, every
+scheduler instance with the same action-set size shares a single compile —
+constructing schedulers in a loop (sweeps, tests) never re-traces.
+
+``AdaptiveScheduler`` / ``StaticScheduler`` are the historical names, kept
+as thin constructors over ``PolicyScheduler``.
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.lyapunov import drift_plus_penalty_action
+from repro.control import DriftPlusPenalty, LatencyAware, Policy, Static
+from repro.control.policy import drift_plus_penalty_action
 from repro.core.utility import Utility, paper_utility
+
+# trace counter for the no-retrace regression test: the body runs only when
+# jax traces (not on cached calls), so this counts compiles, not calls.
+_TRACE_COUNT = {"n": 0}
+
+
+@jax.jit
+def _act_on_tables(backlog, f_tab, s_tab, lam_tab, V, vq_value, cost_tab):
+    """Shared Algorithm-1 dispatch over device-resident tables.
+
+    vq_value/cost_tab price an optional virtual-queue constraint
+    (zeros = unconstrained; the term vanishes).
+    """
+    _TRACE_COUNT["n"] += 1
+    extra = vq_value * cost_tab
+    f_star, _ = drift_plus_penalty_action(backlog, f_tab, s_tab, lam_tab, V, extra)
+    return f_star
+
+
+@partial(jax.jit, static_argnums=0)
+def _act_generic(policy, carry, backlog):
+    """Any user Policy, jitted with the (hashable) policy as a static arg.
+
+    Equal policy instances share one trace; unlike the table path, distinct
+    configurations (e.g. different V) each compile once.
+    """
+    return policy.act(carry, backlog)
+
+
+def trace_count() -> int:
+    return _TRACE_COUNT["n"]
 
 
 @dataclasses.dataclass
-class AdaptiveScheduler:
-    rates: tuple = tuple(float(f) for f in range(1, 11))
-    V: float = 50.0
-    utility: Optional[Utility] = None
+class PolicyScheduler:
+    """Admission control for the engine, driven by any Policy."""
+
+    policy: Policy = None  # type: ignore[assignment]
     capacity: int = 256
 
     def __post_init__(self):
-        self.utility = self.utility or paper_utility(max(self.rates))
-        f = jnp.asarray(self.rates, jnp.float32)
-        self._tables = (f, self.utility(f), f)
-        self._act = jax.jit(
-            lambda q: drift_plus_penalty_action(q, *self._tables, self.V)[0]
-        )
+        if self.policy is None:
+            self.policy = DriftPlusPenalty(
+                rates=tuple(float(f) for f in range(1, 11)), V=50.0
+            )
+        self._static_rate = self.policy.rate if isinstance(self.policy, Static) else None
+        # The in-repo table policies go through one module-wide jitted action
+        # over device-resident tables (same table shapes => same compile, so
+        # sweeps over V never re-trace). Anything else that satisfies the
+        # Policy protocol runs its own act() via the shared static-arg jit.
+        self._table_path = type(self.policy) in (DriftPlusPenalty, LatencyAware)
+        if self._table_path:
+            f, s, lam = self.policy.tables()
+            self._f_tab = jax.device_put(f)
+            self._s_tab = jax.device_put(s)
+            self._lam_tab = jax.device_put(lam)
+            self._V = jax.device_put(jnp.float32(self.policy.V))
+            cost_gain = getattr(self.policy, "cost_gain", 0.0)
+            self._cost_tab = jax.device_put(
+                jnp.float32(cost_gain) * f if cost_gain else jnp.zeros_like(f)
+            )
+        self._carry = self.policy.init()
         self.dropped = 0
         self.rate_history: list = []
 
     def control(self, backlog: int) -> float:
-        f = float(self._act(jnp.asarray(backlog, jnp.float32)))
+        if self._static_rate is not None:  # no device round-trip for baselines
+            f = float(self._static_rate)
+        elif self._table_path:
+            vq = getattr(self._carry, "value", jnp.float32(0.0))
+            f_star = _act_on_tables(
+                jnp.asarray(backlog, jnp.float32), self._f_tab, self._s_tab,
+                self._lam_tab, self._V, vq, self._cost_tab,
+            )
+            if hasattr(self._carry, "step"):  # advance the virtual queue
+                self._carry = self._carry.step(self.policy.cost_gain * f_star)
+            f = float(f_star)
+        else:
+            f_star, self._carry = _act_generic(
+                self.policy, self._carry, jnp.asarray(backlog, jnp.float32)
+            )
+            f = float(f_star)
         self.rate_history.append(f)
         return f
 
@@ -52,26 +123,20 @@ class AdaptiveScheduler:
         return admitted
 
 
-@dataclasses.dataclass
-class StaticScheduler:
+def AdaptiveScheduler(
+    rates: tuple = tuple(float(f) for f in range(1, 11)),
+    V: float = 50.0,
+    utility: Optional[Utility] = None,
+    capacity: int = 256,
+) -> PolicyScheduler:
+    """Algorithm-1 scheduler (historical constructor)."""
+    policy = DriftPlusPenalty(
+        rates=tuple(float(f) for f in rates), V=V,
+        utility=utility or paper_utility(max(rates)),
+    )
+    return PolicyScheduler(policy=policy, capacity=capacity)
+
+
+def StaticScheduler(rate: float = 10.0, capacity: int = 256) -> PolicyScheduler:
     """Paper baseline: fixed sampling rate, no queue awareness."""
-
-    rate: float = 10.0
-    capacity: int = 256
-
-    def __post_init__(self):
-        self.dropped = 0
-        self.rate_history: list = []
-
-    def control(self, backlog: int) -> float:
-        self.rate_history.append(self.rate)
-        return self.rate
-
-    def admit(self, engine, reqs: list, now: int) -> list:
-        room = max(self.capacity - engine.queue_len(), 0)
-        admitted = reqs[:room]
-        self.dropped += len(reqs) - len(admitted)
-        for r in admitted:
-            r.admit_slot = now
-        engine.submit(admitted)
-        return admitted
+    return PolicyScheduler(policy=Static(rate=float(rate)), capacity=capacity)

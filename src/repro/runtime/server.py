@@ -1,14 +1,17 @@
-"""Slot-time serve loop: source -> scheduler (Alg. 1) -> engine.
+"""Slot-time serve loop: source -> scheduler (Policy) -> engine.
 
-``serve`` runs T control slots. Each slot: the scheduler picks the sampling
-rate from the current backlog, the source yields that many requests, the
-engine runs ``steps_per_slot`` decode steps (its service capacity). Returns
-a trace for analysis/plots — the serving-system analogue of the paper's
-Fig. 2, but with a *real* model in the loop instead of a simulated service.
+``serve`` runs T control slots. Each slot: the scheduler evaluates its
+Policy on the current backlog, the source yields that many requests, the
+engine runs ``steps_per_slot`` decode steps (its service capacity). With the
+default fused path each slot costs at most one prefill dispatch (batched
+admission of every free slot) plus one decode dispatch (``steps_per_slot``
+steps fused in a lax.scan); ``fused=False`` keeps the legacy per-step loop
+(k batch-1 prefills + steps_per_slot decode dispatches) for before/after
+benchmarking. Returns a trace for analysis/plots — the serving-system
+analogue of the paper's Fig. 2, but with a *real* model in the loop instead
+of a simulated service.
 """
 from __future__ import annotations
-
-import dataclasses
 
 import numpy as np
 
@@ -17,21 +20,30 @@ from repro.runtime.request import RequestSource
 
 
 def serve(engine: Engine, scheduler, source: RequestSource, *,
-          horizon: int, steps_per_slot: int = 2) -> dict:
-    trace = {"backlog": [], "rate": [], "served": [], "active": [], "dropped": []}
+          horizon: int, steps_per_slot: int = 2, fused: bool = True) -> dict:
+    trace = {"backlog": [], "rate": [], "served": [], "active": [],
+             "dropped": [], "dispatches": []}
     for t in range(horizon):
+        d0 = engine.prefill_dispatches + engine.decode_dispatches
         rate = scheduler.control(engine.queue_len())
         reqs = source.poll(t, rate)
         scheduler.admit(engine, reqs, t)
-        served = 0
-        for _ in range(steps_per_slot):
-            m = engine.step(t)
-            served += m["served"]
+        if fused:
+            m = engine.step_slot(t, n_steps=steps_per_slot)
+            served = m["served"]
+        else:
+            served = 0
+            for _ in range(steps_per_slot):
+                m = engine.step(t)
+                served += m["served"]
         trace["backlog"].append(engine.queue_len())
         trace["rate"].append(rate)
         trace["served"].append(served)
         trace["active"].append(m["active"])
         trace["dropped"].append(scheduler.dropped)
+        trace["dispatches"].append(
+            engine.prefill_dispatches + engine.decode_dispatches - d0
+        )
     return {k: np.asarray(v) for k, v in trace.items()}
 
 

@@ -1,0 +1,274 @@
+"""The unified control plane + batched/fused data plane.
+
+Covers the PR's contract:
+  * the Policy protocol (Static / DriftPlusPenalty / LatencyAware) drives
+    the trace simulator through one code path,
+  * the scheduler's jitted action compiles ONCE across instances and calls,
+  * batched admission (one bucketed prefill + scatter splice) is
+    bit-identical to k sequential batch-1 prefill+splice calls,
+  * fused multi-step decode matches sequential greedy decode over >= 8
+    steps, state included,
+  * the fused serve loop stays within 1 prefill + 1 decode dispatch per
+    control slot.
+"""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.control import (
+    DriftPlusPenalty,
+    LatencyAware,
+    Policy,
+    Static,
+    closed_loop,
+    multi_tenant_action,
+    rollout,
+)
+from repro.core.queueing import ServiceProcess
+from repro.core.utility import Utility, paper_utility
+from repro.models import init_params
+from repro.runtime import (
+    AdaptiveScheduler,
+    Engine,
+    EngineConfig,
+    PolicyScheduler,
+    RequestSource,
+    StaticScheduler,
+    serve,
+)
+from repro.runtime import scheduler as sched_mod
+
+KEY = jax.random.PRNGKey(0)
+RATES = tuple(float(f) for f in range(1, 11))
+
+
+# ----------------------------------------------------------------- policies
+def test_policies_satisfy_protocol():
+    for p in (Static(rate=3.0),
+              DriftPlusPenalty(rates=RATES, V=50.0),
+              LatencyAware(rates=RATES, V=50.0, cost_budget=4.0)):
+        assert isinstance(p, Policy)
+        carry = p.init()
+        f, carry = p.act(carry, jnp.float32(5.0))
+        assert float(f) in set(RATES) or isinstance(p, Static)
+        assert float(p.arrivals(f)) == pytest.approx(float(f))
+
+
+def test_policies_are_jit_static_and_vmap_safe():
+    p = DriftPlusPenalty(rates=RATES, V=50.0)
+    assert hash(p) == hash(DriftPlusPenalty(rates=RATES, V=50.0))
+    f = jax.jit(lambda q: p.act((), q)[0])(jnp.float32(3.0))
+    assert float(f) in set(RATES)
+    fs = p.act((), jnp.asarray([0.0, 5.0, 500.0]))[0]
+    assert fs.shape == (3,)
+    assert float(fs[0]) >= float(fs[2])
+
+
+def test_rollout_same_behavior_for_all_policies():
+    """One rollout entry point reproduces the Fig. 2 qualitative results."""
+    svc = ServiceProcess(kind="markov", rate=10.8, slow_rate=8.4, p_stay=0.9)
+    key = jax.random.PRNGKey(0)
+
+    def mk_trace():
+        def body(state, t):
+            mu, state = svc.sample(jax.random.fold_in(key, t), state)
+            return state, mu
+
+        return jax.lax.scan(body, svc.init_state(), jnp.arange(2000))[1]
+
+    mus = mk_trace()
+    tr_fast = rollout(Static(rate=10.0), mus)
+    tr_ctrl = rollout(DriftPlusPenalty(rates=RATES, V=100.0), mus)
+    tr_slow = rollout(Static(rate=1.0), mus)
+    assert float(tr_fast["backlog"][-1]) > 300.0          # diverges
+    assert float(jnp.max(tr_ctrl["backlog"])) < 120.0     # stable
+    assert float(tr_slow["backlog"][-1]) <= 1.5           # stable, wasteful
+    assert float(jnp.mean(tr_ctrl["rate"])) > 2.0         # but not starving
+
+
+def test_latency_aware_policy_meets_budget_in_closed_loop():
+    svc = ServiceProcess(kind="deterministic", rate=20.0)
+    p = LatencyAware(rates=RATES, V=100.0, cost_gain=1.0, cost_budget=4.0)
+    tr = closed_loop(p, svc, 4000, jax.random.PRNGKey(0))
+    assert float(jnp.mean(tr["rate"][-2000:])) <= 4.3
+    assert "vq" in tr  # virtual-queue trajectory surfaced in the trace
+
+
+def test_multi_tenant_action_heterogeneous():
+    rates = jnp.asarray(RATES)
+    utils = [Utility("linear", 10.0), Utility("log", 10.0)]
+    s_tabs = jnp.stack([u(rates) for u in utils])
+    f = multi_tenant_action(
+        jnp.asarray([0.0, 0.0]), rates, s_tabs, rates, jnp.asarray([150.0, 150.0])
+    )
+    assert f.shape == (2,)
+    # concave (log) tenant picks a lower-or-equal rate at equal backlog
+    assert float(f[1]) <= float(f[0])
+
+
+# ---------------------------------------------------------------- scheduler
+def test_scheduler_single_compile_across_instances_and_calls():
+    """Regression: repeated construction + control() must not re-trace."""
+    sch = AdaptiveScheduler(rates=RATES, V=50.0)
+    sch.control(0)  # ensure the shared action is traced once
+    n0 = sched_mod.trace_count()
+    for _ in range(3):
+        s = AdaptiveScheduler(rates=RATES, V=50.0)
+        for q in (0, 7, 1000):
+            s.control(q)
+    s2 = AdaptiveScheduler(rates=RATES, V=999.0)  # different V: same shapes
+    s2.control(5)
+    assert sched_mod.trace_count() == n0
+
+
+def test_scheduler_rate_responds_to_backlog_policy_api():
+    sch = PolicyScheduler(policy=DriftPlusPenalty(rates=RATES, V=50.0))
+    assert sch.control(0) == 10.0
+    assert sch.control(1000) == 1.0
+    st = StaticScheduler(rate=4.0)
+    assert st.control(0) == st.control(500) == 4.0
+
+
+def test_scheduler_accepts_any_custom_policy():
+    """PolicyScheduler must route unknown Policy impls through their own
+    act(), not assume Algorithm-1 tables."""
+    import dataclasses
+
+    @dataclasses.dataclass(frozen=True)
+    class Threshold:  # bang-bang: max rate under threshold, min above
+        lo: float = 1.0
+        hi: float = 8.0
+        threshold: float = 10.0
+
+        def init(self):
+            return ()
+
+        def act(self, carry, backlog):
+            f = jnp.where(backlog < self.threshold, self.hi, self.lo)
+            return jnp.asarray(f, jnp.float32), carry
+
+        def arrivals(self, f_star):
+            return f_star
+
+    sch = PolicyScheduler(policy=Threshold())
+    assert sch.control(0) == 8.0
+    assert sch.control(50) == 1.0
+    # scheduler matches the policy's own act, slot for slot
+    f_direct, _ = Threshold().act((), jnp.float32(3.0))
+    assert sch.control(3) == float(f_direct)
+
+
+def test_scheduler_latency_aware_matches_policy_act():
+    """The table fast-path must track LatencyAware.act exactly."""
+    p = LatencyAware(rates=RATES, V=100.0, cost_gain=1.0, cost_budget=4.0)
+    sch = PolicyScheduler(policy=p)
+    carry = p.init()
+    for q in (0.0, 2.0, 9.0, 30.0, 0.0, 0.0):
+        f_ref, carry = p.act(carry, jnp.float32(q))
+        assert sch.control(int(q)) == float(f_ref)
+
+
+# ------------------------------------------------------------- data plane
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("granite-3-2b", smoke=True)
+    params = init_params(KEY, cfg)
+    return cfg, params
+
+
+def _engine(cfg, params, **kw):
+    return Engine(cfg, params, EngineConfig(batch_slots=4, prompt_len=16,
+                                            cache_len=64, **kw))
+
+
+def _mk_reqs(cfg, n, max_new=12):
+    src = RequestSource(vocab_size=cfg.vocab_size, prompt_len=16,
+                        raw_rate=n, max_new_tokens=max_new, seed=7)
+    return src.poll(0, float(n))
+
+
+@pytest.mark.parametrize("k", [2, 4])
+def test_batched_admission_bit_identical(setup, k):
+    """One bucketed prefill of batch k == k sequential batch-1 admissions."""
+    cfg, params = setup
+    reqs = _mk_reqs(cfg, 4)[:k]
+    assert len(reqs) == k
+    eng_batch, eng_seq = _engine(cfg, params), _engine(cfg, params)
+    eng_batch.submit([copy.deepcopy(r) for r in reqs])
+    eng_seq.submit([copy.deepcopy(r) for r in reqs])
+
+    assert eng_batch.admit_pending(0) == k
+    assert eng_batch.prefill_dispatches == 1
+    for slot in eng_seq.free_slots():
+        if not eng_seq.pending:
+            break
+        eng_seq._admit_one(eng_seq.pending.pop(0), slot, 0)
+    assert eng_seq.prefill_dispatches == k
+
+    for a, b in zip(jax.tree.leaves(eng_batch.state), jax.tree.leaves(eng_seq.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    toks_b = [r.generated for r in eng_batch.active if r is not None]
+    toks_s = [r.generated for r in eng_seq.active if r is not None]
+    assert toks_b == toks_s
+
+
+def test_fused_decode_matches_sequential_greedy(setup):
+    """8 fused scan steps == 8 sequential decode dispatches, bit-identical."""
+    cfg, params = setup
+    reqs = _mk_reqs(cfg, 4)
+    eng = _engine(cfg, params)
+    eng.submit(reqs)
+    eng.admit_pending(0)
+    toks0 = jnp.asarray([r.generated[-1] for r in eng.active], jnp.int32)
+
+    fused_toks, fused_state = eng._decode_n(
+        eng.params, eng.state, toks0, jax.random.PRNGKey(1), n=8
+    )
+    seq, state, toks = [], eng.state, toks0
+    for _ in range(8):
+        toks, state = eng._decode(eng.params, state, toks, jax.random.PRNGKey(2))
+        seq.append(toks)
+    np.testing.assert_array_equal(np.asarray(fused_toks), np.asarray(jnp.stack(seq)))
+    for a, b in zip(jax.tree.leaves(fused_state), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("max_new", [1, 9])
+def test_step_slot_equals_legacy_greedy_generation(setup, max_new):
+    """Full engine paths agree on generated tokens when admission happens
+    once up front (no mid-slot refill to differ on). max_new=1 is the edge
+    where the prefill token alone completes the request — neither path may
+    generate past the limit."""
+    cfg, params = setup
+    reqs = _mk_reqs(cfg, 4, max_new=max_new)
+    eng_f, eng_l = _engine(cfg, params), _engine(cfg, params)
+    eng_f.submit([copy.deepcopy(r) for r in reqs])
+    eng_l.submit([copy.deepcopy(r) for r in reqs])
+    m = eng_f.step_slot(0, n_steps=8)
+    assert sum(m["served_per_step"]) == m["served"] == 4
+    for t in range(8):
+        eng_l.step(t)
+    gen_f = {r.rid: r.generated for r in eng_f.finished}
+    gen_l = {r.rid: r.generated for r in eng_l.finished}
+    assert gen_f == gen_l
+    assert all(len(g) == max_new for g in gen_f.values())
+
+
+def test_serve_fused_dispatch_budget(setup):
+    """<= 1 prefill + 1 decode jit dispatch per control slot."""
+    cfg, params = setup
+    eng = _engine(cfg, params)
+    sch = AdaptiveScheduler(rates=tuple(float(f) for f in range(1, 6)),
+                            V=20.0, capacity=32)
+    src = RequestSource(vocab_size=cfg.vocab_size, prompt_len=16, raw_rate=5,
+                        max_new_tokens=4)
+    horizon = 20
+    tr = serve(eng, sch, src, horizon=horizon, steps_per_slot=3, fused=True)
+    assert eng.prefill_dispatches <= horizon
+    assert eng.decode_dispatches <= horizon
+    assert int(tr["dispatches"].max()) <= 2
+    assert int(tr["served"].sum()) > 0

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.models.moe import expert_capacity, moe_ffn, moe_init
