@@ -54,7 +54,7 @@ def bench_queue_dynamics():
 
 def bench_v_sweep():
     """O(V) backlog / O(1/V) utility trade-off across V."""
-    from repro.core.lyapunov import LyapunovController
+    from repro.control import LyapunovController
     from repro.core.queueing import ServiceProcess
     from repro.core.utility import paper_utility
 
@@ -75,7 +75,7 @@ def bench_v_sweep():
 def bench_controller_overhead():
     """Cost of one Algorithm-1 decision (jitted) — the knob a real serving
     loop pays every control slot."""
-    from repro.core.lyapunov import drift_plus_penalty_action
+    from repro.control import drift_plus_penalty_action
 
     f = jnp.arange(1, 11, dtype=jnp.float32)
     s = f / 10.0
@@ -163,6 +163,64 @@ def bench_serve_fused_vs_legacy(quick=False):
     return us, derived
 
 
+def bench_paged_vs_dense_decode(quick=False):
+    """Paged vs dense KV cache at EQUAL memory (256 KV rows/layer each):
+    dense = 4 slots x 64 rows, paged = 16 pages x 16 rows shared. Short
+    requests (16-prompt + 8 new = <= 32 rows) strand 32 rows/slot on the
+    dense engine but hold only 2 pages on the paged one, so the paged
+    engine runs up to 8 requests in flight vs 4 — same workload, greedy,
+    and (asserted here) identical generated tokens. us_per_call = paged us
+    per control slot."""
+    import copy
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.runtime import (Engine, EngineConfig, PagedEngine,
+                               PagedEngineConfig, RequestSource)
+
+    cfg = get_config("granite-3-2b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_req = 8 if quick else 16
+    src = RequestSource(vocab_size=cfg.vocab_size, prompt_len=16, raw_rate=n_req,
+                        max_new_tokens=8, seed=5)
+    reqs = src.poll(0, float(n_req))
+
+    def drive(eng):
+        eng.submit([copy.deepcopy(r) for r in reqs])
+        eng.step_slot(0, n_steps=2)   # warm the jits before timing
+        warm_toks = sum(len(r.generated) for r in eng.finished) + sum(
+            len(r.generated) for r in eng.active if r is not None)
+        slots = 1
+        t0 = time.perf_counter()
+        while len(eng.finished) < len(reqs) and slots < 200:
+            eng.step_slot(slots, n_steps=2)
+            slots += 1
+        dt = time.perf_counter() - t0
+        # tokens generated inside the timed window only (the warm slot's
+        # output is excluded, same as its time)
+        toks = sum(len(r.generated) for r in eng.finished) - warm_toks
+        return toks / dt, dt, slots, {r.rid: r.generated for r in eng.finished}
+
+    dense = Engine(cfg, params, EngineConfig(batch_slots=4, prompt_len=16,
+                                             cache_len=64))
+    paged = PagedEngine(cfg, params, PagedEngineConfig(
+        prompt_len=16, cache_len=64, page_size=16, num_pages=16, max_active=16))
+    tps_p, dt_p, slots_p, gen_p = drive(paged)
+    tps_d, dt_d, slots_d, gen_d = drive(dense)
+    same = gen_p == gen_d
+    us = dt_p / max(slots_p - 1, 1) * 1e6
+    derived = (
+        f"paged_tps={tps_p:.1f};dense_tps={tps_d:.1f}"
+        f";speedup={tps_p / tps_d:.2f}x"
+        f";max_concurrent_paged={paged.peak_active};max_concurrent_dense=4"
+        f";kv_rows_each=256;same_tokens={same}"
+        f";paged_slots={slots_p};dense_slots={slots_d}"
+    )
+    if not same:
+        derived = "TOKEN_MISMATCH;" + derived
+    return us, derived
+
+
 def bench_flash_attention(quick=False):
     """XLA flash path per-call time + kernel/oracle agreement."""
     from repro.kernels import ops
@@ -219,14 +277,24 @@ def bench_roofline_table():
     return 0.0, derived
 
 
+# Fast subset exercised by `--smoke` (and CI): one controller row, one
+# engine row — enough to catch a rotten perf entrypoint in ~a minute.
+SMOKE_BENCHES = ("controller_overhead", "paged_vs_dense_decode")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: run the fast subset (implies --quick) and "
+                         "exit nonzero if any benchmark errors")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows to a BENCH_*.json file")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark-name filter")
     args, _ = ap.parse_known_args()
+    if args.smoke:
+        args.quick = True
 
     benches = [
         ("fig2_queue_dynamics", bench_queue_dynamics),
@@ -234,6 +302,7 @@ def main() -> None:
         ("controller_overhead", bench_controller_overhead),
         ("serving_engine_e2e", lambda: bench_serving_engine(args.quick)),
         ("serve_fused_vs_legacy", lambda: bench_serve_fused_vs_legacy(args.quick)),
+        ("paged_vs_dense_decode", lambda: bench_paged_vs_dense_decode(args.quick)),
         ("flash_attention_xla", lambda: bench_flash_attention(args.quick)),
         ("ssd_scan_xla", lambda: bench_ssd_scan(args.quick)),
         ("roofline_table", bench_roofline_table),
@@ -241,6 +310,8 @@ def main() -> None:
     if args.only:
         keep = set(args.only.split(","))
         benches = [(n, f) for n, f in benches if n in keep]
+    elif args.smoke:
+        benches = [(n, f) for n, f in benches if n in SMOKE_BENCHES]
     rows = []
     print("name,us_per_call,derived")
     for name, fn in benches:
@@ -256,6 +327,10 @@ def main() -> None:
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=1)
+    if args.smoke and any(r["us_per_call"] is None or
+                          r["derived"].startswith("TOKEN_MISMATCH")
+                          for r in rows):
+        sys.exit(1)
 
 
 if __name__ == "__main__":

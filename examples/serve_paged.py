@@ -1,0 +1,105 @@
+"""Paged KV cache + memory-aware Lyapunov admission, live.
+
+Two demonstrations on the same smoke model:
+
+1. **Paged vs dense at equal KV memory** — 256 cache rows/layer either as
+   4 dense slots x 64 rows or as a 16-page x 16-row shared pool. The paged
+   engine runs the same workload with twice the concurrency, finishing in
+   half the control slots with identical greedy tokens.
+2. **Memory-aware admission** — a calm-then-burst trace into a small page
+   pool: Static max-rate exhausts the pool (allocation failures);
+   ``MemoryAware`` prices page occupancy with a second virtual queue (the
+   conformal-Lyapunov extension of Algorithm 1) and throttles sampling
+   before the pool saturates.
+
+Run: PYTHONPATH=src python examples/serve_paged.py [--arch granite-3-2b]
+"""
+import argparse
+import copy
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.control import Static
+from repro.models import init_params
+from repro.runtime import (Engine, EngineConfig, MemoryAwareScheduler,
+                           PagedEngine, PagedEngineConfig, PolicyScheduler,
+                           RequestSource, serve)
+
+
+def equal_memory_race(cfg, params):
+    src = RequestSource(vocab_size=cfg.vocab_size, prompt_len=16, raw_rate=16,
+                        max_new_tokens=8, seed=5)
+    reqs = src.poll(0, 16.0)
+
+    def drive(eng, label):
+        eng.submit([copy.deepcopy(r) for r in reqs])
+        slots = 0
+        while len(eng.finished) < len(reqs) and slots < 100:
+            eng.step_slot(slots, n_steps=2)
+            slots += 1
+        gen = {r.rid: r.generated for r in eng.finished}
+        print(f"  {label:28s} slots={slots:3d} "
+              f"prefills={eng.prefill_dispatches} decodes={eng.decode_dispatches}")
+        return gen, slots
+
+    print("1) same 16 requests, equal KV memory (256 rows/layer):")
+    gen_d, slots_d = drive(
+        Engine(cfg, params, EngineConfig(batch_slots=4, prompt_len=16,
+                                         cache_len=64)),
+        "dense 4 slots x 64 rows")
+    paged = PagedEngine(cfg, params, PagedEngineConfig(
+        prompt_len=16, cache_len=64, page_size=16, num_pages=16, max_active=16))
+    gen_p, slots_p = drive(paged, "paged 16 pages x 16 rows")
+    print(f"  identical tokens: {gen_p == gen_d}; paged peak concurrency "
+          f"{paged.peak_active} vs dense 4 -> {slots_d}/{slots_p} = "
+          f"{slots_d / slots_p:.1f}x fewer control slots\n")
+
+
+def bursty_admission(cfg, params):
+    def run(sch, label):
+        eng = PagedEngine(cfg, params, PagedEngineConfig(
+            prompt_len=16, cache_len=32, page_size=16, num_pages=12,
+            max_active=8))
+        calm = RequestSource(vocab_size=cfg.vocab_size, prompt_len=16,
+                             raw_rate=2, max_new_tokens=6, seed=11)
+        burst = RequestSource(vocab_size=cfg.vocab_size, prompt_len=16,
+                              raw_rate=8, max_new_tokens=6, seed=12)
+        t1 = serve(eng, sch, calm, horizon=6, steps_per_slot=3)
+        t2 = serve(eng, sch, burst, horizon=12, steps_per_slot=3)
+        occ = np.concatenate([t1["occupancy"], t2["occupancy"]])
+        served = int(t1["served"].sum() + t2["served"].sum())
+        print(f"  {label:24s} served={served:3d} peak_occ={occ.max():.2f} "
+              f"alloc_failures={eng.alloc_failures:2d} "
+              f"preemptions={eng.preemptions}")
+        print(f"    occupancy: {' '.join(f'{o:.2f}' for o in occ)}")
+
+    print("2) calm(6 slots) -> burst(12 slots) into a 12-page pool:")
+    run(PolicyScheduler(policy=Static(rate=8.0), capacity=64),
+        "static max-rate")
+    run(MemoryAwareScheduler(rates=tuple(float(f) for f in range(1, 7)),
+                             V=20.0, pages_per_request=2.0,
+                             occupancy_budget=0.35, mem_gain=5.0,
+                             capacity=64),
+        "memory-aware (Alg.1+Z)")
+    print("\nstatic saturates the pool and bounces admissions; the occupancy"
+          "\nvirtual queue throttles sampling first, so the pool never fills.")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    args = ap.parse_args()
+    cfg = get_config(args.arch, smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    equal_memory_race(cfg, params)
+    bursty_admission(cfg, params)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Paged KV-cache subsystem: block-table page allocation for serving.
+
+``PageAllocator`` (host-side page ownership) pairs with the device-side
+``PagedKVPool`` (repro.models.attention) and the paged decode-attention
+kernel (repro.kernels.paged_attention). See DESIGN.md §6.
+"""
+from repro.cache.paged import AllocStats, PageAllocator, pages_for
+
+__all__ = ["AllocStats", "PageAllocator", "pages_for"]

@@ -1,0 +1,145 @@
+"""Block-table page allocator for the paged KV cache.
+
+The serving engine's truly finite resource is KV-cache memory. The dense
+engine reserves ``batch_slots x cache_len`` rows up front, so a request that
+uses 48 tokens still strands a full 128-row slot. This module carves one
+shared pool of ``num_pages`` fixed-size pages (``page_size`` KV rows each)
+and hands them out on demand (the TensorRT-LLM / vLLM design): a request
+holds ``ceil(tokens / page_size)`` pages, listed in its *block table* — the
+logical-page -> physical-page map the paged attention kernel gathers through.
+
+Host-side and O(1) per operation: a LIFO free list plus per-request page
+lists. The allocator is the single owner of page identity — a page id is
+either on the free list or in exactly one block table (the invariant the
+property tests in tests/test_paged.py hammer). Page *contents* live on
+device (``repro.models.attention.PagedKVPool``); recycled pages are never
+zeroed because the attention mask (logical index <= pos) hides stale rows.
+
+Occupancy (used_pages / num_pages) is the signal the ``MemoryAware`` policy
+(repro.control.policy) prices with a virtual queue, extending Algorithm 1's
+queue-overflow argument to the page pool.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``tokens`` KV rows (ceil division; >= 0)."""
+    return -(-max(tokens, 0) // page_size)
+
+
+@dataclasses.dataclass
+class AllocStats:
+    num_pages: int
+    used_pages: int
+    free_pages: int
+    num_requests: int
+    occupancy: float            # used_pages / num_pages
+    frag_tokens: int            # allocated-but-unwritten KV rows (internal frag)
+    peak_used_pages: int
+
+
+class PageAllocator:
+    """Free-list page allocator with per-request block tables."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages <= 0 or page_size <= 0:
+            raise ValueError((num_pages, page_size))
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # LIFO free list: recently-freed pages are re-used first (their
+        # contents are already junk; keeps the hot working set small).
+        self._free: list[int] = list(range(num_pages - 1, -1, -1))
+        self._tables: dict[int, list[int]] = {}   # rid -> physical page ids
+        self._tokens: dict[int, int] = {}         # rid -> written KV rows
+        self.peak_used_pages = 0
+
+    # ------------------------------------------------------------ queries
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def occupancy(self) -> float:
+        return self.used_pages / self.num_pages
+
+    def can_alloc(self, tokens: int) -> bool:
+        return pages_for(tokens, self.page_size) <= len(self._free)
+
+    def block_table(self, rid: int) -> list[int]:
+        return list(self._tables[rid])
+
+    def holders(self) -> list[int]:
+        return list(self._tables)
+
+    def stats(self) -> AllocStats:
+        frag = sum(
+            len(pages) * self.page_size - self._tokens[rid]
+            for rid, pages in self._tables.items()
+        )
+        return AllocStats(
+            num_pages=self.num_pages,
+            used_pages=self.used_pages,
+            free_pages=self.free_pages,
+            num_requests=len(self._tables),
+            occupancy=self.occupancy(),
+            frag_tokens=frag,
+            peak_used_pages=self.peak_used_pages,
+        )
+
+    # ------------------------------------------------------------ mutation
+    def alloc(self, rid: int, tokens: int) -> list[int] | None:
+        """Claim pages for a new request holding ``tokens`` KV rows.
+
+        Returns the block table (physical page ids in logical order), or
+        None — atomically, claiming nothing — if the pool cannot cover it.
+        """
+        if rid in self._tables:
+            raise KeyError(f"rid {rid} already holds pages")
+        n = pages_for(tokens, self.page_size)
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._tables[rid] = pages
+        self._tokens[rid] = tokens
+        self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
+        return list(pages)
+
+    def extend(self, rid: int, tokens: int) -> list[int] | None:
+        """Grow ``rid`` to cover ``tokens`` total rows, appending pages.
+
+        Returns the (possibly longer) block table, or None — without
+        claiming anything — if the free list cannot cover the growth. This
+        is how a request exceeds the dense engine's ``cache_len``: its block
+        table just keeps growing.
+        """
+        pages = self._tables[rid]
+        need = pages_for(tokens, self.page_size) - len(pages)
+        if need > len(self._free):
+            return None
+        for _ in range(max(need, 0)):
+            pages.append(self._free.pop())
+        self._tokens[rid] = max(self._tokens[rid], tokens)
+        self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
+        return list(pages)
+
+    def free(self, rid: int) -> int:
+        """Return every page ``rid`` holds to the free list; count freed."""
+        pages = self._tables.pop(rid)
+        self._tokens.pop(rid)
+        self._free.extend(reversed(pages))
+        return len(pages)
+
+    # ------------------------------------------------------------ invariant
+    def check(self) -> None:
+        """Assert the ownership invariant (used by the property tests)."""
+        seen = list(self._free)
+        for pages in self._tables.values():
+            seen.extend(pages)
+        assert len(seen) == self.num_pages, (len(seen), self.num_pages)
+        assert len(set(seen)) == self.num_pages, "page owned twice"
+        assert all(0 <= p < self.num_pages for p in seen)

@@ -5,10 +5,12 @@
 simulator, the serving scheduler, and the distributed/multi-tenant paths all
 consume policies through this package. See DESIGN.md.
 """
+from repro.control.controller import LyapunovController
 from repro.control.distributed import distributed_action, multi_tenant_action
 from repro.control.policy import (
     DriftPlusPenalty,
     LatencyAware,
+    MemoryAware,
     Policy,
     Static,
     VirtualQueue,
@@ -19,6 +21,8 @@ from repro.control.rollout import closed_loop, rollout
 __all__ = [
     "DriftPlusPenalty",
     "LatencyAware",
+    "LyapunovController",
+    "MemoryAware",
     "Policy",
     "Static",
     "VirtualQueue",

@@ -1,0 +1,86 @@
+"""The bundled one-object controller API over the unified control plane.
+
+``LyapunovController`` packages (policy construction, one-slot decision,
+closed-loop rollout) for callers that want the historical single-object
+interface; the decision itself is still the ONE ``drift_plus_penalty_action``
+behind the ``Policy`` protocol. Lived in ``repro.core.lyapunov`` before the
+control plane was unified; that module remains as a deprecated re-export.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.control.policy import (
+    DriftPlusPenalty,
+    LatencyAware,
+    Policy,
+    VirtualQueue,
+)
+from repro.control.rollout import closed_loop
+from repro.core.queueing import ServiceProcess
+from repro.core.utility import Utility
+
+
+@dataclasses.dataclass(frozen=True)
+class LyapunovController:
+    """Bundled Algorithm-1 controller over a discrete rate set.
+
+    A convenience wrapper: ``policy()`` yields the underlying Policy
+    (``DriftPlusPenalty``, or ``LatencyAware`` when a cost budget is set),
+    ``act`` evaluates one slot, ``run`` delegates to the shared closed-loop
+    rollout in ``repro.control.rollout``.
+
+    arrival_map(f) -> lambda(f): expected arrivals per slot at rate f. The
+    paper's setting has lambda(f) = f (each sampled frame enters the queue);
+    a batched-ingest system may have lambda(f) = f * batch.
+    """
+
+    rates: tuple[float, ...]
+    V: float
+    utility: Utility
+    arrival_gain: float = 1.0  # lambda(f) = arrival_gain * f
+    # optional constraint: per-slot cost y(f) = cost_gain * f with budget
+    cost_gain: float = 0.0
+    cost_budget: float = 0.0
+
+    def policy(self) -> Policy:
+        if self.cost_gain > 0.0:
+            return LatencyAware(
+                rates=self.rates, V=self.V, utility=self.utility,
+                arrival_gain=self.arrival_gain, cost_gain=self.cost_gain,
+                cost_budget=self.cost_budget,
+            )
+        return DriftPlusPenalty(
+            rates=self.rates, V=self.V, utility=self.utility,
+            arrival_gain=self.arrival_gain,
+        )
+
+    def tables(self):
+        return self.policy().tables()
+
+    def act(self, backlog: jax.Array, vq: VirtualQueue | None = None) -> jax.Array:
+        policy = self.policy()
+        carry = vq if vq is not None else policy.init()
+        f_star, _ = policy.act(carry, backlog)
+        return f_star
+
+    def run(
+        self,
+        service: ServiceProcess,
+        horizon: int,
+        key: jax.Array,
+        capacity: float = float("inf"),
+        stochastic_arrivals: bool = False,
+    ) -> dict:
+        """Closed-loop rollout: observe Q -> Alg.1 -> arrivals -> queue step.
+
+        Returns a trace dict of per-slot {backlog, rate, utility, service}.
+        Pure function of (key, horizon); jit-able via partial static horizon.
+        """
+        return closed_loop(
+            self.policy(), service, horizon, key,
+            capacity=capacity, stochastic_arrivals=stochastic_arrivals,
+            utility=self.utility,
+        )

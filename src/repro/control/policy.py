@@ -129,8 +129,31 @@ class Static:
         return f, jnp.ones_like(f), f
 
 
+class _TablePolicy:
+    """Shared table construction for the Algorithm-1 policy family.
+
+    Subclasses are frozen dataclasses with ``rates``/``utility``/
+    ``arrival_gain`` fields; tables are built once at construction (a
+    non-field attr: hash/eq stay field-based) so eager per-slot act()
+    callers don't rebuild device constants — building lazily inside a jit
+    trace would cache tracers.
+    """
+
+    def __post_init__(self):
+        if self.utility is None:
+            object.__setattr__(self, "utility", paper_utility(max(self.rates)))
+        f = jnp.asarray(self.rates, jnp.float32)
+        object.__setattr__(self, "_tables", (f, self.utility(f), self.arrival_gain * f))
+
+    def tables(self) -> tuple[jax.Array, jax.Array, jax.Array]:
+        return self._tables
+
+    def arrivals(self, f_star: jax.Array) -> jax.Array:
+        return self.arrival_gain * f_star
+
+
 @dataclasses.dataclass(frozen=True)
-class DriftPlusPenalty:
+class DriftPlusPenalty(_TablePolicy):
     """Algorithm 1 over a discrete rate set F — the paper's controller.
 
     arrival_gain maps the decision to induced load: lambda(f) =
@@ -143,18 +166,6 @@ class DriftPlusPenalty:
     utility: Utility = None  # type: ignore[assignment]
     arrival_gain: float = 1.0
 
-    def __post_init__(self):
-        if self.utility is None:
-            object.__setattr__(self, "utility", paper_utility(max(self.rates)))
-        # tables built once at construction (a non-field attr: hash/eq stay
-        # field-based) so eager per-slot act() callers don't rebuild device
-        # constants; building lazily inside a jit trace would cache tracers.
-        f = jnp.asarray(self.rates, jnp.float32)
-        object.__setattr__(self, "_tables", (f, self.utility(f), self.arrival_gain * f))
-
-    def tables(self) -> tuple[jax.Array, jax.Array, jax.Array]:
-        return self._tables
-
     def init(self) -> Any:
         return ()
 
@@ -163,12 +174,51 @@ class DriftPlusPenalty:
         f_star, _ = drift_plus_penalty_action(backlog, f, s, lam, self.V)
         return f_star, carry
 
-    def arrivals(self, f_star: jax.Array) -> jax.Array:
-        return self.arrival_gain * f_star
+
+@dataclasses.dataclass(frozen=True)
+class MemoryAware(_TablePolicy):
+    """Algorithm 1 plus a virtual queue over KV page-pool occupancy.
+
+    The paged serving engine's finite resource is its page pool; this policy
+    extends the paper's queue-overflow argument to that pool exactly the way
+    ``LatencyAware`` extends it to a cost budget — a second (virtual) queue
+    in the drift, no change to the argmax. Differences from ``LatencyAware``:
+    the constrained quantity (pool occupancy in [0, 1]) is *observed* from
+    the engine each slot rather than implied by the chosen action, so the
+    virtual queue advances in ``observe`` (the scheduler feeds it
+    ``engine.occupancy()``); ``act`` prices candidate rates by the pages
+    they commit:  Z(t) * mem_gain * pages_per_request * f.
+
+        Z(t+1) = max(Z(t) + occ(t) - occupancy_budget, 0)
+
+    keeps time-average occupancy <= occupancy_budget (Neely), which holds
+    the pool below hard capacity on bursty traces where ``Static`` overflows
+    into allocation failures.
+    """
+
+    rates: tuple[float, ...]
+    V: float
+    utility: Utility = None  # type: ignore[assignment]
+    arrival_gain: float = 1.0
+    pages_per_request: float = 2.0   # expected pages one admission commits
+    occupancy_budget: float = 0.6    # target time-average pool fill
+    mem_gain: float = 1.0            # price scale on the occupancy queue
+
+    def init(self) -> VirtualQueue:
+        return VirtualQueue.make(self.occupancy_budget)
+
+    def observe(self, carry: VirtualQueue, occupancy: jax.Array) -> VirtualQueue:
+        return carry.step(jnp.asarray(occupancy, jnp.float32))
+
+    def act(self, carry: VirtualQueue, backlog: jax.Array) -> tuple[jax.Array, VirtualQueue]:
+        f, s, lam = self.tables()
+        extra = carry.value[..., None] * (self.mem_gain * self.pages_per_request * f)
+        f_star, _ = drift_plus_penalty_action(backlog, f, s, lam, self.V, extra)
+        return f_star, carry
 
 
 @dataclasses.dataclass(frozen=True)
-class LatencyAware:
+class LatencyAware(_TablePolicy):
     """Algorithm 1 plus a virtual queue pricing a time-average cost budget.
 
     The per-slot cost is y(f) = cost_gain * f (service latency / energy both
@@ -184,15 +234,6 @@ class LatencyAware:
     cost_gain: float = 1.0
     cost_budget: float = 4.0
 
-    def __post_init__(self):
-        if self.utility is None:
-            object.__setattr__(self, "utility", paper_utility(max(self.rates)))
-        f = jnp.asarray(self.rates, jnp.float32)
-        object.__setattr__(self, "_tables", (f, self.utility(f), self.arrival_gain * f))
-
-    def tables(self) -> tuple[jax.Array, jax.Array, jax.Array]:
-        return self._tables
-
     def init(self) -> VirtualQueue:
         return VirtualQueue.make(self.cost_budget)
 
@@ -201,6 +242,3 @@ class LatencyAware:
         extra = carry.value[..., None] * (self.cost_gain * f)
         f_star, _ = drift_plus_penalty_action(backlog, f, s, lam, self.V, extra)
         return f_star, carry.step(self.cost_gain * f_star)
-
-    def arrivals(self, f_star: jax.Array) -> jax.Array:
-        return self.arrival_gain * f_star

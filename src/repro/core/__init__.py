@@ -22,10 +22,12 @@ from repro.core.queueing import (
 from repro.core.utility import Utility, paper_utility
 
 _LAZY = {
-    "LyapunovController": "repro.core.lyapunov",
-    "VirtualQueue": "repro.core.lyapunov",
-    "distributed_action": "repro.core.lyapunov",
-    "drift_plus_penalty_action": "repro.core.lyapunov",
+    # canonical homes in repro.control (repro.core.lyapunov is a deprecated
+    # shim that warns on import — route around it here)
+    "LyapunovController": "repro.control.controller",
+    "VirtualQueue": "repro.control.policy",
+    "distributed_action": "repro.control.distributed",
+    "drift_plus_penalty_action": "repro.control.policy",
     "Fig2Config": "repro.core.trace",
     "fig2_experiment": "repro.core.trace",
     "summarize": "repro.core.trace",

@@ -1,29 +1,33 @@
-"""Compatibility surface over the unified control plane (repro.control).
+"""DEPRECATED compatibility surface over the unified control plane.
 
-The paper's Algorithm 1 has exactly ONE implementation:
-``repro.control.policy.drift_plus_penalty_action``, consumed through the
-``Policy`` protocol (see DESIGN.md §2). This module re-exports it — plus
-``VirtualQueue`` and ``distributed_action`` — under their historical names,
-and keeps ``LyapunovController`` as a thin bundle of (policy, closed-loop
-rollout) for callers that want the one-object API.
+Everything here lives in ``repro.control`` now — ``LyapunovController`` in
+``repro.control.controller``, Algorithm 1 (``drift_plus_penalty_action``)
+and ``VirtualQueue`` in ``repro.control.policy``, ``distributed_action`` in
+``repro.control.distributed``. Import from ``repro.control``; this module
+re-exports the historical names and will be removed.
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 
-import jax
-
+from repro.control.controller import LyapunovController
 from repro.control.distributed import distributed_action
 from repro.control.policy import (
-    DriftPlusPenalty,
-    LatencyAware,
-    Policy,
+    DriftPlusPenalty,      # noqa: F401  (historical re-export surface)
+    LatencyAware,          # noqa: F401
+    Policy,                # noqa: F401
     VirtualQueue,
     drift_plus_penalty_action,
 )
-from repro.control.rollout import closed_loop
-from repro.core.queueing import ServiceProcess
-from repro.core.utility import Utility
+from repro.control.rollout import closed_loop  # noqa: F401
+
+warnings.warn(
+    "repro.core.lyapunov is deprecated; import from repro.control "
+    "(LyapunovController, drift_plus_penalty_action, VirtualQueue, "
+    "distributed_action live there now)",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
 __all__ = [
     "LyapunovController",
@@ -31,66 +35,3 @@ __all__ = [
     "distributed_action",
     "drift_plus_penalty_action",
 ]
-
-
-@dataclasses.dataclass(frozen=True)
-class LyapunovController:
-    """Bundled Algorithm-1 controller over a discrete rate set.
-
-    A convenience wrapper: ``policy()`` yields the underlying Policy
-    (``DriftPlusPenalty``, or ``LatencyAware`` when a cost budget is set),
-    ``act`` evaluates one slot, ``run`` delegates to the shared closed-loop
-    rollout in ``repro.control.rollout``.
-
-    arrival_map(f) -> lambda(f): expected arrivals per slot at rate f. The
-    paper's setting has lambda(f) = f (each sampled frame enters the queue);
-    a batched-ingest system may have lambda(f) = f * batch.
-    """
-
-    rates: tuple[float, ...]
-    V: float
-    utility: Utility
-    arrival_gain: float = 1.0  # lambda(f) = arrival_gain * f
-    # optional constraint: per-slot cost y(f) = cost_gain * f with budget
-    cost_gain: float = 0.0
-    cost_budget: float = 0.0
-
-    def policy(self) -> Policy:
-        if self.cost_gain > 0.0:
-            return LatencyAware(
-                rates=self.rates, V=self.V, utility=self.utility,
-                arrival_gain=self.arrival_gain, cost_gain=self.cost_gain,
-                cost_budget=self.cost_budget,
-            )
-        return DriftPlusPenalty(
-            rates=self.rates, V=self.V, utility=self.utility,
-            arrival_gain=self.arrival_gain,
-        )
-
-    def tables(self):
-        return self.policy().tables()
-
-    def act(self, backlog: jax.Array, vq: VirtualQueue | None = None) -> jax.Array:
-        policy = self.policy()
-        carry = vq if vq is not None else policy.init()
-        f_star, _ = policy.act(carry, backlog)
-        return f_star
-
-    def run(
-        self,
-        service: ServiceProcess,
-        horizon: int,
-        key: jax.Array,
-        capacity: float = float("inf"),
-        stochastic_arrivals: bool = False,
-    ) -> dict:
-        """Closed-loop rollout: observe Q -> Alg.1 -> arrivals -> queue step.
-
-        Returns a trace dict of per-slot {backlog, rate, utility, service}.
-        Pure function of (key, horizon); jit-able via partial static horizon.
-        """
-        return closed_loop(
-            self.policy(), service, horizon, key,
-            capacity=capacity, stochastic_arrivals=stochastic_arrivals,
-            utility=self.utility,
-        )

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _da
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
 from repro.kernels import ssd_scan as _ssd
 from repro.models.attention import chunked_attention
 from repro.models.ssm import ssd_chunked
@@ -43,6 +44,17 @@ def decode_attention(q, k, v, slot_pos, pos, *, window=None, impl="xla", block_l
     return _da.decode_attention(
         q, k, v, slot_pos, pos, window=window, block_l=block_l,
         interpret=(impl == "interpret"),
+    )
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def paged_decode_attention(q, k_pages, v_pages, block_tables, pos, *, impl="xla"):
+    if impl == "xla":
+        from repro.kernels.ref import paged_decode_attention_ref
+
+        return paged_decode_attention_ref(q, k_pages, v_pages, block_tables, pos)
+    return _pa.paged_decode_attention(
+        q, k_pages, v_pages, block_tables, pos, interpret=(impl == "interpret")
     )
 
 

@@ -48,6 +48,29 @@ def decode_attention_ref(q, k, v, slot_pos, pos, *, window=None):
     return jnp.einsum("bhl,blhd->bhd", p.astype(vv.dtype), vv).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, pos):
+    """Paged decode oracle: gather pages, then dense masked softmax.
+
+    q (B,H,hd); pools (N,ps,KVH,hd); block_tables (B,MP) int32 physical page
+    per logical page (-1 = unallocated); pos (B,) absolute position of the
+    row just written. Logical slot j (= page j//ps, offset j%ps) holds
+    absolute position j — paged caches never wrap — so validity is simply
+    ``j <= pos`` on allocated pages. With MP*ps == L and an allocated prefix
+    this is bit-for-float the dense ``decode_attention_ref`` on the gathered
+    cache (identical shapes, masks, and reduction order).
+    """
+    B, H, hd = q.shape
+    N, ps, KVH, _ = k_pages.shape
+    MP = block_tables.shape[1]
+    phys = jnp.clip(block_tables, 0, N - 1)                    # (B, MP)
+    kk = k_pages[phys].reshape(B, MP * ps, KVH, hd)
+    vv = v_pages[phys].reshape(B, MP * ps, KVH, hd)
+    j = jnp.arange(MP * ps)[None, :]                           # logical slots
+    allocated = jnp.repeat(block_tables >= 0, ps, axis=1)      # (B, MP*ps)
+    slot_pos = jnp.where(allocated, j, -1)
+    return decode_attention_ref(q, kk, vv, slot_pos, pos)
+
+
 def ssd_ref(x, dt, A, Bm, Cm):
     """Sequential SSD recurrence, one step at a time (the literal SSM).
 

@@ -5,8 +5,12 @@
 
 ``--policy static --rate 5`` runs the paper's fixed-rate baseline;
 ``--policy latency-aware`` adds a virtual-queue cost budget on the sampling
-rate. ``--legacy-loop`` switches the engine off the fused (1 prefill +
-1 decode dispatch per slot) path for before/after comparison.
+rate; ``--policy memory-aware`` prices KV page-pool occupancy (pairs with
+``--paged``). ``--paged`` serves from the paged KV cache (shared page pool,
+block tables, ``--page-size``/``--num-pages``/``--max-active`` geometry)
+instead of dense per-slot cache rows. ``--legacy-loop`` switches the dense
+engine off the fused (1 prefill + 1 decode dispatch per slot) path for
+before/after comparison.
 """
 from __future__ import annotations
 
@@ -19,18 +23,28 @@ from repro.configs import get_config
 from repro.models import init_params
 from repro.control import LatencyAware
 from repro.runtime import (AdaptiveScheduler, Engine, EngineConfig,
-                           PolicyScheduler, RequestSource, StaticScheduler,
-                           latency_stats, serve)
+                           MemoryAwareScheduler, PagedEngine,
+                           PagedEngineConfig, PolicyScheduler, RequestSource,
+                           StaticScheduler, latency_stats, serve)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--policy", choices=["adaptive", "static", "latency-aware"],
+    ap.add_argument("--policy",
+                    choices=["adaptive", "static", "latency-aware", "memory-aware"],
                     default="adaptive")
     ap.add_argument("--cost-budget", type=float, default=4.0,
                     help="latency-aware: time-average rate budget")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the paged KV cache (page pool + block tables)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=64)
+    ap.add_argument("--max-active", type=int, default=16,
+                    help="paged: decode batch rows (concurrency bound)")
+    ap.add_argument("--occupancy-budget", type=float, default=0.6,
+                    help="memory-aware: target time-average pool occupancy")
     ap.add_argument("--legacy-loop", action="store_true",
                     help="per-step loop (k prefills + n decode dispatches)")
     ap.add_argument("--rate", type=float, default=5.0, help="static policy rate")
@@ -42,11 +56,24 @@ def main():
     ap.add_argument("--cache-len", type=int, default=64)
     ap.add_argument("--capacity", type=int, default=32)
     args = ap.parse_args()
+    if args.paged and args.legacy_loop:
+        ap.error("--legacy-loop is a dense-engine comparison path; "
+                 "the paged engine has no per-step loop")
+    if args.policy == "memory-aware" and not args.paged:
+        ap.error("--policy memory-aware prices page-pool occupancy; "
+                 "it requires --paged (the dense engine reports none)")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     params = init_params(jax.random.PRNGKey(0), cfg)
-    engine = Engine(cfg, params, EngineConfig(
-        batch_slots=args.slots, prompt_len=args.prompt_len, cache_len=args.cache_len))
+    if args.paged:
+        engine = PagedEngine(cfg, params, PagedEngineConfig(
+            prompt_len=args.prompt_len, cache_len=args.cache_len,
+            page_size=args.page_size, num_pages=args.num_pages,
+            max_active=args.max_active))
+    else:
+        engine = Engine(cfg, params, EngineConfig(
+            batch_slots=args.slots, prompt_len=args.prompt_len,
+            cache_len=args.cache_len))
     rates = tuple(float(f) for f in range(1, args.raw_rate + 1))
     if args.policy == "adaptive":
         sched = AdaptiveScheduler(rates=rates, V=args.V, capacity=args.capacity)
@@ -54,6 +81,10 @@ def main():
         sched = PolicyScheduler(
             policy=LatencyAware(rates=rates, V=args.V, cost_gain=1.0,
                                 cost_budget=args.cost_budget),
+            capacity=args.capacity)
+    elif args.policy == "memory-aware":
+        sched = MemoryAwareScheduler(
+            rates=rates, V=args.V, occupancy_budget=args.occupancy_budget,
             capacity=args.capacity)
     else:
         sched = StaticScheduler(rate=args.rate, capacity=args.capacity)
@@ -66,6 +97,13 @@ def main():
           f"tail_backlog={float(tr['backlog'][-5:].mean()):.1f} "
           f"mean_rate={float(np.mean(sched.rate_history)):.2f} "
           f"dispatches_per_slot={float(tr['dispatches'].mean()):.2f}")
+    if args.paged:
+        st = engine.allocator.stats()
+        print(f"paged: peak_occupancy={float(tr['occupancy'].max()):.2f} "
+              f"peak_pages={st.peak_used_pages}/{st.num_pages} "
+              f"peak_active={engine.peak_active} "
+              f"alloc_failures={engine.alloc_failures} "
+              f"preemptions={engine.preemptions}")
     print("latency:", latency_stats(engine))
 
 

@@ -1,7 +1,9 @@
 from repro.models.model import (
     DecodeState,
+    PagedDecodeState,
     abstract_params,
     decode_step,
+    decode_step_paged,
     forward,
     init_params,
     loss_fn,
@@ -10,8 +12,10 @@ from repro.models.model import (
 
 __all__ = [
     "DecodeState",
+    "PagedDecodeState",
     "abstract_params",
     "decode_step",
+    "decode_step_paged",
     "forward",
     "init_params",
     "loss_fn",

@@ -73,6 +73,31 @@ def kv_cache_init(batch: int, cache_len: int, cfg: ModelConfig) -> KVCache:
     )
 
 
+class PagedKVPool(NamedTuple):
+    """Shared-pool paged KV storage for ONE layer (stacked on a leading
+    layer axis inside a segment, like every other cache leaf).
+
+    k/v: (num_pages, page_size, KVH, hd). Rows are owned via
+    ``repro.cache.PageAllocator`` block tables; logical slot j of a request
+    lives at (table[j // page_size], j % page_size) and holds absolute
+    position j — paged caches never wrap, they grow by appending pages.
+    Recycled pages are not zeroed: the validity mask (j <= pos on allocated
+    pages) hides stale rows before they can influence the softmax.
+    """
+
+    k: jax.Array
+    v: jax.Array
+
+
+def paged_pool_init(num_pages: int, page_size: int, cfg: ModelConfig) -> PagedKVPool:
+    KVH, hd = cfg.n_kv_heads, cfg.head_dim_
+    dt = cache_dtype(cfg)
+    return PagedKVPool(
+        k=jnp.zeros((num_pages, page_size, KVH, hd), dt),
+        v=jnp.zeros((num_pages, page_size, KVH, hd), dt),
+    )
+
+
 # ------------------------------------------------- chunked online-softmax
 #
 # Differentiable via a FLASH BACKWARD (custom_vjp): the forward saves only
@@ -382,6 +407,89 @@ def attn_decode(
     out = out.reshape(B, H, hd)
     y = jnp.einsum("bhk,hkd->bd", out, params["wo"])
     return y, cache
+
+
+def attn_decode_paged(
+    params,
+    x: jax.Array,            # (B, D) — one new token's residual input
+    pool: PagedKVPool,
+    block_table: jax.Array,  # (B, MP) int32 physical page ids; -1 = unallocated
+    pos: jax.Array,          # (B,) absolute position of the new token
+    cfg: ModelConfig,
+) -> tuple[jax.Array, PagedKVPool]:
+    """One decode step against the paged pool: rope at pos, write the new
+    row into the block-table page, attend over the gathered logical cache.
+
+    Mirrors ``attn_decode`` op for op, so on a shared-length workload
+    (MP * page_size == cache_len, no wraparound) the two paths are
+    bit-identical: the gather reassembles exactly the dense cache array and
+    the validity mask (j <= pos on allocated pages) equals the dense
+    slot_pos mask. Rows of inactive requests carry an all(-1) block table —
+    their write is dropped and their output is discarded by the engine.
+    """
+    B, D = x.shape
+    N, ps = pool.k.shape[0], pool.k.shape[1]
+    MP = block_table.shape[1]
+    q = jnp.einsum("bd,dhk->bhk", x, params["wq"])
+    k = jnp.einsum("bd,dhk->bhk", x, params["wk"])
+    v = jnp.einsum("bd,dhk->bhk", x, params["wv"])
+    if "q_norm" in params:
+        q = headwise_rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = headwise_rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    k = apply_rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+
+    lp = (pos // ps).astype(jnp.int32)                # logical page of pos
+    phys = jnp.take_along_axis(block_table, lp[:, None], axis=1)[:, 0]
+    phys = jnp.where(phys < 0, N, phys)               # N = out of range -> drop
+    off = (pos % ps).astype(jnp.int32)
+    cdt = pool.k.dtype
+    pool = PagedKVPool(
+        k=pool.k.at[phys, off].set(k.astype(cdt), mode="drop"),
+        v=pool.v.at[phys, off].set(v.astype(cdt), mode="drop"),
+    )
+
+    gather = jnp.clip(block_table, 0, N - 1)
+    kk = pool.k[gather].reshape(B, MP * ps, cfg.n_kv_heads, cfg.head_dim_)
+    vv = pool.v[gather].reshape(B, MP * ps, cfg.n_kv_heads, cfg.head_dim_)
+
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, hd)
+    s = jnp.einsum(
+        "bkgh,blkh->bkgl", qg, kk.astype(q.dtype),
+        preferred_element_type=jnp.float32,
+    ) * (hd ** -0.5)
+    j = jnp.arange(MP * ps)[None, :]
+    allocated = jnp.repeat(block_table >= 0, ps, axis=1)
+    valid = allocated & (j <= pos[:, None])
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgl,blkh->bkgh", p.astype(q.dtype), vv.astype(q.dtype))
+    out = out.reshape(B, H, hd)
+    y = jnp.einsum("bhk,hkd->bd", out, params["wo"])
+    return y, pool
+
+
+def paged_splice_prompt(pool: PagedKVPool, cache: KVCache,
+                        page_idx: jax.Array) -> PagedKVPool:
+    """Scatter a prefill-built dense cache into the page pool (one layer).
+
+    cache k/v: (B, P, KVH, hd) with the prompt occupying slots 0..P-1
+    (prefill with cache_len == prompt_len never wraps). page_idx: (B, npp)
+    physical destination pages, npp = P / page_size; pad rows carry an
+    out-of-range id (>= num_pages) and are dropped, so one fixed-shape
+    scatter handles any number of admitted requests.
+    """
+    B, P = cache.k.shape[0], cache.k.shape[1]
+    npp = page_idx.shape[1]
+    ps = P // npp
+    rows_k = cache.k.reshape(B, npp, ps, *cache.k.shape[2:]).astype(pool.k.dtype)
+    rows_v = cache.v.reshape(B, npp, ps, *cache.v.shape[2:]).astype(pool.v.dtype)
+    return PagedKVPool(
+        k=pool.k.at[page_idx].set(rows_k, mode="drop"),
+        v=pool.v.at[page_idx].set(rows_v, mode="drop"),
+    )
 
 
 def cross_attn_cache(params, enc_out: jax.Array):

@@ -34,6 +34,22 @@ class DecodeState(NamedTuple):
     last_tok: jax.Array  # (B,) int32 last emitted/fed token
 
 
+class PagedDecodeState(NamedTuple):
+    """Decode state over the shared page pool (see DESIGN.md §6).
+
+    ``pools`` replaces per-slot dense caches; ``block_tables`` is the
+    logical-page -> physical-page map (one row per request row, shared by
+    all layers; -1 = unallocated, inactive rows are all -1). Page ownership
+    lives host-side in ``repro.cache.PageAllocator`` — this pytree only
+    carries what the jitted decode step needs.
+    """
+
+    pools: Any               # list of per-segment PagedKVPool (layer-stacked)
+    block_tables: jax.Array  # (B, MP) int32
+    pos: jax.Array           # (B,) next absolute position to write
+    last_tok: jax.Array      # (B,) int32
+
+
 def init_params(key, cfg: ModelConfig):
     k_emb, k_stack, k_enc, k_out = jax.random.split(key, 4)
     params = {
@@ -215,6 +231,39 @@ def decode_step(params, state: DecodeState, tokens, cfg: ModelConfig,
     h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
     logits = unembed(params["embed"], h[:, None], cfg)[:, 0]
     return logits, DecodeState(caches=caches, pos=state.pos + 1, last_tok=tokens)
+
+
+def decode_step_paged(params, state: PagedDecodeState, tokens, cfg: ModelConfig):
+    """One decode step for the whole batch against the paged KV pools.
+
+    Mirrors ``decode_step`` exactly (same embed/norm/unembed ops) with the
+    paged attention path inside; tokens: (B,) int32.
+    """
+    h = embed(params["embed"], tokens[:, None], cfg)[:, 0]
+    if cfg.arch_type in ("dense", "vlm", "audio"):
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    h, pools = T.decode_hidden_paged(
+        params["stack"], h, state.pools, state.block_tables, state.pos, cfg
+    )
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    logits = unembed(params["embed"], h[:, None], cfg)[:, 0]
+    return logits, PagedDecodeState(
+        pools=pools, block_tables=state.block_tables,
+        pos=state.pos + 1, last_tok=tokens,
+    )
+
+
+def paged_splice_prompt(pools, caches, page_idx):
+    """Scatter prefill-built dense caches (cache_len == prompt_len) into the
+    page pools. caches: list of per-segment KVCache, leaves (n, B, P, ...);
+    page_idx: (B, npp) physical pages per admitted row (out-of-range = pad
+    row, dropped). One fixed-shape scatter per segment."""
+    from repro.models import attention as A
+
+    return [
+        jax.vmap(lambda pl, c: A.paged_splice_prompt(pl, c, page_idx))(pool, cache)
+        for pool, cache in zip(pools, caches)
+    ]
 
 
 def decode_state_shape(params_or_abstract, batch_spec, cfg: ModelConfig, cache_len: int):

@@ -342,6 +342,64 @@ def _block_decode(kind, p, h, cache, pos, cfg: ModelConfig, *, window):
     raise ValueError(kind)
 
 
+def paged_segments_supported(cfg: ModelConfig) -> bool:
+    """Paged decode covers pure-attention stacks (dense + MoE FFN blocks).
+
+    SSM/RG-LRU segments carry recurrent state, not a KV cache — nothing to
+    page — and enc-dec carries cross-attention state; those archs stay on
+    the dense engine.
+    """
+    if cfg.is_encdec or cfg.arch_type in ("vlm", "audio"):
+        return False
+    return all(s.kind in ("attn", "attn_moe") for s in plan_segments(cfg, "decoder"))
+
+
+def paged_pools_init(cfg: ModelConfig, num_pages: int, page_size: int):
+    """Per-segment page pools, leaves stacked on the layer axis like every
+    other cache: list of PagedKVPool with k/v (n, num_pages, page_size,
+    KVH, hd). All layers of one segment share page indexing (one block
+    table per request serves the whole stack)."""
+    if not paged_segments_supported(cfg):
+        raise ValueError(
+            f"paged decode requires an all-attention stack; {cfg.name} has "
+            f"segments {[s.kind for s in plan_segments(cfg, 'decoder')]}"
+        )
+    dt = A.cache_dtype(cfg)
+    KVH, hd = cfg.n_kv_heads, cfg.head_dim_
+    pools = []
+    for seg in plan_segments(cfg, "decoder"):
+        shape = (seg.n, num_pages, page_size, KVH, hd)
+        pools.append(A.PagedKVPool(k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt)))
+    return pools
+
+
+def decode_hidden_paged(stack, h, pools, block_table, pos, cfg: ModelConfig):
+    """One-token pass over the paged pools. h: (B, D).
+
+    Mirrors ``decode_hidden`` (same scan structure, same residual/FFN op
+    order) with ``attn_decode_paged`` in place of ``attn_decode``, so the
+    two paths are bit-identical on shared-length workloads. The block table
+    is shared by every layer; each layer owns its (num_pages, ...) pool row.
+    """
+    segs = plan_segments(cfg, "decoder")
+    new_pools = []
+    for seg, params, pool in zip(segs, stack, pools):
+        assert seg.kind in ("attn", "attn_moe"), seg.kind
+
+        def body(hh, pp):
+            p, pool_l = pp
+            a, pool_l = A.attn_decode_paged(
+                p["attn"], rmsnorm(p["ln1"], hh, cfg.norm_eps), pool_l,
+                block_table, pos, cfg,
+            )
+            hh, _ = _ffn(p, hh + a, cfg)
+            return hh, pool_l
+
+        h, seg_pool = jax.lax.scan(body, h, (params, pool))
+        new_pools.append(seg_pool)
+    return h, new_pools
+
+
 def decode_hidden(stack, h, caches, pos, cfg: ModelConfig, *, shape_window=None):
     """One-token pass. h: (B, D). Returns (h, new_caches)."""
     segs = plan_segments(cfg, "decoder")

@@ -1,7 +1,13 @@
-from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.engine import (
+    Engine,
+    EngineConfig,
+    PagedEngine,
+    PagedEngineConfig,
+)
 from repro.runtime.request import Request, RequestSource
 from repro.runtime.scheduler import (
     AdaptiveScheduler,
+    MemoryAwareScheduler,
     PolicyScheduler,
     StaticScheduler,
 )
@@ -10,9 +16,12 @@ from repro.runtime.server import latency_stats, serve
 __all__ = [
     "Engine",
     "EngineConfig",
+    "PagedEngine",
+    "PagedEngineConfig",
     "Request",
     "RequestSource",
     "AdaptiveScheduler",
+    "MemoryAwareScheduler",
     "PolicyScheduler",
     "StaticScheduler",
     "latency_stats",

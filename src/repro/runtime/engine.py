@@ -19,6 +19,10 @@ path (``step``, kept for equivalence tests and the before/after benchmark)
 costs k prefills + n_steps decodes. The engine reports per-step service
 counts — the mu(t) the Lyapunov controller observes. Model-agnostic: works
 for every registered arch via the Model API (prefill/decode_step).
+
+``PagedEngine`` (below) is the paged-KV-cache variant: same dispatch
+budget, but admission allocates pages from a shared pool instead of
+claiming a dense slot — see DESIGN.md §6.
 """
 from __future__ import annotations
 
@@ -29,9 +33,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache import PageAllocator
 from repro.configs.base import ModelConfig
 from repro.models import model as M
+from repro.models.transformer import paged_pools_init, paged_segments_supported
 from repro.runtime.request import Request
+
+# Sentinel for short-prompt padding. Padding used to cycle the prompt via
+# np.resize, which silently duplicated content; a constant sentinel keeps
+# padded positions observable (and identical across requests).
+PAD_ID = 0
 
 
 @dataclasses.dataclass
@@ -46,6 +57,51 @@ class EngineConfig:
     shape_window: Optional[int] = None
 
 
+@dataclasses.dataclass
+class PagedEngineConfig(EngineConfig):
+    """Engine config plus the paged-pool geometry.
+
+    KV memory = num_pages * page_size rows (vs batch_slots * cache_len for
+    the dense engine); ``max_active`` is the decode batch (rows), bounded by
+    compute, not memory. ``max_pages_per_req`` bounds one request's block
+    table; 0 derives it from cache_len, and raising it past
+    cache_len/page_size is how requests grow beyond the dense cache_len.
+    """
+
+    page_size: int = 16
+    num_pages: int = 64
+    max_active: int = 8
+    max_pages_per_req: int = 0    # 0 => cache_len // page_size
+
+
+def _bucket_prompt(tokens, prompt_len: int) -> tuple[np.ndarray, bool]:
+    """Fit a prompt to the fixed prefill bucket.
+
+    Long prompts are truncated (flagged, so the caller can record it on the
+    Request); short prompts are padded with the PAD_ID sentinel.
+    """
+    toks = np.asarray(tokens[:prompt_len], np.int32)
+    truncated = len(tokens) > prompt_len
+    if len(toks) < prompt_len:
+        toks = np.concatenate(
+            [toks, np.full(prompt_len - len(toks), PAD_ID, np.int32)]
+        )
+    return toks, truncated
+
+
+def _make_sampler(ecfg: EngineConfig):
+    def _sample(logits, key):
+        if ecfg.greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        lg = logits.astype(jnp.float32) / max(ecfg.temperature, 1e-6)
+        if ecfg.top_k:
+            kth = jnp.sort(lg, axis=-1)[:, -ecfg.top_k][:, None]
+            lg = jnp.where(lg < kth, -1e30, lg)
+        return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+
+    return _sample
+
+
 class Engine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig, extra_batch=None):
         self.cfg, self.params, self.ecfg = cfg, params, ecfg
@@ -56,14 +112,7 @@ class Engine:
             return M.prefill(params, batch, cfg, ecfg.cache_len,
                              shape_window=ecfg.shape_window)
 
-        def _sample(logits, key):
-            if ecfg.greedy:
-                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            lg = logits.astype(jnp.float32) / max(ecfg.temperature, 1e-6)
-            if ecfg.top_k:
-                kth = jnp.sort(lg, axis=-1)[:, -ecfg.top_k][:, None]
-                lg = jnp.where(lg < kth, -1e30, lg)
-            return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+        _sample = _make_sampler(ecfg)
 
         def _decode(params, state, toks, key):
             logits, state = M.decode_step(params, state, toks, cfg,
@@ -141,15 +190,15 @@ class Engine:
     def free_slots(self) -> list:
         return [i for i, r in enumerate(self.active) if r is None]
 
-    def _bucket(self, tokens) -> np.ndarray:
-        toks = np.asarray(tokens[: self.ecfg.prompt_len], np.int32)
-        if len(toks) < self.ecfg.prompt_len:  # bucketed prefill: pad by cycling
-            toks = np.resize(toks, self.ecfg.prompt_len)
+    def _bucket(self, tokens, req: Optional[Request] = None) -> np.ndarray:
+        toks, truncated = _bucket_prompt(tokens, self.ecfg.prompt_len)
+        if req is not None and truncated:
+            req.truncated = True
         return toks
 
     def _admit_one(self, req: Request, slot: int, now: int) -> None:
         """Legacy batch-1 admission (the fused path's equivalence oracle)."""
-        batch = {"tokens": jnp.asarray(self._bucket(req.tokens))[None, :],
+        batch = {"tokens": jnp.asarray(self._bucket(req.tokens, req))[None, :],
                  **_slice_extra(self.extra, 1)}
         logits, one = self._prefill(self.params, batch)
         self.prefill_dispatches += 1
@@ -176,7 +225,7 @@ class Engine:
         k = len(reqs)
         toks = np.zeros((B, P), np.int32)
         for j, r in enumerate(reqs):
-            toks[j] = self._bucket(r.tokens)
+            toks[j] = self._bucket(r.tokens, r)
         slot_idx = np.full(B, B, np.int32)  # B = out of range -> scatter drops
         slot_idx[:k] = slots
         batch = {"tokens": jnp.asarray(toks), **self.extra}
@@ -279,6 +328,257 @@ class Engine:
             "served_per_step": per_step,
             "admitted": admitted,
             "finished_total": len(self.finished),
+        }
+
+
+class PagedEngine:
+    """Continuous batching over a paged KV cache (see DESIGN.md §6).
+
+    Where ``Engine`` reserves a dense ``batch_slots x cache_len`` cache row
+    per request, this engine admits a request by *allocating pages* from one
+    shared pool (``repro.cache.PageAllocator``): a short request holds only
+    the pages it writes, so at equal KV memory many more requests are in
+    flight. Requests grow by appending pages — past ``cache_len`` if
+    ``max_pages_per_req`` allows — and retirement returns pages to the free
+    list.
+
+    The dense engine's dispatch budget is preserved: one control slot costs
+    <= 1 bucketed batch prefill (all admissions of the slot) + 1 fused
+    lax.scan decode over all ``max_active`` rows. Page-table maintenance is
+    host-side arithmetic; block tables/positions ride into the dispatch as
+    arguments. Before each decode the engine pre-extends every active
+    request to cover the slot's ``n_steps`` writes; if the pool cannot
+    cover a request it is preempted (pages freed, request re-queued for a
+    fresh prefill — deterministic under greedy decoding).
+
+    Generation is bit-identical to the dense engine per request (greedy):
+    every per-row op matches the dense path, so tokens are a pure function
+    of the prompt. ``occupancy()`` exposes the page pool's fill fraction —
+    the signal the ``MemoryAware`` policy prices.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, ecfg: PagedEngineConfig):
+        if not paged_segments_supported(cfg):
+            raise ValueError(f"{cfg.name}: paged decode needs an all-attention stack")
+        if ecfg.shape_window is not None:
+            raise ValueError("paged decode does not support sliding windows")
+        ps, P, R = ecfg.page_size, ecfg.prompt_len, ecfg.max_active
+        if P % ps:
+            raise ValueError(f"prompt_len {P} must be a multiple of page_size {ps}")
+        self.cfg, self.params, self.ecfg = cfg, params, ecfg
+        self.MP = ecfg.max_pages_per_req or max(ecfg.cache_len // ps, P // ps + 1)
+
+        _sample = _make_sampler(ecfg)
+
+        def _prefill(params, batch):
+            # cache_len == prompt_len: the dense prefill cache is exactly the
+            # prompt rows, ready to scatter into pages (no ring wraparound).
+            return M.prefill(params, batch, cfg, P)
+
+        def _decode(params, state, toks, key):
+            logits, state = M.decode_step_paged(params, state, toks, cfg)
+            return _sample(logits, key), state
+
+        def _decode_n(params, state, toks, key, n):
+            def body(carry, i):
+                toks, state = carry
+                nxt, state = _decode(params, state, toks, jax.random.fold_in(key, i))
+                return (nxt, state), nxt
+
+            (_, state), outs = jax.lax.scan(body, (toks, state), jnp.arange(n))
+            return outs, state
+
+        self._prefill = jax.jit(_prefill)
+        self._decode_n = jax.jit(_decode_n, static_argnames=("n",))
+        self._splice_prompt = jax.jit(M.paged_splice_prompt)
+
+        self.pools = paged_pools_init(cfg, ecfg.num_pages, ps)
+        self.allocator = PageAllocator(ecfg.num_pages, ps)
+        self.block_tables = np.full((R, self.MP), -1, np.int32)
+        self.pos = np.zeros(R, np.int32)
+        self._key = jax.random.PRNGKey(ecfg.seed)
+        self.active: list = [None] * R
+        self.pending: list = []
+        self.finished: list = []
+        self.slot_age = np.zeros(R, np.int32)
+        self.steps = 0
+        self.served_history: list = []
+        self.prefill_dispatches = 0
+        self.decode_dispatches = 0
+        self.alloc_failures = 0       # admissions deferred: pool exhausted
+        self.preemptions = 0          # active requests bounced for pages
+        self.peak_active = 0
+        # high-water occupancy of the last control slot (post-admission,
+        # pre-retirement) — the commitment peak the controller must price;
+        # end-of-slot occupancy dips as finished requests free pages.
+        self.occupancy_hwm = 0.0
+
+    # ------------------------------------------------------------------
+    def queue_len(self) -> int:
+        return len(self.pending)
+
+    def submit(self, reqs: list) -> None:
+        self.pending.extend(reqs)
+
+    def free_slots(self) -> list:
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    def occupancy(self) -> float:
+        return self.allocator.occupancy()
+
+    def _bucket(self, tokens, req: Optional[Request] = None) -> np.ndarray:
+        toks, truncated = _bucket_prompt(tokens, self.ecfg.prompt_len)
+        if req is not None and truncated:
+            req.truncated = True
+        return toks
+
+    def _retire(self, row: int, now: int) -> None:
+        req = self.active[row]
+        req.finish_slot = now
+        self.finished.append(req)
+        self.active[row] = None
+        self.allocator.free(row)
+        self.block_tables[row] = -1
+        self.pos[row] = 0
+        self.slot_age[row] = 0
+
+    def _preempt(self, row: int) -> None:
+        """Bounce an active request back to pending (pages exhausted).
+
+        Its pages return to the pool and its generation restarts from a
+        fresh prefill on re-admission — identical tokens under greedy.
+        """
+        req = self.active[row]
+        self.allocator.free(row)
+        self.block_tables[row] = -1
+        self.pos[row] = 0
+        self.slot_age[row] = 0
+        self.active[row] = None
+        req.generated = None
+        req.start_slot = None
+        self.pending.insert(0, req)
+        self.preemptions += 1
+
+    def admit_pending(self, now: int, lookahead: int = 1) -> int:
+        """Fill free rows from the pending queue with ONE bucketed prefill.
+
+        Admission = page allocation: a request enters only if the pool can
+        cover its prompt plus this slot's ``lookahead`` decode writes (the
+        slot's page demand is known, so pre-paying it here means admission
+        never immediately preempts; growth beyond the slot still comes page
+        by page). All k admissions share one batch-R prefill + one scatter
+        per segment; pad rows carry out-of-range page ids and are dropped.
+        """
+        R, P, ps = self.ecfg.max_active, self.ecfg.prompt_len, self.ecfg.page_size
+        npp = P // ps
+        take: list = []
+        for row in self.free_slots():
+            if not self.pending:
+                break
+            req = self.pending[0]
+            if req.max_new_tokens > self.MP * ps - P + 1:
+                raise ValueError(
+                    f"request {req.rid}: max_new_tokens {req.max_new_tokens} "
+                    f"exceeds the block table ({self.MP} pages x {ps})"
+                )
+            # pages are keyed by engine row, not req.rid: a row uniquely owns
+            # its request while active, whereas rids are only unique per
+            # RequestSource (two sources feeding one engine may collide)
+            pages = self.allocator.alloc(row, min(P + lookahead, self.MP * ps))
+            if pages is None:
+                self.alloc_failures += 1
+                break
+            self.pending.pop(0)
+            take.append((row, req, pages))
+        if not take:
+            return 0
+        toks = np.zeros((R, P), np.int32)
+        page_idx = np.full((R, npp), self.ecfg.num_pages, np.int32)  # pad: drop
+        for j, (row, req, pages) in enumerate(take):
+            toks[j] = self._bucket(req.tokens, req)
+            page_idx[j] = pages[:npp]
+        logits, state = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        self.prefill_dispatches += 1
+        self.pools = self._splice_prompt(
+            self.pools, state.caches, jnp.asarray(page_idx)
+        )
+        first = np.asarray(jnp.argmax(logits[: len(take)], axis=-1))
+        for j, (row, req, pages) in enumerate(take):
+            req.start_slot = now
+            req.generated = [int(first[j])]
+            self.active[row] = req
+            self.block_tables[row, : len(pages)] = pages
+            self.pos[row] = P
+            self.slot_age[row] = 1   # first token came from prefill
+        self.peak_active = max(self.peak_active, sum(r is not None for r in self.active))
+        return len(take)
+
+    def _ensure_pages(self, n_steps: int) -> None:
+        """Pre-extend every active row to cover this slot's decode writes.
+
+        The fused scan writes rows pos..pos+n_steps-1 for every active row
+        (finished-mid-scan rows keep writing, masked — the dense trade), so
+        pages must exist up front; growing here keeps the decode dispatch
+        free of host round-trips. Rows the pool cannot cover are preempted.
+        """
+        ps = self.ecfg.page_size
+        for row, req in enumerate(self.active):
+            if req is None:
+                continue
+            need = min(int(self.pos[row]) + n_steps, self.MP * ps)
+            pages = self.allocator.extend(row, need)
+            if pages is None:
+                self._preempt(row)
+                continue
+            self.block_tables[row, : len(pages)] = pages
+
+    def step_slot(self, now: int, n_steps: int = 1) -> dict:
+        """One control slot: batched admit -> page extension -> scan decode
+        -> retire (pages freed). <= 1 prefill + 1 decode dispatch."""
+        admitted = self.admit_pending(now, lookahead=n_steps)
+        self._ensure_pages(n_steps)
+        self.occupancy_hwm = self.occupancy()
+        n_active = sum(r is not None for r in self.active)
+        per_step = [0] * n_steps
+        if n_active:
+            toks = jnp.asarray(
+                [r.generated[-1] if r else 0 for r in self.active], jnp.int32
+            )
+            state = M.PagedDecodeState(
+                pools=self.pools,
+                block_tables=jnp.asarray(self.block_tables),
+                pos=jnp.asarray(self.pos),
+                last_tok=toks,
+            )
+            self._key, sub = jax.random.split(self._key)
+            all_toks, state = self._decode_n(
+                self.params, state, toks, sub, n=n_steps
+            )
+            self.pools = state.pools
+            self.decode_dispatches += 1
+            all_toks = np.asarray(all_toks)  # (n_steps, R)
+            for row, req in enumerate(self.active):
+                if req is None:
+                    continue
+                self.pos[row] += n_steps     # the scan wrote n_steps rows
+                take = int(min(n_steps, req.max_new_tokens - self.slot_age[row]))
+                req.generated.extend(int(x) for x in all_toks[:take, row])
+                self.slot_age[row] += take
+                if self.slot_age[row] >= req.max_new_tokens:
+                    per_step[max(take - 1, 0)] += 1
+                    self._retire(row, now)
+        served = sum(per_step)
+        self.served_history.append(served)
+        self.steps += n_steps
+        return {
+            "active": n_active,
+            "queue": len(self.pending),
+            "served": served,
+            "served_per_step": per_step,
+            "admitted": admitted,
+            "finished_total": len(self.finished),
+            "occupancy": self.occupancy(),
+            "preemptions": self.preemptions,
         }
 
 

@@ -24,6 +24,7 @@ class Request:
     start_slot: Optional[int] = None
     finish_slot: Optional[int] = None
     generated: Optional[list] = None
+    truncated: bool = False       # prompt exceeded the engine's bucket
 
 
 @dataclasses.dataclass

@@ -25,7 +25,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.control import DriftPlusPenalty, LatencyAware, Policy, Static
+from repro.control import DriftPlusPenalty, LatencyAware, MemoryAware, Policy, Static
 from repro.control.policy import drift_plus_penalty_action
 from repro.core.utility import Utility, paper_utility
 
@@ -78,22 +78,35 @@ class PolicyScheduler:
         # over device-resident tables (same table shapes => same compile, so
         # sweeps over V never re-trace). Anything else that satisfies the
         # Policy protocol runs its own act() via the shared static-arg jit.
-        self._table_path = type(self.policy) in (DriftPlusPenalty, LatencyAware)
+        self._table_path = type(self.policy) in (DriftPlusPenalty, LatencyAware, MemoryAware)
         if self._table_path:
             f, s, lam = self.policy.tables()
             self._f_tab = jax.device_put(f)
             self._s_tab = jax.device_put(s)
             self._lam_tab = jax.device_put(lam)
             self._V = jax.device_put(jnp.float32(self.policy.V))
-            cost_gain = getattr(self.policy, "cost_gain", 0.0)
+            # virtual-queue price per unit rate: LatencyAware's action cost
+            # or MemoryAware's committed-page cost (zeros = unconstrained)
+            if isinstance(self.policy, LatencyAware):
+                cost = self.policy.cost_gain
+            elif isinstance(self.policy, MemoryAware):
+                cost = self.policy.mem_gain * self.policy.pages_per_request
+            else:
+                cost = 0.0
             self._cost_tab = jax.device_put(
-                jnp.float32(cost_gain) * f if cost_gain else jnp.zeros_like(f)
+                jnp.float32(cost) * f if cost else jnp.zeros_like(f)
             )
         self._carry = self.policy.init()
         self.dropped = 0
         self.rate_history: list = []
 
-    def control(self, backlog: int) -> float:
+    def control(self, backlog: int, occupancy: Optional[float] = None) -> float:
+        """One control-slot decision. ``occupancy`` (the paged engine's
+        page-pool fill fraction) feeds observation-driven virtual queues —
+        policies exposing ``observe`` (e.g. ``MemoryAware``) advance on it
+        before acting; other policies ignore it."""
+        if occupancy is not None and hasattr(self.policy, "observe"):
+            self._carry = self.policy.observe(self._carry, occupancy)
         if self._static_rate is not None:  # no device round-trip for baselines
             f = float(self._static_rate)
         elif self._table_path:
@@ -102,7 +115,10 @@ class PolicyScheduler:
                 jnp.asarray(backlog, jnp.float32), self._f_tab, self._s_tab,
                 self._lam_tab, self._V, vq, self._cost_tab,
             )
-            if hasattr(self._carry, "step"):  # advance the virtual queue
+            # LatencyAware's queue is priced by the chosen ACTION and
+            # advances here; MemoryAware's advances on OBSERVED occupancy
+            # (in observe, above) and must not double-step.
+            if isinstance(self.policy, LatencyAware):
                 self._carry = self._carry.step(self.policy.cost_gain * f_star)
             f = float(f_star)
         else:
@@ -140,3 +156,20 @@ def AdaptiveScheduler(
 def StaticScheduler(rate: float = 10.0, capacity: int = 256) -> PolicyScheduler:
     """Paper baseline: fixed sampling rate, no queue awareness."""
     return PolicyScheduler(policy=Static(rate=float(rate)), capacity=capacity)
+
+
+def MemoryAwareScheduler(
+    rates: tuple = tuple(float(f) for f in range(1, 11)),
+    V: float = 50.0,
+    pages_per_request: float = 2.0,
+    occupancy_budget: float = 0.6,
+    mem_gain: float = 1.0,
+    capacity: int = 256,
+) -> PolicyScheduler:
+    """Algorithm-1 scheduler that also prices page-pool occupancy."""
+    policy = MemoryAware(
+        rates=tuple(float(f) for f in rates), V=V,
+        pages_per_request=pages_per_request,
+        occupancy_budget=occupancy_budget, mem_gain=mem_gain,
+    )
+    return PolicyScheduler(policy=policy, capacity=capacity)

@@ -22,10 +22,15 @@ from repro.runtime.request import RequestSource
 def serve(engine: Engine, scheduler, source: RequestSource, *,
           horizon: int, steps_per_slot: int = 2, fused: bool = True) -> dict:
     trace = {"backlog": [], "rate": [], "served": [], "active": [],
-             "dropped": [], "dispatches": []}
+             "dropped": [], "dispatches": [], "occupancy": []}
+    paged = hasattr(engine, "occupancy")
     for t in range(horizon):
         d0 = engine.prefill_dispatches + engine.decode_dispatches
-        rate = scheduler.control(engine.queue_len())
+        # the observation is the previous slot's commitment peak: end-of-slot
+        # occupancy dips as retirements free pages, hiding the pressure the
+        # controller must price
+        occ = max(engine.occupancy(), engine.occupancy_hwm) if paged else None
+        rate = scheduler.control(engine.queue_len(), occupancy=occ)
         reqs = source.poll(t, rate)
         scheduler.admit(engine, reqs, t)
         if fused:
@@ -44,6 +49,7 @@ def serve(engine: Engine, scheduler, source: RequestSource, *,
         trace["dispatches"].append(
             engine.prefill_dispatches + engine.decode_dispatches - d0
         )
+        trace["occupancy"].append(engine.occupancy_hwm if paged else 0.0)
     return {k: np.asarray(v) for k, v in trace.items()}
 
 

@@ -5,7 +5,12 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops
-from repro.kernels.ref import attention_ref, decode_attention_ref, ssd_ref
+from repro.kernels.ref import (
+    attention_ref,
+    decode_attention_ref,
+    paged_decode_attention_ref,
+    ssd_ref,
+)
 
 KEY = jax.random.PRNGKey(7)
 
@@ -45,6 +50,32 @@ def test_decode_attention_sweep(B, H, KVH, hd, L, blk, dtype, window):
                                v.astype(jnp.float32), sp, pos, window=window)
     out = ops.decode_attention(q, k, v, sp, pos, window=window,
                                impl="interpret", block_l=blk)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KVH,hd,N,ps,MP", [(2, 4, 2, 64, 16, 64, 4), (1, 8, 1, 128, 8, 128, 2)])
+def test_paged_attention_kernel_sweep(B, H, KVH, hd, N, ps, MP, dtype):
+    """Pallas paged kernel (scalar-prefetch block-table gather) vs oracle,
+    with permuted physical pages, a partially-filled tail page, and
+    unallocated logical pages."""
+    kp = jax.random.normal(KEY, (N, ps, KVH, hd), dtype)
+    vp = jax.random.normal(jax.random.fold_in(KEY, 11), (N, ps, KVH, hd), dtype)
+    q = jax.random.normal(jax.random.fold_in(KEY, 12), (B, H, hd), dtype)
+    perm = np.random.default_rng(0).permutation(N)
+    bt = np.full((B, MP), -1, np.int32)
+    npages = [MP, max(MP // 2, 1)][:B] + [1] * max(B - 2, 0)
+    k = 0
+    for b in range(B):
+        for p in range(npages[b]):
+            bt[b, p] = perm[k]
+            k += 1
+    pos = jnp.asarray([npg * ps - ps // 3 - 1 for npg in npages], jnp.int32)
+    bt = jnp.asarray(bt)
+    ref = paged_decode_attention_ref(
+        q.astype(jnp.float32), kp.astype(jnp.float32), vp.astype(jnp.float32), bt, pos
+    )
+    out = ops.paged_decode_attention(q, kp, vp, bt, pos, impl="interpret")
     np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref), **_tol(dtype))
 
 

@@ -31,6 +31,15 @@ def test_serve_launcher_adaptive_vs_static():
     assert "policy=static" in s.stdout
 
 
+def test_serve_launcher_paged_memory_aware():
+    p = _run(["repro.launch.serve", "--arch", "granite-3-2b", "--smoke",
+              "--policy", "memory-aware", "--paged", "--horizon", "10",
+              "--num-pages", "24", "--max-active", "8", "--raw-rate", "5"])
+    assert p.returncode == 0, p.stdout + p.stderr
+    assert "policy=memory-aware" in p.stdout
+    assert "paged:" in p.stdout and "alloc_failures=0" in p.stdout
+
+
 def test_examples_quickstart():
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC

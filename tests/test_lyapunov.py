@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 from hypcompat import given, settings, strategies as st
 
-from repro.core.lyapunov import (
+from repro.control import (
     LyapunovController,
     VirtualQueue,
     distributed_action,

@@ -1,0 +1,349 @@
+"""The paged KV-cache subsystem: allocator invariants, paged/dense
+equivalence, engine integration, and memory-aware admission control.
+
+Covers the PR's contract:
+  * PageAllocator never double-allocates across arbitrary alloc/extend/free
+    interleavings; occupancy accounting is exact (property tests),
+  * paged decode attention is bit-for-float the dense reference on
+    shared-length workloads (same shapes, masks, reduction order),
+  * PagedEngine generates the same tokens as the dense Engine for the same
+    workload while serving more concurrent requests at equal KV memory,
+    within the <= 1 prefill + 1 decode dispatch budget per control slot,
+  * requests grow past cache_len by appending pages; retirement frees them,
+  * MemoryAware keeps pool occupancy below capacity on a bursty trace where
+    Static saturates it (allocation failures).
+"""
+import copy
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypcompat import given, settings, strategies as st
+
+from repro.cache import PageAllocator, pages_for
+from repro.configs import get_config
+from repro.control import MemoryAware, Policy, Static
+from repro.kernels.ref import decode_attention_ref, paged_decode_attention_ref
+from repro.models import init_params
+from repro.runtime import (
+    Engine,
+    EngineConfig,
+    MemoryAwareScheduler,
+    PagedEngine,
+    PagedEngineConfig,
+    PolicyScheduler,
+    RequestSource,
+    serve,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------- allocator
+@given(num_pages=st.integers(1, 40), page_size=st.integers(1, 32),
+       seed=st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_allocator_never_double_allocates(num_pages, page_size, seed):
+    """Random alloc/extend/free interleavings: every page is owned exactly
+    once (free list or one block table), occupancy accounting is exact."""
+    rng = np.random.default_rng(seed)
+    alloc = PageAllocator(num_pages, page_size)
+    live: dict[int, int] = {}   # rid -> tokens
+    rid = 0
+    for _ in range(60):
+        op = rng.integers(0, 3)
+        if op == 0:
+            tokens = int(rng.integers(0, 3 * page_size + 1))
+            table = alloc.alloc(rid, tokens)
+            if table is not None:
+                assert len(table) == pages_for(tokens, page_size)
+                live[rid] = tokens
+                rid += 1
+            else:   # refusal must be honest and non-destructive
+                assert pages_for(tokens, page_size) > alloc.free_pages
+        elif op == 1 and live:
+            r = int(rng.choice(list(live)))
+            tokens = live[r] + int(rng.integers(0, 2 * page_size + 1))
+            table = alloc.extend(r, tokens)
+            if table is not None:
+                assert len(table) == pages_for(tokens, page_size)
+                live[r] = tokens
+        elif op == 2 and live:
+            r = int(rng.choice(list(live)))
+            freed = alloc.free(r)
+            assert freed == pages_for(live.pop(r), page_size)
+        alloc.check()
+        used = sum(pages_for(t, page_size) for t in live.values())
+        assert alloc.used_pages == used
+        assert alloc.occupancy() == used / num_pages
+    for r in list(live):
+        alloc.free(r)
+    assert alloc.used_pages == 0 and alloc.free_pages == num_pages
+
+
+def test_allocator_alloc_free_roundtrip_exact():
+    a = PageAllocator(8, 4)
+    t1 = a.alloc(1, 10)          # 3 pages
+    t2 = a.alloc(2, 4)           # 1 page
+    assert len(t1) == 3 and len(t2) == 1
+    assert set(t1).isdisjoint(t2)
+    assert a.used_pages == 4 and a.occupancy() == 0.5
+    assert a.alloc(3, 100) is None and a.used_pages == 4   # atomic refusal
+    t1b = a.extend(1, 14)        # grow to 4 pages
+    assert t1b[:3] == t1 and len(t1b) == 4
+    assert a.free(1) == 4 and a.free(2) == 1
+    assert a.free_pages == 8
+    with pytest.raises(KeyError):
+        a.free(1)
+    a.check()
+
+
+def test_allocator_stats_fragmentation():
+    a = PageAllocator(8, 4)
+    a.alloc(7, 5)                # 2 pages for 5 tokens -> 3 frag rows
+    s = a.stats()
+    assert s.used_pages == 2 and s.frag_tokens == 3
+    assert s.peak_used_pages == 2 and s.num_requests == 1
+
+
+# ---------------------------------------------------- paged == dense (float)
+@given(seed=st.integers(0, 10_000), mp=st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_paged_ref_bitwise_matches_dense_ref(seed, mp):
+    """Scatter a dense cache into randomly-permuted pages: the paged oracle
+    must reproduce the dense oracle bit-for-float (shared-length layout)."""
+    rng = np.random.default_rng(seed)
+    B, H, KVH, hd, ps = 2, 4, 2, 16, 8
+    L = mp * ps
+    N = 2 * B * mp
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (B, H, hd))
+    dense_k = jax.random.normal(jax.random.fold_in(key, 1), (B, L, KVH, hd))
+    dense_v = jax.random.normal(jax.random.fold_in(key, 2), (B, L, KVH, hd))
+    pos = jnp.asarray(rng.integers(0, L, B), jnp.int32)
+    perm = list(rng.permutation(N))
+    kp = jnp.zeros((N, ps, KVH, hd))
+    vp = jnp.zeros((N, ps, KVH, hd))
+    bt = np.full((B, mp), -1, np.int32)
+    for b in range(B):
+        for p in range(int(pos[b]) // ps + 1):      # allocated prefix only
+            phys = perm.pop()
+            bt[b, p] = phys
+            kp = kp.at[phys].set(dense_k[b, p * ps:(p + 1) * ps])
+            vp = vp.at[phys].set(dense_v[b, p * ps:(p + 1) * ps])
+    paged = paged_decode_attention_ref(q, kp, vp, jnp.asarray(bt), pos)
+    j = jnp.arange(L)[None, :]
+    slot_pos = jnp.where(j <= pos[:, None], j, -1)
+    dense = decode_attention_ref(q, dense_k, dense_v, slot_pos, pos)
+    np.testing.assert_array_equal(np.asarray(paged), np.asarray(dense))
+
+
+# ------------------------------------------------------------ engine paths
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("granite-3-2b", smoke=True)
+    params = init_params(KEY, cfg)
+    return cfg, params
+
+
+def _paged(cfg, params, **kw):
+    base = dict(prompt_len=16, cache_len=64, page_size=16, num_pages=16,
+                max_active=8)
+    base.update(kw)
+    return PagedEngine(cfg, params, PagedEngineConfig(**base))
+
+
+def _reqs(cfg, n, max_new=4, seed=3):
+    src = RequestSource(vocab_size=cfg.vocab_size, prompt_len=16, raw_rate=n,
+                        max_new_tokens=max_new, seed=seed)
+    return src.poll(0, float(n))
+
+
+def test_paged_engine_matches_dense_tokens(setup):
+    """Same workload, greedy: identical generated tokens per request, while
+    the paged engine runs them all concurrently in HALF the dense path's KV
+    memory (16*16 = 256 rows vs 4*64 = 256 rows... at 8 rows in flight)."""
+    cfg, params = setup
+    reqs = _reqs(cfg, 8)
+    dense = Engine(cfg, params, EngineConfig(batch_slots=4, prompt_len=16,
+                                             cache_len=64))
+    paged = _paged(cfg, params)
+    dense.submit([copy.deepcopy(r) for r in reqs])
+    paged.submit([copy.deepcopy(r) for r in reqs])
+    for t in range(12):
+        dense.step_slot(t, n_steps=2)
+        paged.step_slot(t, n_steps=2)
+    assert len(paged.finished) == len(dense.finished) == len(reqs)
+    gen_d = {r.rid: r.generated for r in dense.finished}
+    gen_p = {r.rid: r.generated for r in paged.finished}
+    assert gen_p == gen_d
+    # equal KV memory (256 rows each side) but paged held all 8 in flight
+    assert paged.peak_active == 8 > dense.ecfg.batch_slots
+    # retirement returned every page
+    assert paged.allocator.used_pages == 0
+    paged.allocator.check()
+
+
+def test_paged_dispatch_budget(setup):
+    """<= 1 prefill + 1 decode jit dispatch per control slot, paged path."""
+    cfg, params = setup
+    eng = _paged(cfg, params)
+    sch = MemoryAwareScheduler(rates=tuple(float(f) for f in range(1, 6)),
+                               V=20.0, capacity=32)
+    src = RequestSource(vocab_size=cfg.vocab_size, prompt_len=16, raw_rate=5,
+                        max_new_tokens=4)
+    horizon = 15
+    tr = serve(eng, sch, src, horizon=horizon, steps_per_slot=3, fused=True)
+    assert eng.prefill_dispatches <= horizon
+    assert eng.decode_dispatches <= horizon
+    assert int(tr["dispatches"].max()) <= 2
+    assert int(tr["served"].sum()) > 0
+
+
+def test_paged_request_grows_past_cache_len(setup):
+    """A request may exceed cache_len by appending pages: max_pages_per_req
+    raises the block-table bound past cache_len/page_size."""
+    cfg, params = setup
+    eng = _paged(cfg, params, cache_len=32, max_pages_per_req=5,
+                 num_pages=8, max_active=2)
+    reqs = _reqs(cfg, 1, max_new=50)      # 16 + 49 rows = 65 > cache_len 32
+    eng.submit(reqs)
+    t = 0
+    while not eng.finished and t < 40:
+        eng.step_slot(t, n_steps=4)
+        t += 1
+    assert len(eng.finished) == 1
+    assert len(eng.finished[0].generated) == 50
+    assert eng.allocator.used_pages == 0   # pages came back
+    assert eng.allocator.peak_used_pages == 5  # grew to the block-table cap
+    eng.allocator.check()
+
+
+def test_paged_preemption_recovers(setup):
+    """Pool too small for both requests' growth: admission fits both (2
+    pages each), but when both must append their third page only one free
+    page exists — the loser is preempted (pages freed, re-queued) and still
+    finishes with the right token count."""
+    cfg, params = setup
+    eng = _paged(cfg, params, cache_len=64, num_pages=5, max_active=2,
+                 max_pages_per_req=3)
+    reqs = _reqs(cfg, 2, max_new=20)      # each needs 3 pages eventually
+    eng.submit([copy.deepcopy(r) for r in reqs])
+    t = 0
+    while len(eng.finished) < 2 and t < 60:
+        eng.step_slot(t, n_steps=2)
+        t += 1
+    assert len(eng.finished) == 2
+    assert eng.preemptions > 0
+    assert all(len(r.generated) == 20 for r in eng.finished)
+    # greedy preempt-and-recompute reproduces the dense engine's tokens
+    dense = Engine(cfg, params, EngineConfig(batch_slots=2, prompt_len=16,
+                                             cache_len=64))
+    dense.submit([copy.deepcopy(r) for r in reqs])
+    for td in range(40):
+        dense.step_slot(td, n_steps=2)
+    gen_d = {r.rid: r.generated for r in dense.finished}
+    gen_p = {r.rid: r.generated for r in eng.finished}
+    assert gen_p == gen_d
+    assert eng.allocator.used_pages == 0
+
+
+def test_memory_aware_policy_protocol():
+    p = MemoryAware(rates=(1.0, 2.0, 4.0), V=20.0)
+    assert isinstance(p, Policy)
+    carry = p.init()
+    carry = p.observe(carry, 0.9)          # above budget -> queue grows
+    assert float(carry.value) > 0.0
+    f, carry2 = p.act(carry, jnp.float32(0.0))
+    assert float(f) in (1.0, 2.0, 4.0)
+    assert float(carry2.value) == float(carry.value)   # act does not advance
+    # a loaded memory queue must never pick a higher rate
+    hot = p.init().step(5.0)
+    f_hot, _ = p.act(hot, jnp.float32(0.0))
+    assert float(f_hot) <= float(f)
+
+
+def test_scheduler_memory_aware_table_path_matches_policy_act():
+    """The scheduler's shared table fast-path must track the observe->act
+    sequence of MemoryAware.act exactly, slot for slot."""
+    p = MemoryAware(rates=tuple(float(f) for f in range(1, 7)), V=20.0,
+                    pages_per_request=2.0, occupancy_budget=0.4, mem_gain=5.0)
+    sch = PolicyScheduler(policy=p)
+    carry = p.init()
+    for q, occ in [(0, 0.0), (2, 0.7), (5, 0.9), (0, 0.9), (1, 0.2), (0, 0.0)]:
+        carry = p.observe(carry, occ)
+        f_ref, carry = p.act(carry, jnp.float32(q))
+        assert sch.control(q, occupancy=occ) == float(f_ref)
+
+
+def test_memory_aware_avoids_pool_overflow_where_static_overflows(setup):
+    """The acceptance trace: a calm phase then a sustained arrival burst
+    into a small page pool. Static max-rate saturates the pool (occupancy
+    pinned at capacity, allocation failures every slot); MemoryAware — the
+    occupancy virtual queue already loaded from the calm phase — throttles
+    sampling before the pool, so it never exhausts: zero allocation
+    failures, zero preemptions, peak occupancy strictly below 1."""
+    cfg, params = setup
+
+    def run(sch):
+        eng = _paged(cfg, params, num_pages=12, max_active=8, cache_len=32)
+        calm = RequestSource(vocab_size=cfg.vocab_size, prompt_len=16,
+                             raw_rate=2, max_new_tokens=6, seed=11)
+        burst = RequestSource(vocab_size=cfg.vocab_size, prompt_len=16,
+                              raw_rate=8, max_new_tokens=6, seed=12)
+        t1 = serve(eng, sch, calm, horizon=6, steps_per_slot=3)
+        t2 = serve(eng, sch, burst, horizon=12, steps_per_slot=3)
+        return eng, np.concatenate([t1["occupancy"], t2["occupancy"]]), \
+            int(t1["served"].sum() + t2["served"].sum())
+
+    eng_s, occ_s, srv_s = run(PolicyScheduler(policy=Static(rate=8.0), capacity=64))
+    eng_m, occ_m, srv_m = run(MemoryAwareScheduler(
+        rates=tuple(float(f) for f in range(1, 7)), V=20.0,
+        pages_per_request=2.0, occupancy_budget=0.35, mem_gain=5.0,
+        capacity=64))
+
+    assert eng_s.alloc_failures > 0                   # static hits the wall
+    assert occ_s.max() == 1.0
+    assert eng_m.alloc_failures == 0                  # controller never does
+    assert eng_m.preemptions == 0
+    assert occ_m.max() < 1.0
+    assert srv_m > 0
+
+
+# ------------------------------------------------------------- bucket fix
+def test_bucket_pads_with_sentinel_and_flags_truncation(setup):
+    cfg, params = setup
+    from repro.runtime.engine import PAD_ID, _bucket_prompt
+
+    short, trunc = _bucket_prompt(np.arange(1, 6, dtype=np.int32), 8)
+    assert not trunc
+    np.testing.assert_array_equal(short, [1, 2, 3, 4, 5, PAD_ID, PAD_ID, PAD_ID])
+    long, trunc = _bucket_prompt(np.arange(1, 20, dtype=np.int32), 8)
+    assert trunc and list(long) == list(range(1, 9))
+
+    # engine path records the flag on the Request (both engines)
+    for eng in (Engine(cfg, params, EngineConfig(batch_slots=2, prompt_len=16,
+                                                 cache_len=64)),
+                _paged(cfg, params, max_active=2)):
+        reqs = _reqs(cfg, 2, max_new=2)
+        reqs[0].tokens = np.arange(30, dtype=np.int32)      # too long
+        reqs[1].tokens = np.arange(4, dtype=np.int32)       # short -> padded
+        eng.submit(reqs)
+        eng.step_slot(0, n_steps=2)
+        assert reqs[0].truncated and not reqs[1].truncated
+
+
+# ----------------------------------------------------------------- cleanup
+def test_core_lyapunov_shim_warns_and_reexports():
+    import importlib
+    import repro.core.lyapunov as shim
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        shim = importlib.reload(shim)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    from repro.control import LyapunovController, drift_plus_penalty_action
+    assert shim.LyapunovController is LyapunovController
+    assert shim.drift_plus_penalty_action is drift_plus_penalty_action
