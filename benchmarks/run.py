@@ -221,6 +221,103 @@ def bench_paged_vs_dense_decode(quick=False):
     return us, derived
 
 
+def bench_serve_sync_free(quick=False):
+    """Sync-free serving (device-resident decode loop + ragged length-aware
+    prefill) vs the PR-1 fused path at equal engine geometry.
+
+    Throughput: continuous serving into an over-provisioned 64-token prompt
+    bucket with short ragged prompts (4..16) — the padding-waste + host-sync
+    regime the optimization targets. The fused baseline pads every admission
+    to the full bucket and blocks on a token readback every slot (~2
+    dispatch-gating syncs); the sync-free loop samples, detects EOS, and
+    accumulates tokens on device, reading back only a tiny async counter
+    copy one slot later (0 blocking syncs).
+
+    Equivalence: a fixed request set driven to completion must produce
+    bit-identical greedy tokens across legacy fused / sync-free on BOTH the
+    dense and paged engines. us_per_call = sync-free us per control slot.
+    """
+    import copy
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.runtime import (Engine, EngineConfig, PagedEngine,
+                               PagedEngineConfig, RequestSource,
+                               StaticScheduler, serve)
+
+    cfg = get_config("granite-3-2b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    P, horizon = 64, (10 if quick else 25)
+    reps = 2 if quick else 3
+    mk_src = lambda s: RequestSource(vocab_size=cfg.vocab_size, prompt_len=16,
+                                     min_prompt_len=4, raw_rate=8,
+                                     max_new_tokens=6, seed=s)
+
+    def tokens_of(eng):
+        return (sum(len(r.generated) for r in eng.finished)
+                + sum(len(r.generated or []) for r in eng.active if r))
+
+    def run(ragged, sync_free):
+        eng = Engine(cfg, params, EngineConfig(batch_slots=8, prompt_len=P,
+                                               cache_len=128,
+                                               ragged_prefill=ragged))
+        serve(eng, StaticScheduler(rate=8.0, capacity=256), mk_src(0),
+              horizon=6, steps_per_slot=2, sync_free=sync_free)  # warm jits
+        best_tps, syncs, dt_best = 0.0, 0.0, 0.0
+        for rep in range(reps):
+            eng.pending.clear()
+            tok0, t0 = tokens_of(eng), time.perf_counter()
+            tr = serve(eng, StaticScheduler(rate=8.0, capacity=256),
+                       mk_src(rep + 1), horizon=horizon, steps_per_slot=2,
+                       sync_free=sync_free)
+            dt = time.perf_counter() - t0
+            tps = (tokens_of(eng) - tok0) / dt
+            if tps > best_tps:
+                best_tps, dt_best = tps, dt
+            syncs = float(tr["syncs"].mean())
+        return best_tps, syncs, dt_best
+
+    tps_s, syncs_s, dt_s = run(ragged=True, sync_free=True)
+    tps_f, syncs_f, _ = run(ragged=False, sync_free=False)
+
+    def drive(eng, sync):
+        src = RequestSource(vocab_size=cfg.vocab_size, prompt_len=16,
+                            min_prompt_len=3, raw_rate=12, max_new_tokens=6,
+                            seed=7)
+        eng.submit(copy.deepcopy(src.poll(0, 12.0)))
+        step = eng.step_slot_sync if sync else eng.step_slot
+        t = 0
+        while len(eng.finished) < 12 and t < 60:
+            step(t, n_steps=2)
+            t += 1
+        if sync:
+            eng.drain()
+        return {r.rid: r.generated for r in eng.finished}
+
+    mk_d = lambda: Engine(cfg, params, EngineConfig(batch_slots=4,
+                                                    prompt_len=16, cache_len=64))
+    mk_p = lambda: PagedEngine(cfg, params, PagedEngineConfig(
+        prompt_len=16, cache_len=64, page_size=16, num_pages=24, max_active=8))
+    dense_legacy, dense_sync = drive(mk_d(), False), drive(mk_d(), True)
+    paged_legacy, paged_sync = drive(mk_p(), False), drive(mk_p(), True)
+    same = (dense_legacy == dense_sync == paged_sync
+            and paged_legacy == paged_sync)
+
+    us = dt_s / horizon * 1e6
+    derived = (
+        f"sync_free_tps={tps_s:.1f};fused_tps={tps_f:.1f}"
+        f";speedup={tps_s / tps_f:.2f}x"
+        f";sync_free_syncs_per_slot={syncs_s:.2f}"
+        f";fused_syncs_per_slot={syncs_f:.2f}"
+        f";same_tokens={same}"
+    )
+    if not same:
+        derived = "TOKEN_MISMATCH;" + derived
+    if syncs_s > 0:
+        derived = "SYNC_VIOLATION;" + derived
+    return us, derived
+
+
 def bench_flash_attention(quick=False):
     """XLA flash path per-call time + kernel/oracle agreement."""
     from repro.kernels import ops
@@ -277,9 +374,12 @@ def bench_roofline_table():
     return 0.0, derived
 
 
-# Fast subset exercised by `--smoke` (and CI): one controller row, one
-# engine row — enough to catch a rotten perf entrypoint in ~a minute.
-SMOKE_BENCHES = ("controller_overhead", "paged_vs_dense_decode")
+# Fast subset exercised by `--smoke` (and CI): one controller row, two
+# engine rows — enough to catch a rotten perf entrypoint in ~a minute. The
+# gate fails on errors, token mismatches, and any steady-state blocking
+# sync in the sync-free serve loop.
+SMOKE_BENCHES = ("controller_overhead", "paged_vs_dense_decode",
+                 "serve_sync_free")
 
 
 def main() -> None:
@@ -303,6 +403,7 @@ def main() -> None:
         ("serving_engine_e2e", lambda: bench_serving_engine(args.quick)),
         ("serve_fused_vs_legacy", lambda: bench_serve_fused_vs_legacy(args.quick)),
         ("paged_vs_dense_decode", lambda: bench_paged_vs_dense_decode(args.quick)),
+        ("serve_sync_free", lambda: bench_serve_sync_free(args.quick)),
         ("flash_attention_xla", lambda: bench_flash_attention(args.quick)),
         ("ssd_scan_xla", lambda: bench_ssd_scan(args.quick)),
         ("roofline_table", bench_roofline_table),
@@ -328,7 +429,8 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=1)
     if args.smoke and any(r["us_per_call"] is None or
-                          r["derived"].startswith("TOKEN_MISMATCH")
+                          r["derived"].startswith(("TOKEN_MISMATCH",
+                                                   "SYNC_VIOLATION"))
                           for r in rows):
         sys.exit(1)
 

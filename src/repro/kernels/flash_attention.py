@@ -14,6 +14,16 @@ under the ~16 MB VMEM of a v5e core, and all matmul dims are multiples of
 the 128-lane MXU. Causal masking skips fully-masked KV tiles via pl.when
 (no FLOPs spent above the diagonal). Optional sliding window.
 
+Ragged (length-aware) prefill: ``seq_lens`` (B,) int32 rides in via
+``PrefetchScalarGridSpec`` scalar prefetch, so the per-row prompt length is
+known *before* each tile's DMA is issued. KV tiles that lie entirely in a
+row's padding (``k_start >= seq_lens[b]``) are ``pl.when``-skipped — short
+prompts in a shared bucket stop paying full-bucket FLOPs — and padded key
+columns are masked. Skipping is bit-exact: a fully-padded tile contributes
+exp(-inf) = 0 to the online softmax, i.e. a no-op. Query rows at or beyond
+the row's length are zeroed in the output (their values are padding and
+must not be consumed).
+
 Numerics: scores/softmax in f32 (preferred_element_type), inputs bf16/f32.
 """
 from __future__ import annotations
@@ -83,6 +93,65 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         o_ref[0, :, 0, :] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def _attn_kernel_ragged(lens_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                        acc_ref, *, scale, block_q, block_k, nk, causal, window):
+    b = pl.program_id(0)
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    slen = lens_ref[b]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # Live unless entirely above the diagonal / outside window / entirely in
+    # this row's padding (the length-aware skip — no FLOPs on padded tiles).
+    live = k_start < slen
+    if causal:
+        live = jnp.logical_and(live, k_start <= q_start + block_q - 1)
+    if window is not None:
+        live = jnp.logical_and(live, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :]
+        k = k_ref[0, :, 0, :]
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < slen
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+        out = jnp.where(rows < slen, acc_ref[...] / l, 0.0)
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
 def flash_attention(
     q: jax.Array,                 # (B, S, H, hd)
     k: jax.Array,                 # (B, S, KVH, hd)
@@ -90,6 +159,7 @@ def flash_attention(
     *,
     causal: bool = True,
     window: int | None = None,
+    seq_lens: jax.Array | None = None,   # (B,) int32 per-row real lengths
     block_q: int = 512,
     block_k: int = 512,
     interpret: bool = False,
@@ -102,6 +172,37 @@ def flash_attention(
     assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, block_q, Sk, block_k)
     nq, nk = Sq // block_q, Sk // block_k
     scale = hd ** -0.5
+
+    if seq_lens is not None:
+        kernel = functools.partial(
+            _attn_kernel_ragged, scale=scale, block_q=block_q,
+            block_k=block_k, nk=nk, causal=causal, window=window,
+        )
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, H, nq, nk),
+            in_specs=[
+                pl.BlockSpec((1, block_q, 1, hd),
+                             lambda b, h, qi, ki, lens: (b, qi, h, 0)),
+                pl.BlockSpec((1, block_k, 1, hd),
+                             lambda b, h, qi, ki, lens: (b, ki, h // G, 0)),
+                pl.BlockSpec((1, block_k, 1, hd),
+                             lambda b, h, qi, ki, lens: (b, ki, h // G, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                                   lambda b, h, qi, ki, lens: (b, qi, h, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((block_q, 1), jnp.float32),
+                pltpu.VMEM((block_q, 1), jnp.float32),
+                pltpu.VMEM((block_q, hd), jnp.float32),
+            ],
+        )
+        return pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((B, Sq, H, hd), q.dtype),
+            interpret=interpret,
+        )(seq_lens.astype(jnp.int32), q, k, v)
 
     kernel = functools.partial(
         _attn_kernel, scale=scale, block_q=block_q, block_k=block_k,

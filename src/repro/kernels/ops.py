@@ -24,14 +24,28 @@ from repro.models.ssm import ssd_chunked
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "impl", "block_q", "block_k"))
-def flash_attention(q, k, v, *, causal=True, window=None, impl="xla",
-                    block_q=512, block_k=512):
+def flash_attention(q, k, v, seq_lens=None, *, causal=True, window=None,
+                    impl="xla", block_q=512, block_k=512):
+    """seq_lens (B,) int32 selects the ragged length-aware path: padded keys
+    are masked, padded query rows zeroed, and the Pallas kernel skips KV
+    tiles that lie entirely in a row's padding (scalar-prefetched lengths)."""
     if impl == "xla":
-        return chunked_attention(q, k, v, causal=causal, window=window,
-                                 block_q=block_q, block_k=block_k)
+        if seq_lens is not None and not causal:
+            from repro.kernels.ref import attention_ref
+
+            return attention_ref(q, k, v, causal=False, window=window,
+                                 seq_lens=seq_lens)
+        out = chunked_attention(q, k, v, causal=causal, window=window,
+                                block_q=block_q, block_k=block_k)
+        if seq_lens is not None:
+            # pads never leak into real rows under a causal mask (they sit at
+            # the end); zero the pad rows to match the kernel's output.
+            pos = jnp.arange(q.shape[1])[None, :, None, None]
+            out = jnp.where(pos < seq_lens[:, None, None, None], out, 0)
+        return out
     return _fa.flash_attention(
-        q, k, v, causal=causal, window=window, block_q=block_q,
-        block_k=block_k, interpret=(impl == "interpret"),
+        q, k, v, causal=causal, window=window, seq_lens=seq_lens,
+        block_q=block_q, block_k=block_k, interpret=(impl == "interpret"),
     )
 
 

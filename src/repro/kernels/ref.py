@@ -12,8 +12,13 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def attention_ref(q, k, v, *, causal=True, window=None):
-    """q (B,Sq,H,hd), k/v (B,Sk,KVH,hd) -> (B,Sq,H,hd). Full softmax."""
+def attention_ref(q, k, v, *, causal=True, window=None, seq_lens=None):
+    """q (B,Sq,H,hd), k/v (B,Sk,KVH,hd) -> (B,Sq,H,hd). Full softmax.
+
+    seq_lens (B,) int32: per-row real lengths (ragged prefill). Keys at or
+    beyond a row's length are masked out; query rows at or beyond it are
+    zeroed (their inputs are padding — the value must not be consumed).
+    """
     B, Sq, H, hd = q.shape
     KVH = k.shape[2]
     G = H // KVH
@@ -27,9 +32,17 @@ def attention_ref(q, k, v, *, causal=True, window=None):
         mask &= kpos <= qpos
     if window is not None:
         mask &= kpos > qpos - window
-    s = jnp.where(mask[None, None], s, NEG_INF)
+    mask = jnp.broadcast_to(mask[None], (B, Sq, k.shape[1]))
+    if seq_lens is not None:
+        mask &= kpos[None] < seq_lens[:, None, None]
+    s = jnp.where(mask[:, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(vv.dtype), vv).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vv.dtype), vv).astype(q.dtype)
+    if seq_lens is not None:
+        out = jnp.where(
+            (jnp.arange(Sq)[None, :] < seq_lens[:, None])[..., None, None], out, 0
+        )
+    return out
 
 
 def decode_attention_ref(q, k, v, slot_pos, pos, *, window=None):

@@ -47,6 +47,14 @@ def main():
                     help="memory-aware: target time-average pool occupancy")
     ap.add_argument("--legacy-loop", action="store_true",
                     help="per-step loop (k prefills + n decode dispatches)")
+    ap.add_argument("--sync-free", action="store_true",
+                    help="device-resident decode loop: on-device sampling/"
+                         "EOS, async counter readback, 0 blocking syncs/slot")
+    ap.add_argument("--min-prompt-len", type=int, default=None,
+                    help="ragged workload: prompt lengths uniform in "
+                         "[min, prompt-len] (exercises bucketed prefill)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop token for on-device EOS detection")
     ap.add_argument("--rate", type=float, default=5.0, help="static policy rate")
     ap.add_argument("--V", type=float, default=20.0)
     ap.add_argument("--raw-rate", type=int, default=5)
@@ -59,6 +67,8 @@ def main():
     if args.paged and args.legacy_loop:
         ap.error("--legacy-loop is a dense-engine comparison path; "
                  "the paged engine has no per-step loop")
+    if args.sync_free and args.legacy_loop:
+        ap.error("--sync-free and --legacy-loop are mutually exclusive")
     if args.policy == "memory-aware" and not args.paged:
         ap.error("--policy memory-aware prices page-pool occupancy; "
                  "it requires --paged (the dense engine reports none)")
@@ -69,11 +79,11 @@ def main():
         engine = PagedEngine(cfg, params, PagedEngineConfig(
             prompt_len=args.prompt_len, cache_len=args.cache_len,
             page_size=args.page_size, num_pages=args.num_pages,
-            max_active=args.max_active))
+            max_active=args.max_active, eos_id=args.eos_id))
     else:
         engine = Engine(cfg, params, EngineConfig(
             batch_slots=args.slots, prompt_len=args.prompt_len,
-            cache_len=args.cache_len))
+            cache_len=args.cache_len, eos_id=args.eos_id))
     rates = tuple(float(f) for f in range(1, args.raw_rate + 1))
     if args.policy == "adaptive":
         sched = AdaptiveScheduler(rates=rates, V=args.V, capacity=args.capacity)
@@ -89,14 +99,16 @@ def main():
     else:
         sched = StaticScheduler(rate=args.rate, capacity=args.capacity)
     src = RequestSource(vocab_size=cfg.vocab_size, prompt_len=args.prompt_len,
-                        raw_rate=args.raw_rate, max_new_tokens=4)
+                        raw_rate=args.raw_rate, max_new_tokens=4,
+                        min_prompt_len=args.min_prompt_len)
     tr = serve(engine, sched, src, horizon=args.horizon, steps_per_slot=2,
-               fused=not args.legacy_loop)
+               fused=not args.legacy_loop, sync_free=args.sync_free)
     print(f"policy={args.policy} served={int(tr['served'].sum())} "
           f"dropped={sched.dropped} "
           f"tail_backlog={float(tr['backlog'][-5:].mean()):.1f} "
           f"mean_rate={float(np.mean(sched.rate_history)):.2f} "
-          f"dispatches_per_slot={float(tr['dispatches'].mean()):.2f}")
+          f"dispatches_per_slot={float(tr['dispatches'].mean()):.2f} "
+          f"blocking_syncs_per_slot={float(tr['syncs'].mean()):.2f}")
     if args.paged:
         st = engine.allocator.stats()
         print(f"paged: peak_occupancy={float(tr['occupancy'].max()):.2f} "

@@ -329,11 +329,20 @@ def attn_prefill(
     *,
     window: Optional[int] = None,
     prefix_len: int = 0,
+    seq_lens: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, KVCache]:
     """Causal self-attention over the prompt + build the decode cache.
 
     Stores the last ``cache_len`` (window or max) roped K/V into a ring cache
     positioned so that slot index = absolute_pos % cache_len.
+
+    ``seq_lens`` (B,) int32 makes the prefill length-aware (ragged): cache
+    slots at or beyond a row's real length stay empty (zero K/V, slot_pos
+    -1) so padding never enters decode attention. The attention compute
+    itself needs no masking — pads sit at the *end* of the prompt, so under
+    the causal mask no real position ever attends one; real rows' outputs
+    (and therefore the cache rows written) are bit-identical for any bucket
+    size >= the row's length.
     """
     B, S, D = x.shape
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
@@ -353,10 +362,18 @@ def attn_prefill(
     n = min(S, cache_len)
     tail = jnp.arange(S - n, S)                       # absolute positions kept
     slots = tail % cache_len                          # ring placement
+    kw = k[:, S - n :].astype(cdt)
+    vw = v[:, S - n :].astype(cdt)
+    spw = jnp.broadcast_to(tail[None, :], (B, n)).astype(jnp.int32)
+    if seq_lens is not None:
+        keep = tail[None, :] < seq_lens[:, None]      # (B, n)
+        kw = jnp.where(keep[..., None, None], kw, 0)
+        vw = jnp.where(keep[..., None, None], vw, 0)
+        spw = jnp.where(keep, spw, -1)
     cache = KVCache(
-        k=cache.k.at[:, slots].set(k[:, S - n :].astype(cdt)),
-        v=cache.v.at[:, slots].set(v[:, S - n :].astype(cdt)),
-        slot_pos=cache.slot_pos.at[:, slots].set(tail[None, :].astype(jnp.int32)),
+        k=cache.k.at[:, slots].set(kw),
+        v=cache.v.at[:, slots].set(vw),
+        slot_pos=cache.slot_pos.at[:, slots].set(spw),
     )
     return y, cache
 

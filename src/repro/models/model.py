@@ -171,15 +171,24 @@ def loss_fn(params, batch, cfg: ModelConfig):
 # -------------------------------------------------------------------- serve
 def prefill(params, batch, cfg: ModelConfig, cache_len: int,
             *, shape_window: Optional[int] = None,
-            batch_block: Optional[int] = None):
+            batch_block: Optional[int] = None,
+            prompt_lens: Optional[jax.Array] = None):
     """Process the prompt; build decode caches; return last-position logits.
 
     batch_block: process the request batch in slices of this size
     (lax.scan), bounding live full-sequence activations to one slice —
     long-prompt prefill (32k) of the big dense archs only fits HBM this way
     (EXPERIMENTS.md §Perf E). Output caches are identical.
+
+    prompt_lens: (B,) int32 real prompt lengths — the ragged length-aware
+    path (dense-attention stacks only; see ``ragged_prefill_supported``).
+    Logits are taken at each row's *real* last token, decode resumes at
+    ``pos = len``, and cache slots beyond ``len`` stay empty, so results
+    are bit-identical for any prompt bucket >= max(prompt_lens).
     """
     B = batch["tokens"].shape[0]
+    if prompt_lens is not None:
+        assert batch_block is None, "ragged prefill: batch_block unsupported"
     if batch_block and B > batch_block and B % batch_block == 0:
         nb = B // batch_block
         sliced = jax.tree.map(
@@ -205,6 +214,22 @@ def prefill(params, batch, cfg: ModelConfig, cache_len: int,
 
     h, prefix_len, enc_out = _embed_inputs(params, batch, cfg)
     h = constrain(h)
+    if prompt_lens is not None:
+        assert prefix_len == 0 and enc_out is None, "ragged prefill: decoder-only"
+        prompt_lens = jnp.asarray(prompt_lens, jnp.int32)
+        h, caches = T.prefill_hidden(
+            params["stack"], h, cfg, cache_len=cache_len,
+            shape_window=shape_window, seq_lens=prompt_lens,
+        )
+        S = batch["tokens"].shape[1]
+        last = jnp.clip(prompt_lens - 1, 0, S - 1)
+        hl = rmsnorm(params["ln_f"], h[jnp.arange(B), last], cfg.norm_eps)
+        logits = unembed(params["embed"], hl[:, None], cfg)[:, 0]
+        state = DecodeState(
+            caches=caches, pos=prompt_lens,
+            last_tok=batch["tokens"][jnp.arange(B), last].astype(jnp.int32),
+        )
+        return logits, state
     h, caches = T.prefill_hidden(
         params["stack"], h, cfg, cache_len=cache_len, enc_out=enc_out,
         prefix_len=prefix_len, shape_window=shape_window,

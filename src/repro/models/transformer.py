@@ -235,15 +235,21 @@ def forward_hidden(
 
 
 # ------------------------------------------------------------------ prefill
-def _block_prefill(kind, p, h, cfg: ModelConfig, *, cache_len, window, prefix_len, enc_out):
+def _block_prefill(kind, p, h, cfg: ModelConfig, *, cache_len, window, prefix_len,
+                   enc_out, seq_lens=None):
     """Returns (h, cache) for one layer."""
     if kind in ("attn", "attn_moe"):
         a, kv = A.attn_prefill(
             p["attn"], rmsnorm(p["ln1"], h, cfg.norm_eps), cfg, cache_len,
-            window=window, prefix_len=prefix_len,
+            window=window, prefix_len=prefix_len, seq_lens=seq_lens,
         )
         h, _ = _ffn(p, h + a, cfg)
         return constrain(h), kv
+    if seq_lens is not None:
+        # recurrent state (ssm/rec/group) integrates every position — pads
+        # would leak; enc-dec carries cross state. Gated upstream
+        # (ragged_prefill_supported); fail loudly if reached anyway.
+        raise ValueError(f"ragged prefill is not supported for {kind!r} blocks")
     if kind == "ssm":
         y, st = S.ssm_forward_with_state(p["ssm"], rmsnorm(p["ln1"], h, cfg.norm_eps), cfg)
         return constrain(h + y), st
@@ -282,7 +288,8 @@ def _block_prefill(kind, p, h, cfg: ModelConfig, *, cache_len, window, prefix_le
 
 
 def prefill_hidden(stack, h, cfg: ModelConfig, *, cache_len, enc_out=None,
-                   prefix_len: int = 0, shape_window: Optional[int] = None):
+                   prefix_len: int = 0, shape_window: Optional[int] = None,
+                   seq_lens: Optional[jax.Array] = None):
     """Full-prompt pass building decode caches. Returns (h, caches)."""
     segs = plan_segments(cfg, "decoder")
     caches = []
@@ -292,7 +299,7 @@ def prefill_hidden(stack, h, cfg: ModelConfig, *, cache_len, enc_out=None,
         def body(hh, p, kind=seg.kind, window=window):
             hh, cache = _block_prefill(
                 kind, p, hh, cfg, cache_len=cache_len, window=window,
-                prefix_len=prefix_len, enc_out=enc_out,
+                prefix_len=prefix_len, enc_out=enc_out, seq_lens=seq_lens,
             )
             return hh, cache
 
@@ -340,6 +347,22 @@ def _block_decode(kind, p, h, cache, pos, cfg: ModelConfig, *, window):
         h, _ = _ffn(p, h + x, cfg)
         return h, {"self": kv, "cross": cache["cross"]}
     raise ValueError(kind)
+
+
+def ragged_prefill_supported(cfg: ModelConfig) -> bool:
+    """Ragged (length-aware) prefill covers pure dense-attention stacks.
+
+    Recurrent blocks (ssm/rec) integrate state through every position, so
+    trailing pads would alter real rows; MoE FFN blocks couple tokens
+    through capacity assignment (position_in_expert is a cumsum over the
+    whole token block), so the padded-bucket size leaks into routing —
+    neither can be bit-identical across bucket sizes. Dense attention + MLP
+    stacks are per-position outside the causally-masked attention, which is
+    exactly the property ragged bucketing relies on.
+    """
+    if cfg.is_encdec or cfg.arch_type in ("vlm", "audio"):
+        return False
+    return all(s.kind == "attn" for s in plan_segments(cfg, "decoder"))
 
 
 def paged_segments_supported(cfg: ModelConfig) -> bool:

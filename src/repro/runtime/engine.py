@@ -11,7 +11,8 @@ request's KV/recurrent cache row. Per control slot (``step_slot``):
      lax.scan over all B slots (inactive slots compute but are masked out —
      the standard continuous-batching trade), returning per-step sampled
      tokens so the host can attribute service mu(t) to individual steps,
-  3. retire finished requests (max_new_tokens reached), freeing slots.
+  3. retire finished requests (max_new_tokens reached or EOS), freeing
+     slots.
 
 So one control slot costs <= 1 prefill + 1 decode jit dispatch (tracked in
 ``prefill_dispatches`` / ``decode_dispatches``), where the legacy per-step
@@ -20,14 +21,48 @@ costs k prefills + n_steps decodes. The engine reports per-step service
 counts — the mu(t) the Lyapunov controller observes. Model-agnostic: works
 for every registered arch via the Model API (prefill/decode_step).
 
+Sync-free serving (``step_slot_sync``, DESIGN.md §7)
+----------------------------------------------------
+``step_slot`` still pays >= 1 *blocking* host sync per slot: it reads the
+sampled tokens back to scan for finished requests before it can dispatch
+anything else. ``step_slot_sync`` moves sampling, EOS detection, per-slot
+stop masks, and a generated-token ring buffer into the jitted decode scan
+(``SyncState``; the model state is donated where the backend supports it),
+so the host
+dispatches the next fused decode from device-resident state alone and only
+*initiates* an async copy of tiny ``done/age/served`` counters. The copy of
+slot t is consumed at slot t+1 — readback overlaps compute — so a
+steady-state control slot performs **zero blocking host syncs**
+(``blocking_syncs`` counts the protocol's misses; the legacy paths count
+every synchronous readback there). The price is one slot of retirement lag:
+a finished request's slot frees at t+1, and the serve trace's served counts
+arrive one slot late (``drain`` flushes the tail).
+
+Ragged length-aware prefill
+---------------------------
+Admission buckets prompts into power-of-two sub-buckets (P/4, P/2, P) of
+``prompt_len`` and passes per-row real lengths to the length-aware prefill
+(``model.prefill(prompt_lens=...)``): logits come from each row's real last
+token, decode resumes at pos = len, and cache slots beyond len stay empty.
+Results are bit-identical across bucket sizes (pads are inert under the
+causal mask), so admission groups can pick the smallest bucket that fits —
+short prompts stop paying full-bucket FLOPs and, on the paged engine, stop
+allocating full-prompt pages. Gated to dense-attention stacks
+(``ragged_prefill_supported``); other archs fall back to the padded bucket.
+
 ``PagedEngine`` (below) is the paged-KV-cache variant: same dispatch
 budget, but admission allocates pages from a shared pool instead of
 claiming a dense slot — see DESIGN.md §6.
+
+All hot-path jits are *module-level*, keyed on static (cfg, sig, n) — every
+engine instance with the same geometry shares one compile (``trace_count``
+backs the no-retrace regression tests, mirroring the scheduler's).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from functools import partial
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,13 +71,25 @@ import numpy as np
 from repro.cache import PageAllocator
 from repro.configs.base import ModelConfig
 from repro.models import model as M
-from repro.models.transformer import paged_pools_init, paged_segments_supported
+from repro.models.transformer import (
+    paged_pools_init,
+    paged_segments_supported,
+    ragged_prefill_supported,
+)
 from repro.runtime.request import Request
 
 # Sentinel for short-prompt padding. Padding used to cycle the prompt via
 # np.resize, which silently duplicated content; a constant sentinel keeps
 # padded positions observable (and identical across requests).
 PAD_ID = 0
+
+# trace counter for the no-retrace regression tests: the increments run only
+# when jax traces (not on cached calls), so this counts compiles, not calls.
+_TRACE_COUNT = {"n": 0}
+
+
+def trace_count() -> int:
+    return _TRACE_COUNT["n"]
 
 
 @dataclasses.dataclass
@@ -55,6 +102,9 @@ class EngineConfig:
     top_k: int = 0                # 0 = full distribution
     seed: int = 0
     shape_window: Optional[int] = None
+    eos_id: Optional[int] = None  # stop token (None = length-only stopping)
+    ragged_prefill: bool = True   # length-aware bucketed prefill (auto-gated)
+    gen_buf_len: int = 0          # sync-free token ring capacity; 0 => cache_len
 
 
 @dataclasses.dataclass
@@ -74,6 +124,50 @@ class PagedEngineConfig(EngineConfig):
     max_pages_per_req: int = 0    # 0 => cache_len // page_size
 
 
+@dataclasses.dataclass(frozen=True)
+class _DecodeSig:
+    """The hashable slice of EngineConfig the jitted decode path closes
+    over — a static jit key, so equal-config engines share executables."""
+
+    greedy: bool = True
+    temperature: float = 1.0
+    top_k: int = 0
+    shape_window: Optional[int] = None
+    eos_id: Optional[int] = None
+
+    @staticmethod
+    def of(ecfg: EngineConfig) -> "_DecodeSig":
+        return _DecodeSig(ecfg.greedy, ecfg.temperature, ecfg.top_k,
+                          ecfg.shape_window, ecfg.eos_id)
+
+
+class SyncState(NamedTuple):
+    """Device-resident per-slot generation state for the sync-free loop.
+
+    The decode scan owns sampling, stop masks, and the generated-token ring
+    buffer, so the host never blocks on token values. ``gen_buf`` is written
+    at ``age % cap`` (cap >= max_new_tokens in practice, so it never wraps
+    before retirement); ``done`` freezes a row — its decode keeps running,
+    masked, until the host retires it one slot later.
+    """
+
+    cur_tok: jax.Array   # (B,)    next decode input (last sampled token)
+    age: jax.Array       # (B,)    tokens generated so far (prefill's counts)
+    budget: jax.Array    # (B,)    max_new_tokens; 0 = inactive row
+    done: jax.Array      # (B,)    bool — finished or inactive
+    gen_buf: jax.Array   # (B, cap) generated-token ring buffer
+
+
+def sync_state_init(batch: int, cap: int) -> SyncState:
+    return SyncState(
+        cur_tok=jnp.zeros((batch,), jnp.int32),
+        age=jnp.zeros((batch,), jnp.int32),
+        budget=jnp.zeros((batch,), jnp.int32),
+        done=jnp.ones((batch,), jnp.bool_),
+        gen_buf=jnp.zeros((batch, cap), jnp.int32),
+    )
+
+
 def _bucket_prompt(tokens, prompt_len: int) -> tuple[np.ndarray, bool]:
     """Fit a prompt to the fixed prefill bucket.
 
@@ -89,17 +183,236 @@ def _bucket_prompt(tokens, prompt_len: int) -> tuple[np.ndarray, bool]:
     return toks, truncated
 
 
-def _make_sampler(ecfg: EngineConfig):
-    def _sample(logits, key):
-        if ecfg.greedy:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        lg = logits.astype(jnp.float32) / max(ecfg.temperature, 1e-6)
-        if ecfg.top_k:
-            kth = jnp.sort(lg, axis=-1)[:, -ecfg.top_k][:, None]
-            lg = jnp.where(lg < kth, -1e30, lg)
-        return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+def _prompt_buckets(P: int, quantum: int = 1) -> list:
+    """Power-of-two prompt sub-buckets {P/4, P/2, P}, rounded up to the
+    engine's placement quantum (page_size for the paged engine)."""
+    out = set()
+    for b in (P // 4, P // 2, P):
+        b = -(-max(b, 1) // quantum) * quantum
+        if 0 < b <= P:
+            out.add(b)
+    return sorted(out) or [P]
 
-    return _sample
+
+def _sample(sig: _DecodeSig, logits, key):
+    if sig.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits.astype(jnp.float32) / max(sig.temperature, 1e-6)
+    if sig.top_k:
+        # O(V log k) threshold instead of a full O(V log V) sort
+        kth = jax.lax.top_k(lg, sig.top_k)[0][..., -1:]
+        lg = jnp.where(lg < kth, -1e30, lg)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+
+
+def _make_sampler(ecfg: EngineConfig):
+    sig = _DecodeSig.of(ecfg)
+    return lambda logits, key: _sample(sig, logits, key)
+
+
+# ------------------------------------------------------- module-level jits
+@partial(jax.jit, static_argnames=("cfg", "cache_len", "shape_window"))
+def _prefill_padded(params, batch, cfg, cache_len, shape_window):
+    _TRACE_COUNT["n"] += 1
+    return M.prefill(params, batch, cfg, cache_len, shape_window=shape_window)
+
+
+@partial(jax.jit, static_argnames=("cfg", "cache_len", "shape_window"))
+def _prefill_ragged(params, batch, lens, cfg, cache_len, shape_window):
+    _TRACE_COUNT["n"] += 1
+    return M.prefill(params, batch, cfg, cache_len, shape_window=shape_window,
+                     prompt_lens=lens)
+
+
+@partial(jax.jit, static_argnames=("cfg", "sig"))
+def _decode_one(params, state, toks, key, *, cfg, sig):
+    _TRACE_COUNT["n"] += 1
+    logits, state = M.decode_step(params, state, toks, cfg,
+                                  shape_window=sig.shape_window)
+    return _sample(sig, logits, key), state
+
+
+@partial(jax.jit, static_argnames=("n", "cfg", "sig"))
+def _decode_n(params, state, toks, key, *, n, cfg, sig):
+    """n fused decode steps; returns per-step tokens (n, B)."""
+    _TRACE_COUNT["n"] += 1
+
+    def body(carry, i):
+        toks, state = carry
+        logits, state = M.decode_step(params, state, toks, cfg,
+                                      shape_window=sig.shape_window)
+        nxt = _sample(sig, logits, jax.random.fold_in(key, i))
+        return (nxt, state), nxt
+
+    (_, state), outs = jax.lax.scan(body, (toks, state), jnp.arange(n))
+    return outs, state
+
+
+@partial(jax.jit, static_argnames=("n", "cfg", "sig"))
+def _decode_n_paged(params, state, toks, key, *, n, cfg, sig):
+    _TRACE_COUNT["n"] += 1
+
+    def body(carry, i):
+        toks, state = carry
+        logits, state = M.decode_step_paged(params, state, toks, cfg)
+        nxt = _sample(sig, logits, jax.random.fold_in(key, i))
+        return (nxt, state), nxt
+
+    (_, state), outs = jax.lax.scan(body, (toks, state), jnp.arange(n))
+    return outs, state
+
+
+def _sync_step(sync: SyncState, nxt, sig: _DecodeSig):
+    """One decode step's sync-state advance: write the sampled token into
+    the ring buffer, advance ages, latch stop masks; returns the newly-
+    finished count (this step's mu contribution)."""
+    B, cap = sync.gen_buf.shape
+    active = ~sync.done
+    tok = jnp.where(active, nxt, sync.cur_tok)
+    written = sync.gen_buf.at[jnp.arange(B), sync.age % cap].set(tok)
+    gen_buf = jnp.where(active[:, None], written, sync.gen_buf)
+    age = sync.age + active.astype(jnp.int32)
+    fin = age >= sync.budget
+    if sig.eos_id is not None:
+        fin = fin | (tok == sig.eos_id)
+    done = sync.done | (active & fin)
+    served = jnp.sum((done & active).astype(jnp.int32))
+    return SyncState(tok, age, sync.budget, done, gen_buf), served
+
+
+# Donating the model state lets XLA reuse the KV caches/pools in place; the
+# CPU backend ignores donation (with a warning), so gate it off there.
+# SyncState is deliberately NOT donated: the previous slot's pending readback
+# packet still references its done/age/gen_buf arrays until the
+# post-dispatch consume — donating them would delete buffers with a
+# device->host copy outstanding.
+_DONATE = (1,) if jax.default_backend() != "cpu" else ()
+
+
+@partial(jax.jit, static_argnames=("n", "cfg", "sig"), donate_argnums=_DONATE)
+def _decode_n_sync(params, state, sync, key, *, n, cfg, sig):
+    """Sync-free fused decode: sampling/EOS/ring buffer live in the scan.
+
+    Rows whose stop mask latches keep computing (masked — the standard
+    continuous-batching trade) but stop writing: their pos freezes, so a
+    finished row re-writes its own last cache slot instead of marching
+    forward. Returns (state, sync, served_per_step) — the host reads the
+    tiny sync counters back asynchronously, a slot later.
+    """
+    _TRACE_COUNT["n"] += 1
+
+    def body(carry, i):
+        state, sync = carry
+        logits, state2 = M.decode_step(params, state, sync.cur_tok, cfg,
+                                       shape_window=sig.shape_window)
+        nxt = _sample(sig, logits, jax.random.fold_in(key, i))
+        state2 = state2._replace(pos=jnp.where(sync.done, state.pos, state2.pos))
+        sync2, served = _sync_step(sync, nxt, sig)
+        return (state2, sync2), served
+
+    (state, sync), served = jax.lax.scan(body, (state, sync), jnp.arange(n))
+    return state, sync, served
+
+
+@partial(jax.jit, static_argnames=("n", "cfg", "sig"), donate_argnums=_DONATE)
+def _decode_n_sync_paged(params, state, sync, key, *, n, cfg, sig):
+    _TRACE_COUNT["n"] += 1
+
+    def body(carry, i):
+        state, sync = carry
+        logits, state2 = M.decode_step_paged(params, state, sync.cur_tok, cfg)
+        nxt = _sample(sig, logits, jax.random.fold_in(key, i))
+        state2 = state2._replace(pos=jnp.where(sync.done, state.pos, state2.pos))
+        sync2, served = _sync_step(sync, nxt, sig)
+        return (state2, sync2), served
+
+    (state, sync), served = jax.lax.scan(body, (state, sync), jnp.arange(n))
+    return state, sync, served
+
+
+@partial(jax.jit, static_argnames=("sig",))
+def _sync_admit(sync: SyncState, logits, rows, budgets, *, sig):
+    """Device-side admission: first token (greedy argmax of the prefill
+    logits, matching the legacy paths) + per-row sync-state reset, all in
+    one scatter — no logits readback. Pad rows carry an out-of-range index
+    and are dropped."""
+    _TRACE_COUNT["n"] += 1
+    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    fin = budgets <= 1
+    if sig.eos_id is not None:
+        fin = fin | (first == sig.eos_id)
+    return SyncState(
+        cur_tok=sync.cur_tok.at[rows].set(first, mode="drop"),
+        age=sync.age.at[rows].set(1, mode="drop"),
+        budget=sync.budget.at[rows].set(budgets, mode="drop"),
+        done=sync.done.at[rows].set(fin, mode="drop"),
+        gen_buf=sync.gen_buf.at[rows, 0].set(first, mode="drop"),
+    )
+
+
+@jax.jit
+def _sync_clear(sync: SyncState, rows):
+    """Deactivate rows (paged preemption): latch done, zero the budget."""
+    _TRACE_COUNT["n"] += 1
+    return sync._replace(
+        done=sync.done.at[rows].set(True, mode="drop"),
+        budget=sync.budget.at[rows].set(0, mode="drop"),
+    )
+
+
+@partial(jax.jit, static_argnames=("slot",))
+def _splice_one(state, one, slot):
+    """Insert batch-1 prefill state into batch state at slot."""
+    _TRACE_COUNT["n"] += 1
+    caches = jax.tree.map(
+        lambda big, new: jax.lax.dynamic_update_index_in_dim(
+            big, new[:, 0], slot, axis=1
+        ),
+        state.caches, one.caches,
+    )
+    return M.DecodeState(
+        caches=caches,
+        pos=state.pos.at[slot].set(one.pos[0]),
+        last_tok=state.last_tok.at[slot].set(one.last_tok[0]),
+    )
+
+
+@jax.jit
+def _splice_many(state, new, slots):
+    """Insert prefill rows at the given slot indices (one scatter).
+
+    Pad rows carry an out-of-range slot index; mode="drop" discards them,
+    so the bucketed batch-B prefill can splice any k <= B rows with a
+    single fixed-shape executable.
+    """
+    _TRACE_COUNT["n"] += 1
+    caches = jax.tree.map(
+        lambda big, nw: big.at[:, slots].set(nw, mode="drop"),
+        state.caches, new.caches,
+    )
+    return M.DecodeState(
+        caches=caches,
+        pos=state.pos.at[slots].set(new.pos, mode="drop"),
+        last_tok=state.last_tok.at[slots].set(new.last_tok, mode="drop"),
+    )
+
+
+_paged_splice = jax.jit(M.paged_splice_prompt)
+
+
+def _host_take(row_toks, req: Request, age: int, n_steps: int,
+               eos_id: Optional[int]) -> tuple[int, bool]:
+    """Legacy-path helper: how many of this slot's tokens a request consumes
+    (budget- and EOS-limited) and whether it finished. Mirrors the device
+    stop mask exactly."""
+    if eos_id is not None and req.generated and req.generated[-1] == eos_id:
+        return 0, True  # finished at admission: first token was EOS
+    limit = int(min(n_steps, req.max_new_tokens - age))
+    if eos_id is not None:
+        for j in range(limit):
+            if int(row_toks[j]) == eos_id:
+                return j + 1, True
+    return limit, age + limit >= req.max_new_tokens
 
 
 class Engine:
@@ -107,69 +420,25 @@ class Engine:
         self.cfg, self.params, self.ecfg = cfg, params, ecfg
         self.extra = extra_batch or {}
         B, P = ecfg.batch_slots, ecfg.prompt_len
+        self._sig = _DecodeSig.of(ecfg)
+        self._ragged = ecfg.ragged_prefill and ragged_prefill_supported(cfg)
+        self._buckets = _prompt_buckets(P)
+        self._gen_cap = ecfg.gen_buf_len or ecfg.cache_len
 
-        def _prefill(params, batch):
-            return M.prefill(params, batch, cfg, ecfg.cache_len,
-                             shape_window=ecfg.shape_window)
-
-        _sample = _make_sampler(ecfg)
-
-        def _decode(params, state, toks, key):
-            logits, state = M.decode_step(params, state, toks, cfg,
-                                          shape_window=ecfg.shape_window)
-            return _sample(logits, key), state
-
-        def _decode_n(params, state, toks, key, n):
-            """n fused decode steps; returns per-step tokens (n, B)."""
-
-            def body(carry, i):
-                toks, state = carry
-                nxt, state = _decode(params, state, toks, jax.random.fold_in(key, i))
-                return (nxt, state), nxt
-
-            (_, state), outs = jax.lax.scan(body, (toks, state), jnp.arange(n))
-            return outs, state
-
-        def _splice(state, one, slot):
-            """Insert batch-1 prefill state into batch state at slot."""
-            caches = jax.tree.map(
-                lambda big, new: jax.lax.dynamic_update_index_in_dim(
-                    big, new[:, 0], slot, axis=1
-                ),
-                state.caches, one.caches,
-            )
-            return M.DecodeState(
-                caches=caches,
-                pos=state.pos.at[slot].set(one.pos[0]),
-                last_tok=state.last_tok.at[slot].set(one.last_tok[0]),
-            )
-
-        def _splice_many(state, new, slots):
-            """Insert prefill rows at the given slot indices (one scatter).
-
-            Pad rows carry an out-of-range slot index; mode="drop" discards
-            them, so the bucketed batch-B prefill can splice any k <= B rows
-            with a single fixed-shape executable.
-            """
-            caches = jax.tree.map(
-                lambda big, nw: big.at[:, slots].set(nw, mode="drop"),
-                state.caches, new.caches,
-            )
-            return M.DecodeState(
-                caches=caches,
-                pos=state.pos.at[slots].set(new.pos, mode="drop"),
-                last_tok=state.last_tok.at[slots].set(new.last_tok, mode="drop"),
-            )
-
-        self._prefill = jax.jit(_prefill)
-        self._decode = jax.jit(_decode)
-        self._decode_n = jax.jit(_decode_n, static_argnames=("n",))
-        self._splice = jax.jit(_splice, static_argnames=("slot",))
-        self._splice_many = jax.jit(_splice_many)
+        # back-compat instance handles over the shared module-level jits
+        self._prefill = lambda params, batch: _prefill_padded(
+            params, batch, self.cfg, self.ecfg.cache_len, self.ecfg.shape_window)
+        self._decode = lambda params, state, toks, key: _decode_one(
+            params, state, toks, key, cfg=self.cfg, sig=self._sig)
+        self._decode_n = lambda params, state, toks, key, n: _decode_n(
+            params, state, toks, key, n=n, cfg=self.cfg, sig=self._sig)
+        self._splice = _splice_one
+        self._splice_many = _splice_many
 
         # boot: empty batch state from a dummy prefill over the whole batch
         boot = {"tokens": jnp.zeros((B, P), jnp.int32), **self.extra}
         _, self.state = self._prefill(params, boot)
+        self.sync = sync_state_init(B, self._gen_cap)
         self._key = jax.random.PRNGKey(ecfg.seed)
         self.active: list = [None] * B
         self.pending: list = []
@@ -179,6 +448,13 @@ class Engine:
         self.served_history: list = []
         self.prefill_dispatches = 0   # excludes the boot prefill
         self.decode_dispatches = 0
+        self.blocking_syncs = 0       # dispatch-gating synchronous readbacks
+        self.readback_waits = 0       # sync-free consume-side overlap misses
+        self._pending_read = None     # sync-free: last slot's async readback
+        # admission epoch per row: a readback packet only retires a row if
+        # the row still hosts the request it observed (guards against a
+        # stale pre-admission done flag retiring a freshly admitted request)
+        self._row_epoch = np.zeros(B, np.int64)
 
     # ------------------------------------------------------------------
     def queue_len(self) -> int:
@@ -190,48 +466,95 @@ class Engine:
     def free_slots(self) -> list:
         return [i for i, r in enumerate(self.active) if r is None]
 
-    def _bucket(self, tokens, req: Optional[Request] = None) -> np.ndarray:
-        toks, truncated = _bucket_prompt(tokens, self.ecfg.prompt_len)
+    def _bucket(self, tokens, req: Optional[Request] = None,
+                bucket: Optional[int] = None) -> np.ndarray:
+        toks, truncated = _bucket_prompt(tokens, bucket or self.ecfg.prompt_len)
         if req is not None and truncated:
             req.truncated = True
         return toks
 
+    def _pick_bucket(self, need: int) -> int:
+        for b in self._buckets:
+            if b >= need:
+                return b
+        return self.ecfg.prompt_len
+
+    def _run_prefill(self, batch, lens: Optional[np.ndarray], cache_len: int):
+        """One bucketed prefill dispatch — ragged (length-aware) when the
+        arch supports it, padded otherwise."""
+        if self._ragged:
+            return _prefill_ragged(self.params, batch, jnp.asarray(lens),
+                                   self.cfg, cache_len, self.ecfg.shape_window)
+        return _prefill_padded(self.params, batch, self.cfg, cache_len,
+                               self.ecfg.shape_window)
+
     def _admit_one(self, req: Request, slot: int, now: int) -> None:
         """Legacy batch-1 admission (the fused path's equivalence oracle)."""
-        batch = {"tokens": jnp.asarray(self._bucket(req.tokens, req))[None, :],
+        P = self.ecfg.prompt_len
+        L = max(1, min(len(req.tokens), P))
+        bucket = self._pick_bucket(L) if self._ragged else P
+        batch = {"tokens": jnp.asarray(self._bucket(req.tokens, req, bucket))[None, :],
                  **_slice_extra(self.extra, 1)}
-        logits, one = self._prefill(self.params, batch)
+        logits, one = self._run_prefill(
+            batch, np.asarray([L], np.int32), self.ecfg.cache_len)
         self.prefill_dispatches += 1
-        self.state = self._splice(self.state, one, slot)
+        self.state = _splice_one(self.state, one, slot)
+        self.blocking_syncs += 1
         req.start_slot = now
         req.generated = [int(jnp.argmax(logits[0]))]
         self.active[slot] = req
         self.slot_age[slot] = 1  # first token came from prefill
 
-    def admit_pending(self, now: int) -> int:
+    def admit_pending(self, now: int, sync: bool = False) -> int:
         """Fill all free slots from the pending queue with ONE prefill.
 
         k requests -> one bucketed prefill + one scatter splice, instead of
         k (prefill + splice) dispatches. The prefill batch is padded to the
-        full batch_slots bucket so every admission reuses the boot prefill
-        executable (no per-k recompiles); pad rows are dropped by the
-        splice's out-of-range slot index. Returns k.
+        full batch_slots rows (pad rows are dropped by the splice's
+        out-of-range slot index) and, when the arch supports ragged prefill,
+        to the smallest power-of-two prompt bucket covering the admitted
+        lengths. ``sync=True`` computes the first token on device
+        (``_sync_admit``) instead of reading logits back. Returns k.
         """
         B, P = self.ecfg.batch_slots, self.ecfg.prompt_len
         slots = self.free_slots()[: len(self.pending)]
         if not slots:
             return 0
+        if sync:  # validate BEFORE popping — a raise must not drop requests
+            for r in self.pending[: len(slots)]:
+                if r.max_new_tokens > self._gen_cap:
+                    raise ValueError(
+                        f"request {r.rid}: max_new_tokens {r.max_new_tokens} "
+                        f"exceeds gen_buf_len {self._gen_cap}")
         reqs = [self.pending.pop(0) for _ in slots]
         k = len(reqs)
-        toks = np.zeros((B, P), np.int32)
+        lens = np.full(B, P, np.int32)
         for j, r in enumerate(reqs):
-            toks[j] = self._bucket(r.tokens, r)
+            lens[j] = max(1, min(len(r.tokens), P))
+        bucket = self._pick_bucket(int(lens[:k].max())) if self._ragged else P
+        lens = np.minimum(lens, bucket)
+        toks = np.zeros((B, bucket), np.int32)
+        for j, r in enumerate(reqs):
+            toks[j] = self._bucket(r.tokens, r, bucket)
         slot_idx = np.full(B, B, np.int32)  # B = out of range -> scatter drops
         slot_idx[:k] = slots
         batch = {"tokens": jnp.asarray(toks), **self.extra}
-        logits, new = self._prefill(self.params, batch)
+        logits, new = self._run_prefill(batch, lens, self.ecfg.cache_len)
         self.prefill_dispatches += 1
-        self.state = self._splice_many(self.state, new, jnp.asarray(slot_idx))
+        self.state = _splice_many(self.state, new, jnp.asarray(slot_idx))
+        if sync:
+            budgets = np.zeros(B, np.int32)
+            budgets[:k] = [r.max_new_tokens for r in reqs]
+            self.sync = _sync_admit(self.sync, logits, jnp.asarray(slot_idx),
+                                    jnp.asarray(budgets), sig=self._sig)
+            for req, slot in zip(reqs, slots):
+                req.start_slot = now
+                req.generated = None  # filled from the device ring at retire
+                self.active[slot] = req
+                self.slot_age[slot] = 1
+                self._row_epoch[slot] += 1
+            return k
+        self.blocking_syncs += 1
         first = np.asarray(jnp.argmax(logits[:k], axis=-1))
         for j, (req, slot) in enumerate(zip(reqs, slots)):
             req.start_slot = now
@@ -242,6 +565,7 @@ class Engine:
 
     def step(self, now: int) -> dict:
         """Legacy engine slot: admit one-by-one -> one decode -> retire."""
+        eos = self.ecfg.eos_id
         for slot in self.free_slots():
             if not self.pending:
                 break
@@ -250,7 +574,8 @@ class Engine:
         served = 0  # finishers THIS call (finish_slot alone double-counts
         #             when the serve loop reuses `now` across engine steps)
         for i, r in enumerate(self.active):  # already complete (prefill
-            if r is not None and self.slot_age[i] >= r.max_new_tokens:
+            if r is not None and (self.slot_age[i] >= r.max_new_tokens or (
+                    eos is not None and r.generated[-1] == eos)):
                 r.finish_slot = now          # covered max_new_tokens<=1)
                 self.finished.append(r)
                 self.active[i] = None
@@ -263,13 +588,15 @@ class Engine:
             self._key, sub = jax.random.split(self._key)
             nxt, self.state = self._decode(self.params, self.state, toks, sub)
             self.decode_dispatches += 1
+            self.blocking_syncs += 1
             nxt = np.asarray(nxt)
             for i, r in enumerate(self.active):
                 if r is None:
                     continue
                 r.generated.append(int(nxt[i]))
                 self.slot_age[i] += 1
-                if self.slot_age[i] >= r.max_new_tokens:
+                if self.slot_age[i] >= r.max_new_tokens or (
+                        eos is not None and int(nxt[i]) == eos):
                     r.finish_slot = now
                     self.finished.append(r)
                     self.active[i] = None
@@ -306,14 +633,16 @@ class Engine:
                 self.params, self.state, toks, sub, n=n_steps
             )
             self.decode_dispatches += 1
+            self.blocking_syncs += 1
             all_toks = np.asarray(all_toks)  # (n_steps, B)
             for i, r in enumerate(self.active):
                 if r is None:
                     continue
-                take = int(min(n_steps, r.max_new_tokens - self.slot_age[i]))
+                take, hit = _host_take(all_toks[:, i], r, int(self.slot_age[i]),
+                                       n_steps, self.ecfg.eos_id)
                 r.generated.extend(int(x) for x in all_toks[:take, i])
                 self.slot_age[i] += take
-                if self.slot_age[i] >= r.max_new_tokens:
+                if hit or self.slot_age[i] >= r.max_new_tokens:
                     r.finish_slot = now
                     self.finished.append(r)
                     per_step[max(take - 1, 0)] += 1
@@ -330,8 +659,119 @@ class Engine:
             "finished_total": len(self.finished),
         }
 
+    # ------------------------------------------------- sync-free protocol
+    def _release_row(self, row: int) -> None:
+        """Engine-specific cleanup when the sync-free path retires a row."""
 
-class PagedEngine:
+    def _post_readback(self, now: int, served_steps, extra: Optional[dict] = None):
+        """Initiate the async device->host copy of this slot's counters."""
+        arrays = {"done": self.sync.done, "age": self.sync.age,
+                  "gen": self.sync.gen_buf, "served": served_steps}
+        if extra:
+            arrays.update(extra)
+        for a in arrays.values():
+            try:
+                a.copy_to_host_async()
+            except (AttributeError, RuntimeError):  # backend without async copy
+                pass
+        self._pending_read = {"slot": now, "arrays": arrays,
+                              "epoch": self._row_epoch.copy()}
+
+    def _readback_ready(self, p: dict) -> bool:
+        """Non-blocking: has the packet's device->host transfer completed?"""
+        for a in p["arrays"].values():
+            if hasattr(a, "is_ready") and not a.is_ready():
+                return False
+        return True
+
+    def _consume_read(self, p: Optional[dict],
+                      count_waits: bool = True) -> tuple[int, list]:
+        """Consume one readback packet: retire finished rows from host
+        copies alone. By protocol this runs *after* the next slot's
+        dispatches are in flight, so the read never gates the device
+        pipeline; a not-yet-ready array is an overlap miss, tracked in
+        ``readback_waits`` (the host waited, the device never idled)."""
+        if p is None:
+            return 0, []
+        if count_waits:
+            for a in p["arrays"].values():
+                if hasattr(a, "is_ready") and not a.is_ready():
+                    self.readback_waits += 1
+                    break
+        done = np.asarray(p["arrays"]["done"])
+        age = np.asarray(p["arrays"]["age"])
+        gen = np.asarray(p["arrays"]["gen"])
+        per_step = [int(x) for x in np.asarray(p["arrays"]["served"])]
+        served = 0
+        for row, req in enumerate(self.active):
+            if req is None or not done[row]:
+                continue
+            if p["epoch"][row] != self._row_epoch[row]:
+                continue  # row re-admitted after this packet was dispatched
+            a = int(age[row])
+            req.generated = [int(t) for t in gen[row, :min(a, gen.shape[1])]]
+            req.finish_slot = p["slot"]
+            self.finished.append(req)
+            self.active[row] = None
+            self.slot_age[row] = 0
+            self._release_row(row)
+            served += 1
+        extra = served - sum(per_step)
+        if extra > 0:  # admission-time finishers (budget <= 1 / EOS first tok)
+            per_step = per_step or [0]
+            per_step[0] += extra
+        return served, per_step
+
+    def step_slot_sync(self, now: int, n_steps: int = 1) -> dict:
+        """One sync-free control slot: batched admit (device-side first
+        token) -> dispatch the fused decode from device-resident state ->
+        initiate an async counter copy -> THEN drain the previous slot's
+        copy, which by now rode alongside a full slot of queued compute.
+
+        No device read ever gates a dispatch — zero blocking host syncs per
+        steady-state slot. The price is retirement lag: a request finishing
+        in slot t is retired at the end of slot t+1 — or before slot t+1's
+        admission when its transfer has already landed (the opportunistic
+        early consume below, free because the read is non-blocking) — so
+        its slot is reusable after at most two slots (call ``drain`` after
+        the last slot to flush the tail).
+        """
+        prev, self._pending_read = self._pending_read, None
+        early = prev is not None and self._readback_ready(prev)
+        served_prev, per_step_prev = (self._consume_read(prev) if early
+                                      else (0, []))
+        admitted = self.admit_pending(now, sync=True)
+        n_active = sum(r is not None for r in self.active)
+        if n_active:
+            self._key, sub = jax.random.split(self._key)
+            self.state, self.sync, served_steps = _decode_n_sync(
+                self.params, self.state, self.sync, sub,
+                n=n_steps, cfg=self.cfg, sig=self._sig,
+            )
+            self.decode_dispatches += 1
+            self._post_readback(now, served_steps)
+        if not early:
+            served_prev, per_step_prev = self._consume_read(prev)
+        self.served_history.append(served_prev)
+        self.steps += n_steps
+        return {
+            "active": n_active,
+            "queue": len(self.pending),
+            "served": served_prev,
+            "served_per_step": per_step_prev,
+            "admitted": admitted,
+            "finished_total": len(self.finished),
+            "blocking_syncs": self.blocking_syncs,
+        }
+
+    def drain(self) -> dict:
+        """Flush the in-flight slot's readback (shutdown; blocks once)."""
+        p, self._pending_read = self._pending_read, None
+        served, per_step = self._consume_read(p, count_waits=False)
+        return {"served": served, "served_per_step": per_step}
+
+
+class PagedEngine(Engine):
     """Continuous batching over a paged KV cache (see DESIGN.md §6).
 
     Where ``Engine`` reserves a dense ``batch_slots x cache_len`` cache row
@@ -340,7 +780,8 @@ class PagedEngine:
     the pages it writes, so at equal KV memory many more requests are in
     flight. Requests grow by appending pages — past ``cache_len`` if
     ``max_pages_per_req`` allows — and retirement returns pages to the free
-    list.
+    list. With ragged admission a short prompt also allocates only
+    ceil(len / page_size) prompt pages instead of the full bucket.
 
     The dense engine's dispatch budget is preserved: one control slot costs
     <= 1 bucketed batch prefill (all admissions of the slot) + 1 fused
@@ -354,7 +795,10 @@ class PagedEngine:
     Generation is bit-identical to the dense engine per request (greedy):
     every per-row op matches the dense path, so tokens are a pure function
     of the prompt. ``occupancy()`` exposes the page pool's fill fraction —
-    the signal the ``MemoryAware`` policy prices.
+    the signal the ``MemoryAware`` policy prices. The sync-free protocol
+    (``step_slot_sync``) mirrors the dense engine's, with the decode
+    dispatch additionally carrying block tables/positions and retirement
+    freeing pages one slot late.
     """
 
     def __init__(self, cfg: ModelConfig, params, ecfg: PagedEngineConfig):
@@ -367,44 +811,29 @@ class PagedEngine:
             raise ValueError(f"prompt_len {P} must be a multiple of page_size {ps}")
         self.cfg, self.params, self.ecfg = cfg, params, ecfg
         self.MP = ecfg.max_pages_per_req or max(ecfg.cache_len // ps, P // ps + 1)
-
-        _sample = _make_sampler(ecfg)
-
-        def _prefill(params, batch):
-            # cache_len == prompt_len: the dense prefill cache is exactly the
-            # prompt rows, ready to scatter into pages (no ring wraparound).
-            return M.prefill(params, batch, cfg, P)
-
-        def _decode(params, state, toks, key):
-            logits, state = M.decode_step_paged(params, state, toks, cfg)
-            return _sample(logits, key), state
-
-        def _decode_n(params, state, toks, key, n):
-            def body(carry, i):
-                toks, state = carry
-                nxt, state = _decode(params, state, toks, jax.random.fold_in(key, i))
-                return (nxt, state), nxt
-
-            (_, state), outs = jax.lax.scan(body, (toks, state), jnp.arange(n))
-            return outs, state
-
-        self._prefill = jax.jit(_prefill)
-        self._decode_n = jax.jit(_decode_n, static_argnames=("n",))
-        self._splice_prompt = jax.jit(M.paged_splice_prompt)
+        self._sig = _DecodeSig.of(ecfg)
+        self._ragged = ecfg.ragged_prefill and ragged_prefill_supported(cfg)
+        self._buckets = _prompt_buckets(P, quantum=ps)
+        self._gen_cap = ecfg.gen_buf_len or ecfg.cache_len
 
         self.pools = paged_pools_init(cfg, ecfg.num_pages, ps)
         self.allocator = PageAllocator(ecfg.num_pages, ps)
         self.block_tables = np.full((R, self.MP), -1, np.int32)
         self.pos = np.zeros(R, np.int32)
+        self.sync = sync_state_init(R, self._gen_cap)
         self._key = jax.random.PRNGKey(ecfg.seed)
-        self.active: list = [None] * R
-        self.pending: list = []
-        self.finished: list = []
+        self.active = [None] * R
+        self.pending = []
+        self.finished = []
         self.slot_age = np.zeros(R, np.int32)
         self.steps = 0
-        self.served_history: list = []
+        self.served_history = []
         self.prefill_dispatches = 0
         self.decode_dispatches = 0
+        self.blocking_syncs = 0
+        self.readback_waits = 0
+        self._pending_read = None
+        self._row_epoch = np.zeros(R, np.int64)
         self.alloc_failures = 0       # admissions deferred: pool exhausted
         self.preemptions = 0          # active requests bounced for pages
         self.peak_active = 0
@@ -414,29 +843,23 @@ class PagedEngine:
         self.occupancy_hwm = 0.0
 
     # ------------------------------------------------------------------
-    def queue_len(self) -> int:
-        return len(self.pending)
-
-    def submit(self, reqs: list) -> None:
-        self.pending.extend(reqs)
-
-    def free_slots(self) -> list:
-        return [i for i, r in enumerate(self.active) if r is None]
-
     def occupancy(self) -> float:
         return self.allocator.occupancy()
 
-    def _bucket(self, tokens, req: Optional[Request] = None) -> np.ndarray:
-        toks, truncated = _bucket_prompt(tokens, self.ecfg.prompt_len)
-        if req is not None and truncated:
-            req.truncated = True
-        return toks
+    def step(self, now: int) -> dict:
+        raise NotImplementedError("the paged engine has no legacy per-step path")
+
+    def _admit_one(self, req: Request, slot: int, now: int) -> None:
+        raise NotImplementedError("the paged engine admits via admit_pending")
 
     def _retire(self, row: int, now: int) -> None:
         req = self.active[row]
         req.finish_slot = now
         self.finished.append(req)
         self.active[row] = None
+        self._release_row(row)
+
+    def _release_row(self, row: int) -> None:
         self.allocator.free(row)
         self.block_tables[row] = -1
         self.pos[row] = 0
@@ -449,28 +872,25 @@ class PagedEngine:
         fresh prefill on re-admission — identical tokens under greedy.
         """
         req = self.active[row]
-        self.allocator.free(row)
-        self.block_tables[row] = -1
-        self.pos[row] = 0
-        self.slot_age[row] = 0
+        self._release_row(row)
         self.active[row] = None
         req.generated = None
         req.start_slot = None
         self.pending.insert(0, req)
         self.preemptions += 1
 
-    def admit_pending(self, now: int, lookahead: int = 1) -> int:
+    def admit_pending(self, now: int, lookahead: int = 1, sync: bool = False) -> int:
         """Fill free rows from the pending queue with ONE bucketed prefill.
 
         Admission = page allocation: a request enters only if the pool can
         cover its prompt plus this slot's ``lookahead`` decode writes (the
         slot's page demand is known, so pre-paying it here means admission
         never immediately preempts; growth beyond the slot still comes page
-        by page). All k admissions share one batch-R prefill + one scatter
-        per segment; pad rows carry out-of-range page ids and are dropped.
+        by page). Ragged admission pays only for the *real* prompt length.
+        All k admissions share one batch-R prefill + one scatter per
+        segment; pad rows carry out-of-range page ids and are dropped.
         """
         R, P, ps = self.ecfg.max_active, self.ecfg.prompt_len, self.ecfg.page_size
-        npp = P // ps
         take: list = []
         for row in self.free_slots():
             if not self.pending:
@@ -481,47 +901,73 @@ class PagedEngine:
                     f"request {req.rid}: max_new_tokens {req.max_new_tokens} "
                     f"exceeds the block table ({self.MP} pages x {ps})"
                 )
+            if sync and req.max_new_tokens > self._gen_cap:
+                raise ValueError(
+                    f"request {req.rid}: max_new_tokens {req.max_new_tokens} "
+                    f"exceeds gen_buf_len {self._gen_cap}")
+            L = max(1, min(len(req.tokens), P)) if self._ragged else P
             # pages are keyed by engine row, not req.rid: a row uniquely owns
             # its request while active, whereas rids are only unique per
             # RequestSource (two sources feeding one engine may collide)
-            pages = self.allocator.alloc(row, min(P + lookahead, self.MP * ps))
+            pages = self.allocator.alloc(row, min(L + lookahead, self.MP * ps))
             if pages is None:
                 self.alloc_failures += 1
                 break
             self.pending.pop(0)
-            take.append((row, req, pages))
+            take.append((row, req, pages, L))
         if not take:
             return 0
-        toks = np.zeros((R, P), np.int32)
+        bucket = self._pick_bucket(max(L for *_, L in take)) if self._ragged else P
+        npp = bucket // ps
+        toks = np.zeros((R, bucket), np.int32)
+        lens = np.full(R, bucket, np.int32)
         page_idx = np.full((R, npp), self.ecfg.num_pages, np.int32)  # pad: drop
-        for j, (row, req, pages) in enumerate(take):
-            toks[j] = self._bucket(req.tokens, req)
-            page_idx[j] = pages[:npp]
-        logits, state = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        for j, (row, req, pages, L) in enumerate(take):
+            toks[j] = self._bucket(req.tokens, req, bucket)
+            lens[j] = L
+            pg = pages[:npp]
+            page_idx[j, : len(pg)] = pg
+        # cache_len == bucket: the dense prefill cache is exactly the prompt
+        # rows, ready to scatter into pages (no ring wraparound).
+        logits, state = self._run_prefill(
+            {"tokens": jnp.asarray(toks)}, lens, bucket)
         self.prefill_dispatches += 1
-        self.pools = self._splice_prompt(
-            self.pools, state.caches, jnp.asarray(page_idx)
-        )
-        first = np.asarray(jnp.argmax(logits[: len(take)], axis=-1))
-        for j, (row, req, pages) in enumerate(take):
+        self.pools = _paged_splice(self.pools, state.caches, jnp.asarray(page_idx))
+        if sync:
+            rows_arr = np.full(R, R, np.int32)
+            budgets = np.zeros(R, np.int32)
+            for j, (row, req, pages, L) in enumerate(take):
+                rows_arr[j] = row
+                budgets[j] = req.max_new_tokens
+            self.sync = _sync_admit(self.sync, logits, jnp.asarray(rows_arr),
+                                    jnp.asarray(budgets), sig=self._sig)
+            first = [None] * len(take)
+        else:
+            self.blocking_syncs += 1
+            first = np.asarray(jnp.argmax(logits[: len(take)], axis=-1))
+        for j, (row, req, pages, L) in enumerate(take):
             req.start_slot = now
-            req.generated = [int(first[j])]
+            req.generated = None if sync else [int(first[j])]
             self.active[row] = req
             self.block_tables[row, : len(pages)] = pages
-            self.pos[row] = P
+            self.pos[row] = L
             self.slot_age[row] = 1   # first token came from prefill
+            if sync:
+                self._row_epoch[row] += 1
         self.peak_active = max(self.peak_active, sum(r is not None for r in self.active))
         return len(take)
 
-    def _ensure_pages(self, n_steps: int) -> None:
+    def _ensure_pages(self, n_steps: int, sync: bool = False) -> None:
         """Pre-extend every active row to cover this slot's decode writes.
 
         The fused scan writes rows pos..pos+n_steps-1 for every active row
         (finished-mid-scan rows keep writing, masked — the dense trade), so
         pages must exist up front; growing here keeps the decode dispatch
-        free of host round-trips. Rows the pool cannot cover are preempted.
-        """
+        free of host round-trips. Rows the pool cannot cover are preempted
+        (and, under the sync-free protocol, deactivated on device with one
+        scatter)."""
         ps = self.ecfg.page_size
+        cleared = []
         for row, req in enumerate(self.active):
             if req is None:
                 continue
@@ -529,8 +975,14 @@ class PagedEngine:
             pages = self.allocator.extend(row, need)
             if pages is None:
                 self._preempt(row)
+                cleared.append(row)
                 continue
             self.block_tables[row, : len(pages)] = pages
+        if sync and cleared:
+            R = self.ecfg.max_active
+            rows_arr = np.full(R, R, np.int32)
+            rows_arr[: len(cleared)] = cleared
+            self.sync = _sync_clear(self.sync, jnp.asarray(rows_arr))
 
     def step_slot(self, now: int, n_steps: int = 1) -> dict:
         """One control slot: batched admit -> page extension -> scan decode
@@ -551,20 +1003,24 @@ class PagedEngine:
                 last_tok=toks,
             )
             self._key, sub = jax.random.split(self._key)
-            all_toks, state = self._decode_n(
-                self.params, state, toks, sub, n=n_steps
+            all_toks, state = _decode_n_paged(
+                self.params, state, toks, sub, n=n_steps, cfg=self.cfg,
+                sig=self._sig,
             )
             self.pools = state.pools
             self.decode_dispatches += 1
+            self.blocking_syncs += 1
             all_toks = np.asarray(all_toks)  # (n_steps, R)
             for row, req in enumerate(self.active):
                 if req is None:
                     continue
                 self.pos[row] += n_steps     # the scan wrote n_steps rows
-                take = int(min(n_steps, req.max_new_tokens - self.slot_age[row]))
+                take, hit = _host_take(all_toks[:, row], req,
+                                       int(self.slot_age[row]), n_steps,
+                                       self.ecfg.eos_id)
                 req.generated.extend(int(x) for x in all_toks[:take, row])
                 self.slot_age[row] += take
-                if self.slot_age[row] >= req.max_new_tokens:
+                if hit or self.slot_age[row] >= req.max_new_tokens:
                     per_step[max(take - 1, 0)] += 1
                     self._retire(row, now)
         served = sum(per_step)
@@ -579,6 +1035,64 @@ class PagedEngine:
             "finished_total": len(self.finished),
             "occupancy": self.occupancy(),
             "preemptions": self.preemptions,
+        }
+
+    def step_slot_sync(self, now: int, n_steps: int = 1) -> dict:
+        """Sync-free control slot over the paged pool: admit (pages + device
+        first token) -> extend pages -> dispatch -> initiate readback ->
+        drain the previous slot's readback. Page-table maintenance is pure
+        host arithmetic: an active row's position advances exactly n_steps
+        per dispatch (rows that finished on device froze instead, but those
+        retire at the next drain — their host mirror transiently
+        over-covers by <= n_steps rows, i.e. at most one page, returned
+        when the row frees). The decode dispatch never waits on the device.
+        """
+        prev, self._pending_read = self._pending_read, None
+        early = prev is not None and self._readback_ready(prev)
+        served_prev, per_step_prev = (self._consume_read(prev) if early
+                                      else (0, []))
+        admitted = self.admit_pending(now, lookahead=n_steps, sync=True)
+        self._ensure_pages(n_steps, sync=True)
+        self.occupancy_hwm = self.occupancy()
+        n_active = sum(r is not None for r in self.active)
+        if n_active:
+            # .copy(): jnp.asarray may alias the numpy buffer (CPU zero-copy)
+            # and this path never blocks — the host mutates pos/block_tables
+            # before the async decode is guaranteed to have read them.
+            # last_tok is dead on entry (the scan decodes from sync.cur_tok);
+            # a fresh zeros buffer keeps the donated state free of aliases
+            # into the non-donated SyncState.
+            state = M.PagedDecodeState(
+                pools=self.pools,
+                block_tables=jnp.asarray(self.block_tables.copy()),
+                pos=jnp.asarray(self.pos.copy()),
+                last_tok=jnp.zeros_like(self.sync.cur_tok),
+            )
+            self._key, sub = jax.random.split(self._key)
+            state, self.sync, served_steps = _decode_n_sync_paged(
+                self.params, state, self.sync, sub,
+                n=n_steps, cfg=self.cfg, sig=self._sig,
+            )
+            self.pools = state.pools
+            self.decode_dispatches += 1
+            for row, req in enumerate(self.active):
+                if req is not None:
+                    self.pos[row] += n_steps
+            self._post_readback(now, served_steps)
+        if not early:
+            served_prev, per_step_prev = self._consume_read(prev)
+        self.served_history.append(served_prev)
+        self.steps += n_steps
+        return {
+            "active": n_active,
+            "queue": len(self.pending),
+            "served": served_prev,
+            "served_per_step": per_step_prev,
+            "admitted": admitted,
+            "finished_total": len(self.finished),
+            "occupancy": self.occupancy(),
+            "preemptions": self.preemptions,
+            "blocking_syncs": self.blocking_syncs,
         }
 
 

@@ -29,13 +29,19 @@ class Request:
 
 @dataclasses.dataclass
 class RequestSource:
-    """Produces ``raw_rate`` requests per slot (the camera's native fps)."""
+    """Produces ``raw_rate`` requests per slot (the camera's native fps).
+
+    ``min_prompt_len`` < prompt_len yields ragged prompts (lengths uniform
+    in [min_prompt_len, prompt_len]) — the workload the engine's
+    length-aware bucketed prefill exists for.
+    """
 
     vocab_size: int
     prompt_len: int
     raw_rate: int = 10
     max_new_tokens: int = 16
     seed: int = 0
+    min_prompt_len: Optional[int] = None   # None => fixed prompt_len
 
     def __post_init__(self):
         self._rng = np.random.default_rng(self.seed)
@@ -50,7 +56,11 @@ class RequestSource:
         n_admit = int(self._rng.binomial(n_raw, p))
         out = []
         for _ in range(n_admit):
-            toks = self._rng.integers(0, self.vocab_size, self.prompt_len, dtype=np.int32)
+            plen = self.prompt_len
+            if self.min_prompt_len is not None:
+                plen = int(self._rng.integers(self.min_prompt_len,
+                                              self.prompt_len + 1))
+            toks = self._rng.integers(0, self.vocab_size, plen, dtype=np.int32)
             out.append(
                 Request(
                     rid=self._next_id,

@@ -99,6 +99,7 @@ class PolicyScheduler:
         self._carry = self.policy.init()
         self.dropped = 0
         self.rate_history: list = []
+        self._pending_rate = None  # control_async: last dispatched decision
 
     def control(self, backlog: int, occupancy: Optional[float] = None) -> float:
         """One control-slot decision. ``occupancy`` (the paged engine's
@@ -109,23 +110,48 @@ class PolicyScheduler:
             self._carry = self.policy.observe(self._carry, occupancy)
         if self._static_rate is not None:  # no device round-trip for baselines
             f = float(self._static_rate)
-        elif self._table_path:
+        else:
+            f = float(self._dispatch_decision(backlog))
+        self.rate_history.append(f)
+        return f
+
+    def _dispatch_decision(self, backlog: int):
+        """Evaluate the policy on device; return the (unread) decision."""
+        if self._table_path:
             vq = getattr(self._carry, "value", jnp.float32(0.0))
             f_star = _act_on_tables(
                 jnp.asarray(backlog, jnp.float32), self._f_tab, self._s_tab,
                 self._lam_tab, self._V, vq, self._cost_tab,
             )
-            # LatencyAware's queue is priced by the chosen ACTION and
-            # advances here; MemoryAware's advances on OBSERVED occupancy
-            # (in observe, above) and must not double-step.
             if isinstance(self.policy, LatencyAware):
                 self._carry = self._carry.step(self.policy.cost_gain * f_star)
-            f = float(f_star)
-        else:
-            f_star, self._carry = _act_generic(
-                self.policy, self._carry, jnp.asarray(backlog, jnp.float32)
-            )
-            f = float(f_star)
+            return f_star
+        f_star, self._carry = _act_generic(
+            self.policy, self._carry, jnp.asarray(backlog, jnp.float32)
+        )
+        return f_star
+
+    def control_async(self, backlog: int, occupancy: Optional[float] = None) -> float:
+        """Sync-free control: dispatch this slot's Algorithm-1 decision and
+        return the PREVIOUS one — the readback of decision t overlaps slot
+        t's compute, so the serve loop never blocks on the controller.
+        One-slot-lagged control; the drift-plus-penalty argument tolerates
+        bounded observation delay (the backlog moves by at most one slot's
+        arrivals/services). The first call blocks once to seed the pipeline;
+        Static policies short-circuit with no device work at all."""
+        if occupancy is not None and hasattr(self.policy, "observe"):
+            self._carry = self.policy.observe(self._carry, occupancy)
+        if self._static_rate is not None:
+            f = float(self._static_rate)
+            self.rate_history.append(f)
+            return f
+        f_star = self._dispatch_decision(backlog)
+        try:
+            f_star.copy_to_host_async()
+        except (AttributeError, RuntimeError):
+            pass
+        prev, self._pending_rate = self._pending_rate, f_star
+        f = float(prev if prev is not None else f_star)
         self.rate_history.append(f)
         return f
 

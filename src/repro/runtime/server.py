@@ -10,6 +10,16 @@ steps fused in a lax.scan); ``fused=False`` keeps the legacy per-step loop
 benchmarking. Returns a trace for analysis/plots — the serving-system
 analogue of the paper's Fig. 2, but with a *real* model in the loop instead
 of a simulated service.
+
+``sync_free=True`` selects the zero-blocking-sync protocol (DESIGN.md §7):
+the scheduler's decision pipelines through ``control_async`` (one-slot-
+lagged control) and the engine's ``step_slot_sync`` dispatches every slot
+from device-resident state, draining the previous slot's async counter
+readback afterwards. The trace's ``served`` counts therefore lag the device
+by one slot; ``serve`` flushes the tail with ``engine.drain()`` and folds
+it into the final slot. The per-slot ``syncs`` column counts dispatch-
+gating synchronous readbacks (0 in the steady state; the legacy paths pay
+1-2 per slot).
 """
 from __future__ import annotations
 
@@ -20,20 +30,28 @@ from repro.runtime.request import RequestSource
 
 
 def serve(engine: Engine, scheduler, source: RequestSource, *,
-          horizon: int, steps_per_slot: int = 2, fused: bool = True) -> dict:
+          horizon: int, steps_per_slot: int = 2, fused: bool = True,
+          sync_free: bool = False) -> dict:
     trace = {"backlog": [], "rate": [], "served": [], "active": [],
-             "dropped": [], "dispatches": [], "occupancy": []}
+             "dropped": [], "dispatches": [], "occupancy": [], "syncs": []}
     paged = hasattr(engine, "occupancy")
     for t in range(horizon):
         d0 = engine.prefill_dispatches + engine.decode_dispatches
+        s0 = engine.blocking_syncs
         # the observation is the previous slot's commitment peak: end-of-slot
         # occupancy dips as retirements free pages, hiding the pressure the
         # controller must price
         occ = max(engine.occupancy(), engine.occupancy_hwm) if paged else None
-        rate = scheduler.control(engine.queue_len(), occupancy=occ)
+        if sync_free and hasattr(scheduler, "control_async"):
+            rate = scheduler.control_async(engine.queue_len(), occupancy=occ)
+        else:
+            rate = scheduler.control(engine.queue_len(), occupancy=occ)
         reqs = source.poll(t, rate)
         scheduler.admit(engine, reqs, t)
-        if fused:
+        if sync_free:
+            m = engine.step_slot_sync(t, n_steps=steps_per_slot)
+            served = m["served"]
+        elif fused:
             m = engine.step_slot(t, n_steps=steps_per_slot)
             served = m["served"]
         else:
@@ -50,6 +68,11 @@ def serve(engine: Engine, scheduler, source: RequestSource, *,
             engine.prefill_dispatches + engine.decode_dispatches - d0
         )
         trace["occupancy"].append(engine.occupancy_hwm if paged else 0.0)
+        trace["syncs"].append(engine.blocking_syncs - s0)
+    if sync_free and trace["served"]:
+        # flush the in-flight slot's readback so totals match the synchronous
+        # paths; its completions belong to the last dispatched slot
+        trace["served"][-1] += engine.drain()["served"]
     return {k: np.asarray(v) for k, v in trace.items()}
 
 

@@ -37,6 +37,37 @@ def test_flash_attention_sweep(B, S, H, KVH, hd, blk, dtype, window):
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,H,KVH,hd,blk", [(3, 128, 4, 2, 64, 32), (2, 256, 4, 4, 64, 128)]
+)
+@pytest.mark.parametrize("window", [None, 96])
+def test_flash_attention_ragged_sweep(B, S, H, KVH, hd, blk, dtype, window):
+    """Length-aware kernel (scalar-prefetched seq_lens, pl.when tile skip)
+    vs the ragged oracle, including len=1, partial-tile, and full-length
+    rows; the skip must be bit-exact vs the unskipped xla path at full
+    precision."""
+    q = jax.random.normal(KEY, (B, S, H, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, KVH, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, KVH, hd), dtype)
+    lens = jnp.asarray(
+        [1, S, 37][:B] + [S // 2] * max(B - 3, 0), jnp.int32)
+    ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), causal=True, window=window,
+                        seq_lens=lens)
+    out = ops.flash_attention(q, k, v, lens, causal=True, window=window,
+                              impl="interpret", block_q=blk, block_k=blk)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               **_tol(dtype))
+    if dtype == jnp.float32:
+        xla = ops.flash_attention(q, k, v, lens, causal=True, window=window,
+                                  impl="xla", block_q=blk, block_k=blk)
+        valid = np.arange(S)[None, :, None, None] < np.asarray(lens)[:, None, None, None]
+        np.testing.assert_allclose(
+            np.where(valid, np.asarray(out), 0),
+            np.where(valid, np.asarray(xla), 0), atol=2e-6, rtol=2e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("B,H,KVH,hd,L,blk", [(2, 4, 2, 64, 256, 64), (1, 8, 1, 128, 512, 128)])
 @pytest.mark.parametrize("window", [None, 100])
 def test_decode_attention_sweep(B, H, KVH, hd, L, blk, dtype, window):

@@ -1,0 +1,298 @@
+"""The sync-free serving protocol (DESIGN.md §7).
+
+Covers the PR's contract:
+  * sync-free generation (device-resident sampling/EOS/ring buffer, async
+    counter readback) is bit-identical to the legacy fused path, on the
+    dense AND paged engines, for full-length and ragged prompts,
+  * zero dispatch-gating blocking syncs per steady-state control slot,
+    within the 1-prefill + 1-decode dispatch budget,
+  * EOS stops generation identically across step / step_slot /
+    step_slot_sync,
+  * the module-level engine jits compile once across engine instances
+    (no-retrace, mirroring the PR-1 scheduler test),
+  * the lax.top_k sampler is distribution-identical to the sort-based one,
+  * the scheduler's pipelined control_async is the one-slot-lagged control.
+"""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.control import DriftPlusPenalty
+from repro.models import init_params
+from repro.runtime import (
+    AdaptiveScheduler,
+    Engine,
+    EngineConfig,
+    PagedEngine,
+    PagedEngineConfig,
+    PolicyScheduler,
+    RequestSource,
+    serve,
+)
+from repro.runtime import engine as eng_mod
+from repro.runtime.engine import _DecodeSig, _sample
+
+KEY = jax.random.PRNGKey(0)
+RATES = tuple(float(f) for f in range(1, 9))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("granite-3-2b", smoke=True)
+    params = init_params(KEY, cfg)
+    return cfg, params
+
+
+def _mk_reqs(cfg, n, max_new=6, seed=3, ragged=False):
+    src = RequestSource(vocab_size=cfg.vocab_size, prompt_len=16,
+                        min_prompt_len=2 if ragged else None,
+                        raw_rate=n, max_new_tokens=max_new, seed=seed)
+    return src.poll(0, float(n))
+
+
+def _dense(cfg, params, **kw):
+    return Engine(cfg, params, EngineConfig(batch_slots=4, prompt_len=16,
+                                            cache_len=64, **kw))
+
+
+def _paged(cfg, params, **kw):
+    return PagedEngine(cfg, params, PagedEngineConfig(
+        prompt_len=16, cache_len=64, page_size=16, num_pages=24,
+        max_active=8, **kw))
+
+
+def _drive(eng, reqs, sync, n_steps=2, max_slots=80):
+    eng.submit([copy.deepcopy(r) for r in reqs])
+    step = eng.step_slot_sync if sync else eng.step_slot
+    t = 0
+    while len(eng.finished) < len(reqs) and t < max_slots:
+        step(t, n_steps=n_steps)
+        t += 1
+    if sync:
+        eng.drain()
+    assert len(eng.finished) == len(reqs)
+    return {r.rid: r.generated for r in eng.finished}
+
+
+@pytest.mark.parametrize("ragged", [False, True])
+def test_sync_free_matches_legacy_dense(setup, ragged):
+    cfg, params = setup
+    reqs = _mk_reqs(cfg, 8, ragged=ragged)
+    legacy = _drive(_dense(cfg, params), reqs, sync=False)
+    sync = _drive(_dense(cfg, params), reqs, sync=True)
+    assert legacy == sync
+
+
+def test_sync_free_matches_legacy_paged_and_dense(setup):
+    cfg, params = setup
+    reqs = _mk_reqs(cfg, 8, ragged=True)
+    dense = _drive(_dense(cfg, params), reqs, sync=False)
+    paged_legacy = _drive(_paged(cfg, params), reqs, sync=False)
+    paged_sync = _drive(_paged(cfg, params), reqs, sync=True)
+    assert paged_legacy == paged_sync == dense
+
+
+def test_sync_free_paged_preemption_recovers(setup):
+    """A pool too small for the offered load must preempt (device rows
+    deactivated by the _sync_clear scatter) and still finish every request
+    with the dense engine's tokens."""
+    cfg, params = setup
+    reqs = _mk_reqs(cfg, 6, max_new=10, seed=11)
+    tight = PagedEngine(cfg, params, PagedEngineConfig(
+        prompt_len=16, cache_len=64, page_size=8, num_pages=10, max_active=8))
+    got = _drive(tight, reqs, sync=True, max_slots=200)
+    dense = _drive(_dense(cfg, params), reqs, sync=False, max_slots=200)
+    assert got == dense
+
+
+@pytest.mark.parametrize("pattern", [(True,), (False,), (True, False),
+                                     (False, False, True)])
+def test_sync_free_consume_interleavings(setup, pattern):
+    """The early/late consume decision depends on transfer timing
+    (``is_ready``) — force every interleaving and require identical tokens.
+    Regression for two timing bugs: a stale pre-admission done flag retiring
+    a freshly admitted request (admission epochs), and the paged dispatch
+    aliasing host pos/block_tables buffers that the never-blocking loop
+    mutates before the async decode is guaranteed to have read them."""
+    import itertools
+
+    cfg, params = setup
+    reqs = _mk_reqs(cfg, 12, ragged=True, seed=7)
+    ref = _drive(_dense(cfg, params), reqs, sync=False)
+
+    def forced(eng):
+        pat = itertools.cycle(pattern)
+        eng._readback_ready = lambda p: next(pat)
+        return eng
+
+    assert _drive(forced(_dense(cfg, params)), reqs, sync=True) == ref
+    assert _drive(forced(_paged(cfg, params)), reqs, sync=True) == ref
+
+
+def test_sync_free_zero_blocking_syncs_and_dispatch_budget(setup):
+    """The tentpole numbers: 0 dispatch-gating syncs per slot (the legacy
+    fused path pays >= 1) within <= 1 prefill + 1 decode dispatch/slot."""
+    cfg, params = setup
+
+    def serve_with(sync_free):
+        eng = _dense(cfg, params)
+        sch = AdaptiveScheduler(rates=RATES, V=20.0, capacity=32)
+        src = RequestSource(vocab_size=cfg.vocab_size, prompt_len=16,
+                            raw_rate=5, max_new_tokens=4)
+        tr = serve(eng, sch, src, horizon=15, steps_per_slot=3,
+                   sync_free=sync_free)
+        return eng, tr
+
+    eng_s, tr_s = serve_with(True)
+    assert eng_s.blocking_syncs == 0
+    assert int(tr_s["syncs"].max()) == 0
+    assert int(tr_s["dispatches"].max()) <= 2
+    assert int(tr_s["served"].sum()) == len(eng_s.finished) > 0
+    eng_f, tr_f = serve_with(False)
+    assert eng_f.blocking_syncs >= 15  # the fused loop blocks every slot
+    assert int(tr_f["syncs"].min()) >= 1
+
+
+def test_eos_stops_generation_identically(setup):
+    """On-device EOS == host EOS: learn a token the model emits, declare it
+    EOS, and require step / step_slot / step_slot_sync / paged-sync to agree
+    and to stop before max_new_tokens."""
+    cfg, params = setup
+    reqs = _mk_reqs(cfg, 4, max_new=10, seed=5)
+    probe = _drive(_dense(cfg, params), reqs, sync=False)
+    eos = probe[reqs[0].rid][2]  # emitted at age 3 of request 0
+
+    def via_step(eng):
+        eng.submit([copy.deepcopy(r) for r in reqs])
+        for t in range(60):
+            if len(eng.finished) == len(reqs):
+                break
+            eng.step(t)
+        return {r.rid: r.generated for r in eng.finished}
+
+    legacy1 = via_step(_dense(cfg, params, eos_id=eos))
+    legacy2 = _drive(_dense(cfg, params, eos_id=eos), reqs, sync=False,
+                     n_steps=3)
+    sync_d = _drive(_dense(cfg, params, eos_id=eos), reqs, sync=True,
+                    n_steps=3)
+    sync_p = _drive(_paged(cfg, params, eos_id=eos), reqs, sync=True,
+                    n_steps=3)
+    assert legacy1 == legacy2 == sync_d == sync_p
+    g0 = sync_d[reqs[0].rid]
+    # stopped at the FIRST occurrence of eos, kept it, and quit early
+    assert g0[-1] == eos and eos not in g0[:-1] and len(g0) < 10
+
+
+@pytest.mark.parametrize("max_new", [1, 2])
+def test_sync_admission_instant_finish(setup, max_new):
+    """max_new_tokens <= scan edge: the prefill token alone (or one decode
+    step) completes the request; neither path may generate past the limit."""
+    cfg, params = setup
+    reqs = _mk_reqs(cfg, 4, max_new=max_new)
+    legacy = _drive(_dense(cfg, params), reqs, sync=False)
+    sync = _drive(_dense(cfg, params), reqs, sync=True)
+    assert legacy == sync
+    assert all(len(g) == max_new for g in sync.values())
+
+
+def test_gen_buf_capacity_guard(setup):
+    cfg, params = setup
+    eng = _dense(cfg, params, gen_buf_len=4)
+    reqs = _mk_reqs(cfg, 1, max_new=9)
+    eng.submit(reqs)
+    with pytest.raises(ValueError, match="gen_buf_len"):
+        eng.step_slot_sync(0)
+
+
+def test_no_retrace_across_engine_instances(setup):
+    """Regression (mirrors the PR-1 scheduler one-compile test): the engine
+    jits are module-level and keyed on (shapes, cfg, sig, n) — building and
+    driving a second engine with the same geometry must not re-trace, and
+    repeated step_slot calls with the same n reuse one executable."""
+    cfg, params = setup
+    reqs = _mk_reqs(cfg, 4)
+    _drive(_dense(cfg, params), reqs, sync=False)  # ensure everything traced
+    _drive(_dense(cfg, params), reqs, sync=True)
+    n0 = eng_mod.trace_count()
+    _drive(_dense(cfg, params), reqs, sync=False)
+    _drive(_dense(cfg, params), reqs, sync=True)
+    assert eng_mod.trace_count() == n0
+
+
+def test_topk_sampler_equivalent_to_sort_oracle():
+    """jax.lax.top_k thresholding == the old jnp.sort-based top-k: identical
+    masked logits (hence identical categorical draws for any key)."""
+    key = jax.random.PRNGKey(7)
+    logits = jax.random.normal(key, (5, 97), jnp.float32)
+    for k in (1, 5, 96, 97):
+        sig = _DecodeSig(greedy=False, temperature=0.7, top_k=k)
+        lg = logits / 0.7
+        kth = jnp.sort(lg, axis=-1)[:, -k][:, None]          # the old oracle
+        ref = jnp.where(lg < kth, -1e30, lg)
+        kth_new = jax.lax.top_k(lg, k)[0][..., -1:]
+        new = jnp.where(lg < kth_new, -1e30, lg)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(new))
+        a = _sample(sig, logits, key)
+        b = jax.random.categorical(key, ref, axis=-1).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    greedy = _sample(_DecodeSig(greedy=True), logits, key)
+    np.testing.assert_array_equal(np.asarray(greedy),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_sampling_mode_sync_free_serves(setup):
+    """Non-greedy sync-free decode: valid tokens, everything finishes."""
+    cfg, params = setup
+    eng = _dense(cfg, params, greedy=False, temperature=0.8, top_k=5)
+    reqs = _mk_reqs(cfg, 3, max_new=3)
+    got = _drive(eng, reqs, sync=True)
+    assert all(0 <= g < cfg.vocab_size for gen in got.values() for g in gen)
+    assert all(len(g) == 3 for g in got.values())
+
+
+def test_control_async_is_lagged_control():
+    """control_async(t) must return control's decision for slot t-1 (seeded
+    with slot 0's own decision); Static policies stay constant."""
+    backlogs = [0, 3, 9, 40, 2, 0, 17]
+    sch_ref = PolicyScheduler(policy=DriftPlusPenalty(rates=RATES, V=50.0))
+    ref = [sch_ref.control(q) for q in backlogs]
+    sch = PolicyScheduler(policy=DriftPlusPenalty(rates=RATES, V=50.0))
+    got = [sch.control_async(q) for q in backlogs]
+    assert got[0] == ref[0]
+    assert got[1:] == ref[:-1]
+    from repro.runtime import StaticScheduler
+
+    st = StaticScheduler(rate=4.0)
+    assert [st.control_async(q) for q in backlogs] == [4.0] * len(backlogs)
+
+
+def test_serve_sync_free_totals_match_fused(setup):
+    """Same workload end to end: the sync-free serve trace (lagged served
+    counts + drain) must account for every finished request, and finished
+    token streams must match the fused path's for the requests both
+    complete."""
+    cfg, params = setup
+
+    def run(sync_free):
+        eng = _dense(cfg, params)
+        sch = AdaptiveScheduler(rates=RATES[:5], V=20.0, capacity=32)
+        src = RequestSource(vocab_size=cfg.vocab_size, prompt_len=16,
+                            raw_rate=4, max_new_tokens=4, seed=9)
+        tr = serve(eng, sch, src, horizon=12, steps_per_slot=2,
+                   sync_free=sync_free)
+        return eng, tr
+
+    eng_s, tr_s = run(True)
+    eng_f, tr_f = run(False)
+    assert int(tr_s["served"].sum()) == len(eng_s.finished)
+    # the two runs make different control decisions (lagged vs not), so the
+    # same rid names different requests — key by PROMPT: greedy generation
+    # is a pure function of it, whichever loop served it
+    gen_s = {r.tokens.tobytes(): r.generated for r in eng_s.finished}
+    gen_f = {r.tokens.tobytes(): r.generated for r in eng_f.finished}
+    common = gen_s.keys() & gen_f.keys()
+    assert common and all(gen_s[p] == gen_f[p] for p in common)
