@@ -318,6 +318,143 @@ def bench_serve_sync_free(quick=False):
     return us, derived
 
 
+def bench_continuous_batching(quick=False):
+    """Continuous batching (chunked prefill, ONE mixed dispatch per slot) vs
+    the PR-3 sync-free baseline at equal engine geometry on a long/short
+    mixed trickle workload — the admission-dominated regime the tentpole
+    targets.
+
+    The baseline admits via a dedicated bucketed prefill dispatch padded to
+    all batch rows and the covering power-of-two bucket: a trickle of ragged
+    long prompts makes nearly every slot pay a full (B x bucket) prefill for
+    one or two admissions, and that dispatch stalls every in-flight decode
+    (head-of-line). The chunked engine feeds prompts into the cache
+    chunk_size tokens per row per slot *inside* the decode dispatch, paying
+    exactly the prompt tokens it has — so slots cost <= 1 dispatch of
+    near-constant width. Reports tokens/s and the p99 *wall-clock* admission
+    arrival->finish latency (in seconds of cumulative slot time — slot
+    counts are not comparable across modes: the baseline's admission slots
+    are several times longer).
+
+    Equivalence: a fixed request set driven to completion must produce
+    bit-identical greedy tokens across legacy fused / chunked on BOTH
+    engines. us_per_call = chunked us per control slot.
+    """
+    import copy
+
+    import numpy as _np
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.runtime import (Engine, EngineConfig, PagedEngine,
+                               PagedEngineConfig, RequestSource,
+                               StaticScheduler)
+
+    cfg = get_config("granite-3-2b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    P, horizon = 96, (12 if quick else 25)
+    reps = 2 if quick else 3
+    rate = 2.0
+    mk_src = lambda s: RequestSource(
+        vocab_size=cfg.vocab_size, prompt_len=16, min_prompt_len=12,
+        long_frac=0.5, long_prompt_len=56, raw_rate=int(rate),
+        max_new_tokens=4, seed=s)
+
+    def tokens_of(eng):
+        return (sum(len(r.generated) for r in eng.finished)
+                + sum(len(r.generated or []) for r in eng.active if r))
+
+    def loop(eng, src, chunked, n_slots, record=False):
+        """The serve loop, with per-slot wall times so waits can be
+        reported in seconds (drain deferred to the caller)."""
+        sch = StaticScheduler(rate=rate, capacity=256)
+        step = eng.step_slot_chunked if chunked else eng.step_slot_sync
+        slot_t = []
+        d0 = eng.prefill_dispatches + eng.decode_dispatches
+        for t in range(n_slots):
+            t0 = time.perf_counter()
+            sch.control_async(eng.queue_len())
+            sch.admit(eng, src.poll(t, rate), t)
+            step(t, n_steps=2)
+            slot_t.append(time.perf_counter() - t0)
+        disp = (eng.prefill_dispatches + eng.decode_dispatches - d0) / n_slots
+        return _np.asarray(slot_t), disp
+
+    def wall_p99_latency(eng, slot_t):
+        """p99 arrival->finish latency in SECONDS (cumulative slot time)."""
+        cum = _np.concatenate([[0.0], _np.cumsum(slot_t)])
+        lat = [cum[min(r.finish_slot + 1, len(slot_t))]
+               - cum[min(r.arrival_slot, len(slot_t))]
+               for r in eng.finished
+               if r.finish_slot is not None and r.arrival_slot is not None]
+        return float(_np.percentile(lat, 99)) if lat else float("nan")
+
+    def run(chunked):
+        fresh = lambda: Engine(cfg, params, EngineConfig(
+            batch_slots=8, prompt_len=P, cache_len=128,
+            chunk_size=16, chunk_budget=0))
+        warm = fresh()
+        loop(warm, mk_src(0), chunked, 5)  # warm the jits (module-level)
+        warm.drain()
+        best_tps, dt_best, disp_max, wait = 0.0, 0.0, 0.0, 0.0
+        for rep in range(reps):
+            eng = fresh()  # fresh state per rep; compiles are shared
+            slot_t, disp = loop(eng, mk_src(rep + 1), chunked, horizon)
+            eng.drain()
+            dt = float(slot_t.sum())
+            tps = tokens_of(eng) / dt
+            # the dispatch budget is gated on the WORST rep; tps/wait are
+            # latched together from the best rep (one coherent run)
+            disp_max = max(disp_max, disp)
+            if tps > best_tps:
+                best_tps, dt_best = tps, dt
+                wait = wall_p99_latency(eng, slot_t)
+        return best_tps, dt_best, disp_max, wait
+
+    tps_c, dt_c, disp_c, wait_c = run(chunked=True)
+    tps_s, _, disp_s, wait_s = run(chunked=False)
+
+    def drive(eng, mode):
+        src = RequestSource(vocab_size=cfg.vocab_size, prompt_len=16,
+                            min_prompt_len=3, long_frac=0.3,
+                            long_prompt_len=48, raw_rate=10,
+                            max_new_tokens=6, seed=7)
+        eng.submit(copy.deepcopy(src.poll(0, 10.0)))
+        step = eng.step_slot_chunked if mode == "chunked" else eng.step_slot
+        t = 0
+        while len(eng.finished) < 10 and t < 80:
+            step(t, n_steps=2)
+            t += 1
+        if mode == "chunked":
+            eng.drain()
+        return {r.rid: r.generated for r in eng.finished}
+
+    mk_d = lambda: Engine(cfg, params, EngineConfig(
+        batch_slots=4, prompt_len=48, cache_len=64, chunk_size=8))
+    mk_p = lambda: PagedEngine(cfg, params, PagedEngineConfig(
+        prompt_len=48, cache_len=64, page_size=16, num_pages=24,
+        max_active=8, chunk_size=16))
+    dense_legacy, dense_cb = drive(mk_d(), "fused"), drive(mk_d(), "chunked")
+    paged_legacy, paged_cb = drive(mk_p(), "fused"), drive(mk_p(), "chunked")
+    same = (dense_legacy == dense_cb == paged_cb and paged_legacy == paged_cb)
+
+    us = dt_c / horizon * 1e6
+    derived = (
+        f"chunked_tps={tps_c:.1f};sync_free_tps={tps_s:.1f}"
+        f";speedup={tps_c / tps_s:.2f}x"
+        f";chunked_p99_latency_s={wait_c:.3f}"
+        f";sync_free_p99_latency_s={wait_s:.3f}"
+        f";chunked_disp_per_slot={disp_c:.2f}"
+        f";sync_free_disp_per_slot={disp_s:.2f}"
+        f";same_tokens={same}"
+    )
+    if not same:
+        derived = "TOKEN_MISMATCH;" + derived
+    if disp_c > 1.0:
+        derived = "DISPATCH_VIOLATION;" + derived
+    return us, derived
+
+
 def bench_flash_attention(quick=False):
     """XLA flash path per-call time + kernel/oracle agreement."""
     from repro.kernels import ops
@@ -374,12 +511,13 @@ def bench_roofline_table():
     return 0.0, derived
 
 
-# Fast subset exercised by `--smoke` (and CI): one controller row, two
+# Fast subset exercised by `--smoke` (and CI): one controller row, three
 # engine rows — enough to catch a rotten perf entrypoint in ~a minute. The
-# gate fails on errors, token mismatches, and any steady-state blocking
-# sync in the sync-free serve loop.
+# gate fails on errors, token mismatches, any steady-state blocking sync in
+# the sync-free serve loop, and a continuous-batching slot exceeding its
+# one-dispatch budget.
 SMOKE_BENCHES = ("controller_overhead", "paged_vs_dense_decode",
-                 "serve_sync_free")
+                 "serve_sync_free", "continuous_batching")
 
 
 def main() -> None:
@@ -404,6 +542,7 @@ def main() -> None:
         ("serve_fused_vs_legacy", lambda: bench_serve_fused_vs_legacy(args.quick)),
         ("paged_vs_dense_decode", lambda: bench_paged_vs_dense_decode(args.quick)),
         ("serve_sync_free", lambda: bench_serve_sync_free(args.quick)),
+        ("continuous_batching", lambda: bench_continuous_batching(args.quick)),
         ("flash_attention_xla", lambda: bench_flash_attention(args.quick)),
         ("ssd_scan_xla", lambda: bench_ssd_scan(args.quick)),
         ("roofline_table", bench_roofline_table),
@@ -430,7 +569,8 @@ def main() -> None:
             json.dump(rows, f, indent=1)
     if args.smoke and any(r["us_per_call"] is None or
                           r["derived"].startswith(("TOKEN_MISMATCH",
-                                                   "SYNC_VIOLATION"))
+                                                   "SYNC_VIOLATION",
+                                                   "DISPATCH_VIOLATION"))
                           for r in rows):
         sys.exit(1)
 

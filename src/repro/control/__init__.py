@@ -13,6 +13,7 @@ from repro.control.policy import (
     MemoryAware,
     Policy,
     Static,
+    TokenBacklogAware,
     VirtualQueue,
     drift_plus_penalty_action,
 )
@@ -25,6 +26,7 @@ __all__ = [
     "MemoryAware",
     "Policy",
     "Static",
+    "TokenBacklogAware",
     "VirtualQueue",
     "closed_loop",
     "distributed_action",

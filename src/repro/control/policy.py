@@ -204,6 +204,8 @@ class MemoryAware(_TablePolicy):
     occupancy_budget: float = 0.6    # target time-average pool fill
     mem_gain: float = 1.0            # price scale on the occupancy queue
 
+    observation = "occupancy"        # the engine signal ``observe`` consumes
+
     def init(self) -> VirtualQueue:
         return VirtualQueue.make(self.occupancy_budget)
 
@@ -213,6 +215,53 @@ class MemoryAware(_TablePolicy):
     def act(self, carry: VirtualQueue, backlog: jax.Array) -> tuple[jax.Array, VirtualQueue]:
         f, s, lam = self.tables()
         extra = carry.value[..., None] * (self.mem_gain * self.pages_per_request * f)
+        f_star, _ = drift_plus_penalty_action(backlog, f, s, lam, self.V, extra)
+        return f_star, carry
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenBacklogAware(_TablePolicy):
+    """Algorithm 1 plus a virtual queue over pending prompt *tokens*.
+
+    The request-count backlog Q(t) under-prices ragged workloads: one 4k
+    prompt enqueues the prefill work of hundreds of short requests, so a
+    controller that only counts requests keeps admitting while the chunked
+    prefill pipeline drowns. This policy extends the paper's queue-overflow
+    argument to the token dimension the same way ``MemoryAware`` extends it
+    to page occupancy — a second (virtual) queue in the drift, no change to
+    the argmax:
+
+        Z(t+1) = max(Z(t) + tok(t) - token_budget, 0)
+
+    where tok(t) is the *observed* token backlog (``engine.token_backlog()``,
+    queued prompt tokens plus unwritten chunk-cursor tails), fed through
+    ``observe`` by the scheduler each slot. ``act`` prices candidate rates
+    by the prompt tokens they commit: Z(t) * tok_gain * tokens_per_request
+    * f. The Neely construction keeps the time-average token backlog at or
+    below ``token_budget`` — bounding chunked-prefill latency (the backlog
+    drains at ``chunk_budget`` tokens per slot) instead of just request
+    count.
+    """
+
+    rates: tuple[float, ...]
+    V: float
+    utility: Utility = None  # type: ignore[assignment]
+    arrival_gain: float = 1.0
+    tokens_per_request: float = 16.0  # expected prompt tokens one admission commits
+    token_budget: float = 64.0        # target time-average pending prompt tokens
+    tok_gain: float = 1.0             # price scale on the token queue
+
+    observation = "token_backlog"
+
+    def init(self) -> VirtualQueue:
+        return VirtualQueue.make(self.token_budget)
+
+    def observe(self, carry: VirtualQueue, token_backlog: jax.Array) -> VirtualQueue:
+        return carry.step(jnp.asarray(token_backlog, jnp.float32))
+
+    def act(self, carry: VirtualQueue, backlog: jax.Array) -> tuple[jax.Array, VirtualQueue]:
+        f, s, lam = self.tables()
+        extra = carry.value[..., None] * (self.tok_gain * self.tokens_per_request * f)
         f_star, _ = drift_plus_penalty_action(backlog, f, s, lam, self.V, extra)
         return f_star, carry
 

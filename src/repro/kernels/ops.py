@@ -15,6 +15,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import chunk_attention as _ca
 from repro.kernels import decode_attention as _da
 from repro.kernels import flash_attention as _fa
 from repro.kernels import paged_attention as _pa
@@ -57,6 +58,22 @@ def decode_attention(q, k, v, slot_pos, pos, *, window=None, impl="xla", block_l
         return decode_attention_ref(q, k, v, slot_pos, pos, window=window)
     return _da.decode_attention(
         q, k, v, slot_pos, pos, window=window, block_l=block_l,
+        interpret=(impl == "interpret"),
+    )
+
+
+@partial(jax.jit, static_argnames=("impl", "block_l"))
+def chunk_attention(q, k, v, slot_pos, pos0, valid, *, impl="xla", block_l=512):
+    """Chunked-prefill attention (continuous batching): per-row chunk
+    queries at offsets pos0 over the row's KV cache. The Pallas path skips
+    KV tiles beyond each row's written prefix via scalar-prefetched
+    (pos0, valid)."""
+    if impl == "xla":
+        from repro.kernels.ref import chunk_attention_ref
+
+        return chunk_attention_ref(q, k, v, slot_pos, pos0, valid)
+    return _ca.chunk_attention(
+        q, k, v, slot_pos, pos0, valid, block_l=block_l,
         interpret=(impl == "interpret"),
     )
 

@@ -61,6 +61,31 @@ def decode_attention_ref(q, k, v, slot_pos, pos, *, window=None):
     return jnp.einsum("bhl,blhd->bhd", p.astype(vv.dtype), vv).astype(q.dtype)
 
 
+def chunk_attention_ref(q, k, v, slot_pos, pos0, valid):
+    """Chunked-prefill attention oracle: C chunk queries per row against the
+    row's cache, full masked softmax.
+
+    q (B,C,H,hd); cache k/v (B,L,KVH,hd); slot_pos (B,L) absolute position
+    per slot (-1 empty); pos0 (B,) chunk start positions; valid (B,) real
+    chunk tokens. Query i of row b sits at absolute position pos0[b]+i and
+    sees slots with 0 <= slot_pos <= that position; rows at or beyond
+    ``valid`` are zeroed (padding — the engine never consumes them).
+    """
+    B, C, H, hd = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    kk = jnp.repeat(k, G, axis=2)
+    vv = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,blhd->bhql", q, kk).astype(jnp.float32) * hd ** -0.5
+    qpos = pos0[:, None] + jnp.arange(C)[None, :]              # (B, C)
+    ok = (slot_pos[:, None, :] >= 0) & (slot_pos[:, None, :] <= qpos[:, :, None])
+    s = jnp.where(ok[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhql,blhd->bqhd", p.astype(vv.dtype), vv).astype(q.dtype)
+    return jnp.where((jnp.arange(C)[None, :] < valid[:, None])[..., None, None],
+                     out, 0)
+
+
 def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, pos):
     """Paged decode oracle: gather pages, then dense masked softmax.
 

@@ -25,7 +25,8 @@ from repro.control import LatencyAware
 from repro.runtime import (AdaptiveScheduler, Engine, EngineConfig,
                            MemoryAwareScheduler, PagedEngine,
                            PagedEngineConfig, PolicyScheduler, RequestSource,
-                           StaticScheduler, latency_stats, serve)
+                           StaticScheduler, TokenAwareScheduler,
+                           latency_stats, serve)
 
 
 def main():
@@ -33,7 +34,8 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--policy",
-                    choices=["adaptive", "static", "latency-aware", "memory-aware"],
+                    choices=["adaptive", "static", "latency-aware",
+                             "memory-aware", "token-aware"],
                     default="adaptive")
     ap.add_argument("--cost-budget", type=float, default=4.0,
                     help="latency-aware: time-average rate budget")
@@ -50,6 +52,18 @@ def main():
     ap.add_argument("--sync-free", action="store_true",
                     help="device-resident decode loop: on-device sampling/"
                          "EOS, async counter readback, 0 blocking syncs/slot")
+    ap.add_argument("--chunked", action="store_true",
+                    help="continuous batching: chunked prefill interleaved "
+                         "with decode in ONE dispatch per slot (implies the "
+                         "sync-free protocol)")
+    ap.add_argument("--chunk-size", type=int, default=0,
+                    help="chunked: prompt tokens per row per slot "
+                         "(0 = prompt_len/4, page-aligned on --paged)")
+    ap.add_argument("--chunk-budget", type=int, default=0,
+                    help="chunked: max prefill tokens per slot across rows "
+                         "(0 = unlimited)")
+    ap.add_argument("--token-budget", type=float, default=64.0,
+                    help="token-aware: target time-average pending prompt tokens")
     ap.add_argument("--min-prompt-len", type=int, default=None,
                     help="ragged workload: prompt lengths uniform in "
                          "[min, prompt-len] (exercises bucketed prefill)")
@@ -69,6 +83,8 @@ def main():
                  "the paged engine has no per-step loop")
     if args.sync_free and args.legacy_loop:
         ap.error("--sync-free and --legacy-loop are mutually exclusive")
+    if args.chunked and args.legacy_loop:
+        ap.error("--chunked and --legacy-loop are mutually exclusive")
     if args.policy == "memory-aware" and not args.paged:
         ap.error("--policy memory-aware prices page-pool occupancy; "
                  "it requires --paged (the dense engine reports none)")
@@ -79,11 +95,13 @@ def main():
         engine = PagedEngine(cfg, params, PagedEngineConfig(
             prompt_len=args.prompt_len, cache_len=args.cache_len,
             page_size=args.page_size, num_pages=args.num_pages,
-            max_active=args.max_active, eos_id=args.eos_id))
+            max_active=args.max_active, eos_id=args.eos_id,
+            chunk_size=args.chunk_size, chunk_budget=args.chunk_budget))
     else:
         engine = Engine(cfg, params, EngineConfig(
             batch_slots=args.slots, prompt_len=args.prompt_len,
-            cache_len=args.cache_len, eos_id=args.eos_id))
+            cache_len=args.cache_len, eos_id=args.eos_id,
+            chunk_size=args.chunk_size, chunk_budget=args.chunk_budget))
     rates = tuple(float(f) for f in range(1, args.raw_rate + 1))
     if args.policy == "adaptive":
         sched = AdaptiveScheduler(rates=rates, V=args.V, capacity=args.capacity)
@@ -96,13 +114,18 @@ def main():
         sched = MemoryAwareScheduler(
             rates=rates, V=args.V, occupancy_budget=args.occupancy_budget,
             capacity=args.capacity)
+    elif args.policy == "token-aware":
+        sched = TokenAwareScheduler(
+            rates=rates, V=args.V, token_budget=args.token_budget,
+            tokens_per_request=float(args.prompt_len), capacity=args.capacity)
     else:
         sched = StaticScheduler(rate=args.rate, capacity=args.capacity)
     src = RequestSource(vocab_size=cfg.vocab_size, prompt_len=args.prompt_len,
                         raw_rate=args.raw_rate, max_new_tokens=4,
                         min_prompt_len=args.min_prompt_len)
     tr = serve(engine, sched, src, horizon=args.horizon, steps_per_slot=2,
-               fused=not args.legacy_loop, sync_free=args.sync_free)
+               fused=not args.legacy_loop, sync_free=args.sync_free,
+               chunked=args.chunked)
     print(f"policy={args.policy} served={int(tr['served'].sum())} "
           f"dropped={sched.dropped} "
           f"tail_backlog={float(tr['backlog'][-5:].mean()):.1f} "

@@ -426,6 +426,149 @@ def attn_decode(
     return y, cache
 
 
+def attn_chunk(
+    params,
+    x: jax.Array,            # (B, C, D) — one prompt chunk per row
+    cache: KVCache,
+    pos0: jax.Array,         # (B,) absolute position of the chunk's first token
+    valid: jax.Array,        # (B,) real tokens in this chunk (0 = no chunk work)
+    cfg: ModelConfig,
+    *,
+    window: Optional[int] = None,
+    reset: Optional[jax.Array] = None,   # (B,) bool — first chunk of a recycled row
+) -> tuple[jax.Array, KVCache]:
+    """Chunked-prefill attention: write the chunk's K/V at per-row offsets
+    [pos0, pos0+valid), then attend the chunk's queries over the row's cache
+    (all earlier chunks plus the chunk itself, position-ordered).
+
+    Numerics mirror ``chunked_attention``'s single-KV-tile forward exactly —
+    scores in f32 (preferred_element_type) * scale then mask, rowwise max,
+    (p @ v) accumulated then divided by l — so every real query position
+    produces the same floats it would inside ``attn_prefill`` over the whole
+    prompt: masked keys (slot_pos -1 / future positions) contribute
+    exp(NEG_INF - m) == 0.0 exactly, and trailing exact zeros are inert in
+    the reductions. By induction over layers and chunks the cache rows and
+    last-token logits are bit-identical to the one-shot prefill, which is
+    the continuous-batching engine's equivalence contract.
+
+    ``reset`` marks rows whose cache still holds a previous tenant: their
+    ``slot_pos`` is invalidated before the write (stale K/V need no zeroing
+    — an invalid slot's weight is exactly 0). Rows with ``valid == 0``
+    write nothing (their scatter indices are out of range) and their output
+    is discarded by the caller.
+    """
+    B, C, D = x.shape
+    L = cache.cache_len
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if "q_norm" in params:
+        q = headwise_rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = headwise_rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    pos = pos0[:, None] + jnp.arange(C)[None, :]          # (B, C)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    slot_pos = cache.slot_pos
+    if reset is not None:
+        slot_pos = jnp.where(reset[:, None], -1, slot_pos)
+    keep = jnp.arange(C)[None, :] < valid[:, None]        # (B, C)
+    slots = jnp.where(keep, pos % L, L)                   # L = out of range -> drop
+    cdt = cache.k.dtype
+    b_idx = jnp.arange(B)[:, None]
+    cache = KVCache(
+        k=cache.k.at[b_idx, slots].set(k.astype(cdt), mode="drop"),
+        v=cache.v.at[b_idx, slots].set(v.astype(cdt), mode="drop"),
+        slot_pos=slot_pos.at[b_idx, slots].set(pos.astype(jnp.int32), mode="drop"),
+    )
+
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    G = H // KVH
+    qg = q.reshape(B, C, KVH, G, hd)
+    s = jnp.einsum(
+        "bqkgh,bskh->bkgqs", qg, cache.k.astype(q.dtype),
+        preferred_element_type=jnp.float32,
+    ) * (hd ** -0.5)                                      # (B, KVH, G, C, L)
+    sp = cache.slot_pos[:, None, :]                       # (B, 1, L)
+    ok = (sp >= 0) & (sp <= pos[:, :, None])              # (B, C, L)
+    if window is not None:
+        ok &= sp > (pos[:, :, None] - window)
+    s = jnp.where(ok[:, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(cache.v.dtype), cache.v)
+    out = pv.astype(jnp.float32) / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, C, H, hd).astype(q.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, cache
+
+
+def attn_chunk_paged(
+    params,
+    x: jax.Array,            # (B, C, D) — one prompt chunk per row
+    pool: PagedKVPool,
+    block_table: jax.Array,  # (B, MP) int32 physical page ids; -1 = unallocated
+    pos0: jax.Array,         # (B,)
+    valid: jax.Array,        # (B,)
+    cfg: ModelConfig,
+) -> tuple[jax.Array, PagedKVPool]:
+    """``attn_chunk`` over the shared page pool: the chunk's K/V rows land in
+    block-table pages (logical slot j at (table[j // ps], j % ps)), then the
+    queries attend the gathered logical cache with the per-query validity
+    mask ``allocated & (j <= qpos)``. Same single-tile flash numerics as the
+    dense variant; no slot_pos reset is needed — a previous tenant's rows
+    survive only at logical slots this request has not yet written, all of
+    which sit at j > qpos and are masked."""
+    B, C, D = x.shape
+    N, ps = pool.k.shape[0], pool.k.shape[1]
+    MP = block_table.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if "q_norm" in params:
+        q = headwise_rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = headwise_rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    pos = pos0[:, None] + jnp.arange(C)[None, :]          # (B, C)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    keep = jnp.arange(C)[None, :] < valid[:, None]
+    lp = jnp.clip(pos // ps, 0, MP - 1)
+    phys = jnp.take_along_axis(block_table, lp, axis=1)   # (B, C)
+    phys = jnp.where(keep & (phys >= 0), phys, N)         # N = out of range -> drop
+    off = pos % ps
+    cdt = pool.k.dtype
+    pool = PagedKVPool(
+        k=pool.k.at[phys, off].set(k.astype(cdt), mode="drop"),
+        v=pool.v.at[phys, off].set(v.astype(cdt), mode="drop"),
+    )
+
+    gather = jnp.clip(block_table, 0, N - 1)
+    kk = pool.k[gather].reshape(B, MP * ps, cfg.n_kv_heads, cfg.head_dim_)
+    vv = pool.v[gather].reshape(B, MP * ps, cfg.n_kv_heads, cfg.head_dim_)
+
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    G = H // KVH
+    qg = q.reshape(B, C, KVH, G, hd)
+    s = jnp.einsum(
+        "bqkgh,bskh->bkgqs", qg, kk.astype(q.dtype),
+        preferred_element_type=jnp.float32,
+    ) * (hd ** -0.5)                                      # (B, KVH, G, C, MP*ps)
+    j = jnp.arange(MP * ps)[None, None, :]
+    allocated = jnp.repeat(block_table >= 0, ps, axis=1)[:, None, :]
+    ok = allocated & (j <= pos[:, :, None])               # (B, C, MP*ps)
+    s = jnp.where(ok[:, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(vv.dtype), vv)
+    out = pv.astype(jnp.float32) / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, C, H, hd).astype(q.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, pool
+
+
 def attn_decode_paged(
     params,
     x: jax.Array,            # (B, D) — one new token's residual input

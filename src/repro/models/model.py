@@ -258,6 +258,67 @@ def decode_step(params, state: DecodeState, tokens, cfg: ModelConfig,
     return logits, DecodeState(caches=caches, pos=state.pos + 1, last_tok=tokens)
 
 
+def chunk_step(params, state: DecodeState, tokens, pos0, valid, reset,
+               cfg: ModelConfig, *, shape_window: Optional[int] = None):
+    """Process one prompt chunk per row against the decode caches.
+
+    tokens: (B, C) int32 — up to C prompt tokens per row, written at
+    positions [pos0, pos0+valid); valid == 0 rows do no chunk work (their
+    writes are dropped and their logits are garbage the caller masks).
+    Returns (logits, state): logits are each row's *last valid* chunk
+    position — for a row finishing its prompt this is exactly the
+    length-aware prefill's last-token logits (same embed/norm/unembed ops on
+    bit-identical hidden states), so greedy first tokens match the one-shot
+    admission paths. ``state.pos`` advances to pos0+valid for chunk rows and
+    is untouched elsewhere.
+    """
+    B, C = tokens.shape
+    h = embed(params["embed"], tokens, cfg)
+    if cfg.arch_type in ("dense", "vlm", "audio"):
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    h = constrain(h)
+    h, caches = T.chunk_hidden(
+        params["stack"], h, state.caches, pos0, valid, reset, cfg,
+        shape_window=shape_window,
+    )
+    last = jnp.clip(valid - 1, 0, C - 1)
+    hl = rmsnorm(params["ln_f"], h[jnp.arange(B), last], cfg.norm_eps)
+    logits = unembed(params["embed"], hl[:, None], cfg)[:, 0]
+    chunked = valid > 0
+    return logits, DecodeState(
+        caches=caches,
+        pos=jnp.where(chunked, pos0 + valid, state.pos),
+        last_tok=jnp.where(chunked, tokens[jnp.arange(B), last].astype(jnp.int32),
+                           state.last_tok),
+    )
+
+
+def chunk_step_paged(params, state: PagedDecodeState, tokens, pos0, valid,
+                     cfg: ModelConfig):
+    """``chunk_step`` against the paged pools (block tables unchanged —
+    page allocation is host-side; the chunk only writes into pages its rows
+    already own)."""
+    B, C = tokens.shape
+    h = embed(params["embed"], tokens, cfg)
+    if cfg.arch_type in ("dense", "vlm", "audio"):
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    h = constrain(h)
+    h, pools = T.chunk_hidden_paged(
+        params["stack"], h, state.pools, state.block_tables, pos0, valid, cfg
+    )
+    last = jnp.clip(valid - 1, 0, C - 1)
+    hl = rmsnorm(params["ln_f"], h[jnp.arange(B), last], cfg.norm_eps)
+    logits = unembed(params["embed"], hl[:, None], cfg)[:, 0]
+    chunked = valid > 0
+    return logits, PagedDecodeState(
+        pools=pools,
+        block_tables=state.block_tables,
+        pos=jnp.where(chunked, pos0 + valid, state.pos),
+        last_tok=jnp.where(chunked, tokens[jnp.arange(B), last].astype(jnp.int32),
+                           state.last_tok),
+    )
+
+
 def decode_step_paged(params, state: PagedDecodeState, tokens, cfg: ModelConfig):
     """One decode step for the whole batch against the paged KV pools.
 

@@ -365,6 +365,69 @@ def ragged_prefill_supported(cfg: ModelConfig) -> bool:
     return all(s.kind == "attn" for s in plan_segments(cfg, "decoder"))
 
 
+def chunked_prefill_supported(cfg: ModelConfig) -> bool:
+    """Chunked (continuous-batching) prefill covers the ragged-prefill archs
+    minus the quantized-cache knob.
+
+    The chunk pass re-reads its own earlier K/V from the decode cache, so a
+    lossy ``cache_dtype`` (e.g. f8) would round values the one-shot prefill
+    attends at full precision — breaking the bit-identity contract. MoE is
+    excluded for the ragged reason squared: capacity assignment is a cumsum
+    over the token block, so chunk boundaries would change routing.
+    """
+    return ragged_prefill_supported(cfg) and not cfg.cache_dtype
+
+
+def chunk_hidden(stack, h, caches, pos0, valid, reset, cfg: ModelConfig, *,
+                 shape_window: Optional[int] = None):
+    """One prompt-chunk pass over (B, C, D); mirrors ``prefill_hidden``'s
+    per-layer op order (attn -> residual -> FFN -> constrain) with
+    ``attn_chunk`` writing K/V at per-row offsets. Returns (h, caches)."""
+    segs = plan_segments(cfg, "decoder")
+    new_caches = []
+    for seg, params, cache in zip(segs, stack, caches):
+        if seg.kind != "attn":
+            raise ValueError(f"chunked prefill is not supported for {seg.kind!r} blocks")
+        window = _window_for(seg.kind, cfg, shape_window)
+
+        def body(hh, pc, window=window):
+            p, c = pc
+            a, c = A.attn_chunk(
+                p["attn"], rmsnorm(p["ln1"], hh, cfg.norm_eps), c, pos0, valid,
+                cfg, window=window, reset=reset,
+            )
+            hh, _ = _ffn(p, hh + a, cfg)
+            return constrain(hh), c
+
+        h, seg_cache = jax.lax.scan(body, h, (params, cache))
+        new_caches.append(seg_cache)
+    return h, new_caches
+
+
+def chunk_hidden_paged(stack, h, pools, block_table, pos0, valid,
+                       cfg: ModelConfig):
+    """``chunk_hidden`` against the shared page pools (one block table for
+    the whole stack, like ``decode_hidden_paged``)."""
+    segs = plan_segments(cfg, "decoder")
+    new_pools = []
+    for seg, params, pool in zip(segs, stack, pools):
+        if seg.kind != "attn":
+            raise ValueError(f"chunked prefill is not supported for {seg.kind!r} blocks")
+
+        def body(hh, pp):
+            p, pool_l = pp
+            a, pool_l = A.attn_chunk_paged(
+                p["attn"], rmsnorm(p["ln1"], hh, cfg.norm_eps), pool_l,
+                block_table, pos0, valid, cfg,
+            )
+            hh, _ = _ffn(p, hh + a, cfg)
+            return constrain(hh), pool_l
+
+        h, seg_pool = jax.lax.scan(body, h, (params, pool))
+        new_pools.append(seg_pool)
+    return h, new_pools
+
+
 def paged_segments_supported(cfg: ModelConfig) -> bool:
     """Paged decode covers pure-attention stacks (dense + MoE FFN blocks).
 

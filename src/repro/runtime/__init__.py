@@ -10,6 +10,7 @@ from repro.runtime.scheduler import (
     MemoryAwareScheduler,
     PolicyScheduler,
     StaticScheduler,
+    TokenAwareScheduler,
 )
 from repro.runtime.server import latency_stats, serve
 
@@ -24,6 +25,7 @@ __all__ = [
     "MemoryAwareScheduler",
     "PolicyScheduler",
     "StaticScheduler",
+    "TokenAwareScheduler",
     "latency_stats",
     "serve",
 ]

@@ -72,6 +72,7 @@ from repro.cache import PageAllocator
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.models.transformer import (
+    chunked_prefill_supported,
     paged_pools_init,
     paged_segments_supported,
     ragged_prefill_supported,
@@ -105,6 +106,11 @@ class EngineConfig:
     eos_id: Optional[int] = None  # stop token (None = length-only stopping)
     ragged_prefill: bool = True   # length-aware bucketed prefill (auto-gated)
     gen_buf_len: int = 0          # sync-free token ring capacity; 0 => cache_len
+    # continuous batching (step_slot_chunked): prompt chunk width per row per
+    # slot (0 => prompt_len // 4, page-size-aligned on the paged engine) and
+    # the per-slot prefill token budget across rows (0 => unlimited).
+    chunk_size: int = 0
+    chunk_budget: int = 0
 
 
 @dataclasses.dataclass
@@ -330,6 +336,98 @@ def _decode_n_sync_paged(params, state, sync, key, *, n, cfg, sig):
     return state, sync, served
 
 
+@dataclasses.dataclass
+class PrefillCursor:
+    """Host-side chunked-prefill progress for one admitted request.
+
+    The request occupies its engine row from admission, but its prompt is
+    written chunk by chunk — ``off`` tokens are already in the cache. The
+    row joins decode (and becomes retirable) only at the *activation*
+    dispatch, the one carrying its final chunk; until then the device's
+    ``done`` flag for the row is stale and the readback consumer must skip
+    it (see ``Engine._consume_read``).
+    """
+
+    req: Request
+    row: int
+    toks: np.ndarray          # (L,) int32 — the real (truncated) prompt
+
+    def __post_init__(self):
+        self.off = 0
+
+    @property
+    def remaining(self) -> int:
+        return len(self.toks) - self.off
+
+
+def _sync_activate(sync: SyncState, logits, final, budgets, *, sig: _DecodeSig):
+    """Device-side activation of rows finishing their prompt this dispatch:
+    greedy argmax of the final chunk's last-token logits becomes the first
+    generated token (matching every other admission path), masked into the
+    sync state. Runs inside the chunked dispatch — no logits readback."""
+    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    fin = budgets <= 1
+    if sig.eos_id is not None:
+        fin = fin | (first == sig.eos_id)
+    return SyncState(
+        cur_tok=jnp.where(final, first, sync.cur_tok),
+        age=jnp.where(final, 1, sync.age),
+        budget=jnp.where(final, budgets, sync.budget),
+        done=jnp.where(final, fin, sync.done),
+        gen_buf=sync.gen_buf.at[:, 0].set(
+            jnp.where(final, first, sync.gen_buf[:, 0])),
+    )
+
+
+@partial(jax.jit, static_argnames=("n", "cfg", "sig"), donate_argnums=_DONATE)
+def _chunk_decode_sync(params, state, sync, toks, pos0, valid, reset, final,
+                       budgets, key, *, n, cfg, sig):
+    """One continuous-batching control slot in ONE dispatch: per-row prompt
+    chunks (K/V written at [pos0, pos0+valid)) + device-side activation of
+    rows finishing their prompt + the n-step fused sync-free decode scan.
+
+    Rows mid-prompt carry done=True, so the scan freezes their pos and
+    discards their (masked) decode compute; the one masked write they make —
+    K/V of a dummy token at their next chunk offset — is overwritten by that
+    chunk before anything attends it.
+    """
+    _TRACE_COUNT["n"] += 1
+    logits, state = M.chunk_step(params, state, toks, pos0, valid, reset, cfg,
+                                 shape_window=sig.shape_window)
+    sync = _sync_activate(sync, logits, final, budgets, sig=sig)
+
+    def body(carry, i):
+        state, sync = carry
+        logits, state2 = M.decode_step(params, state, sync.cur_tok, cfg,
+                                       shape_window=sig.shape_window)
+        nxt = _sample(sig, logits, jax.random.fold_in(key, i))
+        state2 = state2._replace(pos=jnp.where(sync.done, state.pos, state2.pos))
+        sync2, served = _sync_step(sync, nxt, sig)
+        return (state2, sync2), served
+
+    (state, sync), served = jax.lax.scan(body, (state, sync), jnp.arange(n))
+    return state, sync, served
+
+
+@partial(jax.jit, static_argnames=("n", "cfg", "sig"), donate_argnums=_DONATE)
+def _chunk_decode_sync_paged(params, state, sync, toks, pos0, valid, final,
+                             budgets, key, *, n, cfg, sig):
+    _TRACE_COUNT["n"] += 1
+    logits, state = M.chunk_step_paged(params, state, toks, pos0, valid, cfg)
+    sync = _sync_activate(sync, logits, final, budgets, sig=sig)
+
+    def body(carry, i):
+        state, sync = carry
+        logits, state2 = M.decode_step_paged(params, state, sync.cur_tok, cfg)
+        nxt = _sample(sig, logits, jax.random.fold_in(key, i))
+        state2 = state2._replace(pos=jnp.where(sync.done, state.pos, state2.pos))
+        sync2, served = _sync_step(sync, nxt, sig)
+        return (state2, sync2), served
+
+    (state, sync), served = jax.lax.scan(body, (state, sync), jnp.arange(n))
+    return state, sync, served
+
+
 @partial(jax.jit, static_argnames=("sig",))
 def _sync_admit(sync: SyncState, logits, rows, budgets, *, sig):
     """Device-side admission: first token (greedy argmax of the prefill
@@ -455,10 +553,25 @@ class Engine:
         # the row still hosts the request it observed (guards against a
         # stale pre-admission done flag retiring a freshly admitted request)
         self._row_epoch = np.zeros(B, np.int64)
+        # continuous batching: per-row chunked-prefill cursors (insertion
+        # order = admission order = chunk-scheduling priority)
+        self._cursors: dict = {}
+        self._chunk = ecfg.chunk_size or max(P // 4, 1)
+        self._chunk_ok = (chunked_prefill_supported(cfg)
+                          and ecfg.shape_window is None)
 
     # ------------------------------------------------------------------
     def queue_len(self) -> int:
         return len(self.pending)
+
+    def token_backlog(self) -> int:
+        """Pending prompt *tokens*: queued prompts plus the unwritten tails
+        of in-flight chunked prefills — the observation the TokenBacklogAware
+        policy prices (a request count hides that one 4k prompt costs what
+        250 short ones do)."""
+        P = self.ecfg.prompt_len
+        t = sum(max(1, min(len(r.tokens), P)) for r in self.pending)
+        return t + sum(c.remaining for c in self._cursors.values())
 
     def submit(self, reqs: list) -> None:
         self.pending.extend(reqs)
@@ -706,6 +819,9 @@ class Engine:
         for row, req in enumerate(self.active):
             if req is None or not done[row]:
                 continue
+            if row in self._cursors:
+                continue  # mid-chunked-prefill: the device done flag is the
+                #           previous tenant's — the row isn't live yet
             if p["epoch"][row] != self._row_epoch[row]:
                 continue  # row re-admitted after this packet was dispatched
             a = int(age[row])
@@ -770,6 +886,172 @@ class Engine:
         served, per_step = self._consume_read(p, count_waits=False)
         return {"served": served, "served_per_step": per_step}
 
+    # --------------------------------------- continuous batching (chunked)
+    def _require_chunked(self) -> None:
+        if not self._chunk_ok:
+            raise ValueError(
+                f"{self.cfg.name}: chunked prefill needs a dense-attention "
+                "stack, no sliding window, and no lossy cache_dtype")
+
+    def _validate_chunked(self, req: Request) -> None:
+        if req.max_new_tokens > self._gen_cap:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens {req.max_new_tokens} "
+                f"exceeds gen_buf_len {self._gen_cap}")
+
+    def _admit_chunked(self, now: int) -> int:
+        """Claim free rows for pending requests — pure host bookkeeping.
+
+        No prefill dispatch happens here: the prompt is staged on the host
+        and enters the cache chunk by chunk through the mixed dispatch, so
+        admission cost no longer scales with prompt length. ``now`` is
+        recorded as ``admit``-time only; ``start_slot`` stamps at the first
+        chunk dispatch (actual service start).
+        """
+        P = self.ecfg.prompt_len
+        k = 0
+        for row in self.free_slots():
+            if not self.pending:
+                break
+            self._validate_chunked(self.pending[0])  # raise before popping
+            req = self.pending.pop(0)
+            L = max(1, min(len(req.tokens), P))
+            if len(req.tokens) > P:
+                req.truncated = True
+            toks = np.asarray(req.tokens[:L], np.int32)
+            if len(toks) < L:
+                toks = np.concatenate(
+                    [toks, np.full(L - len(toks), PAD_ID, np.int32)])
+            self.active[row] = req
+            self.slot_age[row] = 0
+            self._claim_row(row)
+            self._cursors[row] = PrefillCursor(req=req, row=row, toks=toks)
+            k += 1
+        return k
+
+    def _claim_row(self, row: int) -> None:
+        """Engine-specific setup when a chunked admission claims a row."""
+
+    def _chunk_reserve(self, row: int, cur: PrefillCursor, take: int,
+                       fin: bool, n_steps: int) -> bool:
+        """Engine-specific capacity check for one scheduled chunk (the paged
+        engine extends the row's block table here). False = defer the chunk
+        to a later slot."""
+        return True
+
+    def _chunk_plan(self, n_steps: int) -> Optional[dict]:
+        """Pick this slot's chunk rows under the per-slot token budget.
+
+        Cursors are visited in admission (FIFO) order; each scheduled row
+        advances up to ``chunk_size`` tokens, and the slot stops scheduling
+        once ``chunk_budget`` prompt tokens are packed — the knob bounding
+        how much prefill compute any single dispatch can add on top of
+        decode. Chunks may be partial (budget or prompt tail), so any
+        budget >= 1 makes progress.
+        """
+        if not self._cursors:
+            return None
+        B, C = len(self.active), self._chunk
+        left = self.ecfg.chunk_budget or (B * C)
+        toks = np.zeros((B, C), np.int32)
+        pos0 = np.zeros(B, np.int32)
+        valid = np.zeros(B, np.int32)
+        reset = np.zeros(B, bool)
+        final = np.zeros(B, bool)
+        budgets = np.zeros(B, np.int32)
+        plan = []
+        for row, cur in list(self._cursors.items()):
+            if left <= 0:
+                break
+            take = min(C, cur.remaining, left)
+            if take <= 0:
+                continue
+            fin = cur.off + take == len(cur.toks)
+            if not self._chunk_reserve(row, cur, take, fin, n_steps):
+                continue
+            left -= take
+            toks[row, :take] = cur.toks[cur.off:cur.off + take]
+            pos0[row] = cur.off
+            valid[row] = take
+            reset[row] = cur.off == 0
+            final[row] = fin
+            budgets[row] = cur.req.max_new_tokens
+            plan.append((row, cur, take, fin))
+        if not plan:
+            return None
+        return {"toks": toks, "pos0": pos0, "valid": valid, "reset": reset,
+                "final": final, "budgets": budgets, "plan": plan}
+
+    def _finish_chunk_plan(self, plan: dict, now: int) -> None:
+        """Advance cursors after the chunk dispatch. A row whose final chunk
+        just shipped becomes live: its cursor drops (the readback consumer
+        may retire it again) and its epoch bumps, so done-flag packets from
+        pre-activation dispatches can never retire it (they carry the old
+        epoch or meet the cursor guard)."""
+        for row, cur, take, fin in plan["plan"]:
+            if cur.off == 0:
+                cur.req.start_slot = now
+            cur.off += take
+            if fin:
+                del self._cursors[row]
+                self._row_epoch[row] += 1
+                self.slot_age[row] = 1
+
+    def step_slot_chunked(self, now: int, n_steps: int = 1) -> dict:
+        """One continuous-batching control slot: admit (host bookkeeping
+        only) -> ONE mixed dispatch interleaving per-row prompt chunks with
+        the fused sync-free decode scan -> async counter readback.
+
+        A slot costs exactly one dispatch regardless of prompt length, and a
+        long prompt adds at most ``chunk_budget`` prefill tokens to any
+        slot, so in-flight decodes are never stalled behind it — the
+        head-of-line hazard the bucketed-admission paths pay. First-token
+        sampling stays on device (``_sync_activate``); greedy streams are
+        bit-identical to every legacy path.
+        """
+        self._require_chunked()
+        prev, self._pending_read = self._pending_read, None
+        early = prev is not None and self._readback_ready(prev)
+        served_prev, per_step_prev = (self._consume_read(prev) if early
+                                      else (0, []))
+        admitted = self._admit_chunked(now)
+        plan = self._chunk_plan(n_steps)
+        n_active = sum(r is not None for r in self.active)
+        if plan is not None:
+            self._key, sub = jax.random.split(self._key)
+            self.state, self.sync, served_steps = _chunk_decode_sync(
+                self.params, self.state, self.sync,
+                jnp.asarray(plan["toks"]), jnp.asarray(plan["pos0"]),
+                jnp.asarray(plan["valid"]), jnp.asarray(plan["reset"]),
+                jnp.asarray(plan["final"]), jnp.asarray(plan["budgets"]),
+                sub, n=n_steps, cfg=self.cfg, sig=self._sig,
+            )
+            self.decode_dispatches += 1
+            self._finish_chunk_plan(plan, now)
+            self._post_readback(now, served_steps)
+        elif n_active:
+            self._key, sub = jax.random.split(self._key)
+            self.state, self.sync, served_steps = _decode_n_sync(
+                self.params, self.state, self.sync, sub,
+                n=n_steps, cfg=self.cfg, sig=self._sig,
+            )
+            self.decode_dispatches += 1
+            self._post_readback(now, served_steps)
+        if not early:
+            served_prev, per_step_prev = self._consume_read(prev)
+        self.served_history.append(served_prev)
+        self.steps += n_steps
+        return {
+            "active": n_active,
+            "queue": len(self.pending),
+            "served": served_prev,
+            "served_per_step": per_step_prev,
+            "admitted": admitted,
+            "prefilling": len(self._cursors),
+            "finished_total": len(self.finished),
+            "blocking_syncs": self.blocking_syncs,
+        }
+
 
 class PagedEngine(Engine):
     """Continuous batching over a paged KV cache (see DESIGN.md §6).
@@ -815,6 +1097,11 @@ class PagedEngine(Engine):
         self._ragged = ecfg.ragged_prefill and ragged_prefill_supported(cfg)
         self._buckets = _prompt_buckets(P, quantum=ps)
         self._gen_cap = ecfg.gen_buf_len or ecfg.cache_len
+
+        self._cursors = {}
+        base_chunk = ecfg.chunk_size or max(P // 4, 1)
+        self._chunk = -(-base_chunk // ps) * ps if not ecfg.chunk_size else base_chunk
+        self._chunk_ok = chunked_prefill_supported(cfg)
 
         self.pools = paged_pools_init(cfg, ecfg.num_pages, ps)
         self.allocator = PageAllocator(ecfg.num_pages, ps)
@@ -965,11 +1252,12 @@ class PagedEngine(Engine):
         pages must exist up front; growing here keeps the decode dispatch
         free of host round-trips. Rows the pool cannot cover are preempted
         (and, under the sync-free protocol, deactivated on device with one
-        scatter)."""
+        scatter). Mid-chunked-prefill rows are skipped — their page demand
+        is reserved chunk by chunk in ``_chunk_reserve``."""
         ps = self.ecfg.page_size
         cleared = []
         for row, req in enumerate(self.active):
-            if req is None:
+            if req is None or row in self._cursors:
                 continue
             need = min(int(self.pos[row]) + n_steps, self.MP * ps)
             pages = self.allocator.extend(row, need)
@@ -1089,6 +1377,140 @@ class PagedEngine(Engine):
             "served": served_prev,
             "served_per_step": per_step_prev,
             "admitted": admitted,
+            "finished_total": len(self.finished),
+            "occupancy": self.occupancy(),
+            "preemptions": self.preemptions,
+            "blocking_syncs": self.blocking_syncs,
+        }
+
+    # --------------------------------------- continuous batching (chunked)
+    def _validate_chunked(self, req: Request) -> None:
+        ps, P = self.ecfg.page_size, self.ecfg.prompt_len
+        if req.max_new_tokens > self.MP * ps - P + 1:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens {req.max_new_tokens} "
+                f"exceeds the block table ({self.MP} pages x {ps})"
+            )
+        # A prompt that cannot fit the WHOLE pool (plus its first decode
+        # write) can never activate: refusing it at admission beats the
+        # silent stall the per-chunk reservation would otherwise spin in.
+        from repro.cache.paged import pages_for
+
+        L = max(1, min(len(req.tokens), P))
+        if pages_for(L + 1, ps) > self.ecfg.num_pages:
+            raise ValueError(
+                f"request {req.rid}: prompt of {L} tokens needs "
+                f"{pages_for(L + 1, ps)} pages; the pool holds "
+                f"{self.ecfg.num_pages}")
+        super()._validate_chunked(req)
+
+    def _claim_row(self, row: int) -> None:
+        self.allocator.alloc(row, 0)   # register an empty block table
+
+    def _chunk_reserve(self, row: int, cur: PrefillCursor, take: int,
+                       fin: bool, n_steps: int) -> bool:
+        """Chunk admission = page allocation: the chunk enters only if the
+        pool covers its writes (plus the slot's decode lookahead when it is
+        the activating chunk). A refused chunk just waits — pages free as
+        decodes retire."""
+        ps = self.ecfg.page_size
+        need = min(cur.off + take + (n_steps if fin else 0), self.MP * ps)
+        pages = self.allocator.extend(row, need)
+        if pages is None:
+            self.alloc_failures += 1
+            return False
+        self.block_tables[row, :len(pages)] = pages
+        return True
+
+    def _preempt_cursor(self, row: int) -> None:
+        """Bounce a mid-prefill request back to pending (pool starved by
+        concurrent prefills). Its pages return to the pool and its prompt
+        restarts from chunk 0 on re-admission — identical tokens under
+        greedy, exactly like decode preemption."""
+        cur = self._cursors.pop(row)
+        req = self.active[row]
+        self._release_row(row)
+        self.active[row] = None
+        req.generated = None
+        req.start_slot = None
+        self.pending.insert(0, req)
+        self.preemptions += 1
+
+    def step_slot_chunked(self, now: int, n_steps: int = 1) -> dict:
+        """Continuous batching over the paged pool: one mixed dispatch per
+        slot carrying per-row prompt chunks (written through block tables)
+        plus the fused sync-free decode scan. Chunk page demand is reserved
+        at schedule time; decode rows pre-extend as in the sync-free path.
+        """
+        self._require_chunked()
+        prev, self._pending_read = self._pending_read, None
+        early = prev is not None and self._readback_ready(prev)
+        served_prev, per_step_prev = (self._consume_read(prev) if early
+                                      else (0, []))
+        admitted = self._admit_chunked(now)
+        self.peak_active = max(self.peak_active,
+                               sum(r is not None for r in self.active))
+        plan = self._chunk_plan(n_steps)
+        if plan is None and len(self._cursors) > 1 and all(
+                r is None or row in self._cursors
+                for row, r in enumerate(self.active)):
+            # every occupied row is a stalled prefill: no decode will ever
+            # retire and free pages — bounce the youngest prefill so the
+            # oldest can finish (re-prefilled later; greedy-identical)
+            self._preempt_cursor(next(reversed(self._cursors)))
+            plan = self._chunk_plan(n_steps)
+        self._ensure_pages(n_steps, sync=True)
+        self.occupancy_hwm = self.occupancy()
+        n_active = sum(r is not None for r in self.active)
+        decoding = any(r is not None and row not in self._cursors
+                       for row, r in enumerate(self.active))
+        if plan is not None or decoding:
+            # .copy(): see step_slot_sync — the non-blocking loop mutates
+            # pos/block_tables before the async dispatch must have read them
+            state = M.PagedDecodeState(
+                pools=self.pools,
+                block_tables=jnp.asarray(self.block_tables.copy()),
+                pos=jnp.asarray(self.pos.copy()),
+                last_tok=jnp.zeros_like(self.sync.cur_tok),
+            )
+            self._key, sub = jax.random.split(self._key)
+            if plan is not None:
+                state, self.sync, served_steps = _chunk_decode_sync_paged(
+                    self.params, state, self.sync,
+                    jnp.asarray(plan["toks"]), jnp.asarray(plan["pos0"]),
+                    jnp.asarray(plan["valid"]), jnp.asarray(plan["final"]),
+                    jnp.asarray(plan["budgets"]), sub,
+                    n=n_steps, cfg=self.cfg, sig=self._sig,
+                )
+            else:
+                state, self.sync, served_steps = _decode_n_sync_paged(
+                    self.params, state, self.sync, sub,
+                    n=n_steps, cfg=self.cfg, sig=self._sig,
+                )
+            self.pools = state.pools
+            self.decode_dispatches += 1
+            for row, req in enumerate(self.active):
+                if req is not None and row not in self._cursors:
+                    self.pos[row] += n_steps   # decode rows (host mirror)
+            if plan is not None:
+                for row, cur, take, fin in plan["plan"]:
+                    # chunk writes, plus the same-slot decode scan for rows
+                    # the chunk activated (over-covers if done at activation
+                    # — the documented <= n_steps trade)
+                    self.pos[row] += take + (n_steps if fin else 0)
+                self._finish_chunk_plan(plan, now)
+            self._post_readback(now, served_steps)
+        if not early:
+            served_prev, per_step_prev = self._consume_read(prev)
+        self.served_history.append(served_prev)
+        self.steps += n_steps
+        return {
+            "active": n_active,
+            "queue": len(self.pending),
+            "served": served_prev,
+            "served_per_step": per_step_prev,
+            "admitted": admitted,
+            "prefilling": len(self._cursors),
             "finished_total": len(self.finished),
             "occupancy": self.occupancy(),
             "preemptions": self.preemptions,

@@ -42,6 +42,11 @@ class RequestSource:
     max_new_tokens: int = 16
     seed: int = 0
     min_prompt_len: Optional[int] = None   # None => fixed prompt_len
+    # bimodal long/short mix (the continuous-batching benchmark workload):
+    # a ``long_frac`` fraction of arrivals carries a ``long_prompt_len``
+    # prompt, the rest draw from the [min_prompt_len, prompt_len] band.
+    long_frac: float = 0.0
+    long_prompt_len: Optional[int] = None
 
     def __post_init__(self):
         self._rng = np.random.default_rng(self.seed)
@@ -60,6 +65,8 @@ class RequestSource:
             if self.min_prompt_len is not None:
                 plen = int(self._rng.integers(self.min_prompt_len,
                                               self.prompt_len + 1))
+            if self.long_frac and self._rng.random() < self.long_frac:
+                plen = self.long_prompt_len or self.prompt_len
             toks = self._rng.integers(0, self.vocab_size, plen, dtype=np.int32)
             out.append(
                 Request(

@@ -25,7 +25,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.control import DriftPlusPenalty, LatencyAware, MemoryAware, Policy, Static
+from repro.control import (DriftPlusPenalty, LatencyAware, MemoryAware,
+                           Policy, Static, TokenBacklogAware)
 from repro.control.policy import drift_plus_penalty_action
 from repro.core.utility import Utility, paper_utility
 
@@ -78,19 +79,23 @@ class PolicyScheduler:
         # over device-resident tables (same table shapes => same compile, so
         # sweeps over V never re-trace). Anything else that satisfies the
         # Policy protocol runs its own act() via the shared static-arg jit.
-        self._table_path = type(self.policy) in (DriftPlusPenalty, LatencyAware, MemoryAware)
+        self._table_path = type(self.policy) in (
+            DriftPlusPenalty, LatencyAware, MemoryAware, TokenBacklogAware)
         if self._table_path:
             f, s, lam = self.policy.tables()
             self._f_tab = jax.device_put(f)
             self._s_tab = jax.device_put(s)
             self._lam_tab = jax.device_put(lam)
             self._V = jax.device_put(jnp.float32(self.policy.V))
-            # virtual-queue price per unit rate: LatencyAware's action cost
-            # or MemoryAware's committed-page cost (zeros = unconstrained)
+            # virtual-queue price per unit rate: LatencyAware's action cost,
+            # MemoryAware's committed-page cost, or TokenBacklogAware's
+            # committed-prompt-token cost (zeros = unconstrained)
             if isinstance(self.policy, LatencyAware):
                 cost = self.policy.cost_gain
             elif isinstance(self.policy, MemoryAware):
                 cost = self.policy.mem_gain * self.policy.pages_per_request
+            elif isinstance(self.policy, TokenBacklogAware):
+                cost = self.policy.tok_gain * self.policy.tokens_per_request
             else:
                 cost = 0.0
             self._cost_tab = jax.device_put(
@@ -101,13 +106,26 @@ class PolicyScheduler:
         self.rate_history: list = []
         self._pending_rate = None  # control_async: last dispatched decision
 
-    def control(self, backlog: int, occupancy: Optional[float] = None) -> float:
+    def _observe(self, occupancy: Optional[float],
+                 token_backlog: Optional[float]) -> None:
+        """Feed observation-driven virtual queues: a policy exposing
+        ``observe`` names the engine signal it consumes via its
+        ``observation`` attribute ("occupancy" for MemoryAware,
+        "token_backlog" for TokenBacklogAware) and advances on it before
+        acting; other policies ignore both."""
+        if not hasattr(self.policy, "observe"):
+            return
+        sig = {"occupancy": occupancy, "token_backlog": token_backlog}.get(
+            getattr(self.policy, "observation", "occupancy"))
+        if sig is not None:
+            self._carry = self.policy.observe(self._carry, sig)
+
+    def control(self, backlog: int, occupancy: Optional[float] = None,
+                token_backlog: Optional[float] = None) -> float:
         """One control-slot decision. ``occupancy`` (the paged engine's
-        page-pool fill fraction) feeds observation-driven virtual queues —
-        policies exposing ``observe`` (e.g. ``MemoryAware``) advance on it
-        before acting; other policies ignore it."""
-        if occupancy is not None and hasattr(self.policy, "observe"):
-            self._carry = self.policy.observe(self._carry, occupancy)
+        page-pool fill fraction) and ``token_backlog`` (pending prompt
+        tokens) feed observation-driven virtual queues via ``_observe``."""
+        self._observe(occupancy, token_backlog)
         if self._static_rate is not None:  # no device round-trip for baselines
             f = float(self._static_rate)
         else:
@@ -131,7 +149,8 @@ class PolicyScheduler:
         )
         return f_star
 
-    def control_async(self, backlog: int, occupancy: Optional[float] = None) -> float:
+    def control_async(self, backlog: int, occupancy: Optional[float] = None,
+                      token_backlog: Optional[float] = None) -> float:
         """Sync-free control: dispatch this slot's Algorithm-1 decision and
         return the PREVIOUS one — the readback of decision t overlaps slot
         t's compute, so the serve loop never blocks on the controller.
@@ -139,8 +158,7 @@ class PolicyScheduler:
         bounded observation delay (the backlog moves by at most one slot's
         arrivals/services). The first call blocks once to seed the pipeline;
         Static policies short-circuit with no device work at all."""
-        if occupancy is not None and hasattr(self.policy, "observe"):
-            self._carry = self.policy.observe(self._carry, occupancy)
+        self._observe(occupancy, token_backlog)
         if self._static_rate is not None:
             f = float(self._static_rate)
             self.rate_history.append(f)
@@ -182,6 +200,24 @@ def AdaptiveScheduler(
 def StaticScheduler(rate: float = 10.0, capacity: int = 256) -> PolicyScheduler:
     """Paper baseline: fixed sampling rate, no queue awareness."""
     return PolicyScheduler(policy=Static(rate=float(rate)), capacity=capacity)
+
+
+def TokenAwareScheduler(
+    rates: tuple = tuple(float(f) for f in range(1, 11)),
+    V: float = 50.0,
+    tokens_per_request: float = 16.0,
+    token_budget: float = 64.0,
+    tok_gain: float = 1.0,
+    capacity: int = 256,
+) -> PolicyScheduler:
+    """Algorithm-1 scheduler that also prices pending prompt tokens (pairs
+    with the continuous-batching engines' ``token_backlog()`` observation)."""
+    policy = TokenBacklogAware(
+        rates=tuple(float(f) for f in rates), V=V,
+        tokens_per_request=tokens_per_request,
+        token_budget=token_budget, tok_gain=tok_gain,
+    )
+    return PolicyScheduler(policy=policy, capacity=capacity)
 
 
 def MemoryAwareScheduler(

@@ -31,7 +31,7 @@ from repro.runtime.request import RequestSource
 
 def serve(engine: Engine, scheduler, source: RequestSource, *,
           horizon: int, steps_per_slot: int = 2, fused: bool = True,
-          sync_free: bool = False) -> dict:
+          sync_free: bool = False, chunked: bool = False) -> dict:
     trace = {"backlog": [], "rate": [], "served": [], "active": [],
              "dropped": [], "dispatches": [], "occupancy": [], "syncs": []}
     paged = hasattr(engine, "occupancy")
@@ -42,13 +42,19 @@ def serve(engine: Engine, scheduler, source: RequestSource, *,
         # occupancy dips as retirements free pages, hiding the pressure the
         # controller must price
         occ = max(engine.occupancy(), engine.occupancy_hwm) if paged else None
-        if sync_free and hasattr(scheduler, "control_async"):
-            rate = scheduler.control_async(engine.queue_len(), occupancy=occ)
+        tok = engine.token_backlog() if hasattr(engine, "token_backlog") else None
+        if (sync_free or chunked) and hasattr(scheduler, "control_async"):
+            rate = scheduler.control_async(engine.queue_len(), occupancy=occ,
+                                           token_backlog=tok)
         else:
-            rate = scheduler.control(engine.queue_len(), occupancy=occ)
+            rate = scheduler.control(engine.queue_len(), occupancy=occ,
+                                     token_backlog=tok)
         reqs = source.poll(t, rate)
         scheduler.admit(engine, reqs, t)
-        if sync_free:
+        if chunked:
+            m = engine.step_slot_chunked(t, n_steps=steps_per_slot)
+            served = m["served"]
+        elif sync_free:
             m = engine.step_slot_sync(t, n_steps=steps_per_slot)
             served = m["served"]
         elif fused:
@@ -69,7 +75,7 @@ def serve(engine: Engine, scheduler, source: RequestSource, *,
         )
         trace["occupancy"].append(engine.occupancy_hwm if paged else 0.0)
         trace["syncs"].append(engine.blocking_syncs - s0)
-    if sync_free and trace["served"]:
+    if (sync_free or chunked) and trace["served"]:
         # flush the in-flight slot's readback so totals match the synchronous
         # paths; its completions belong to the last dispatched slot
         trace["served"][-1] += engine.drain()["served"]
@@ -77,14 +83,26 @@ def serve(engine: Engine, scheduler, source: RequestSource, *,
 
 
 def latency_stats(engine: Engine) -> dict:
-    waits = [r.start_slot - r.arrival_slot for r in engine.finished if r.start_slot is not None]
-    totals = [r.finish_slot - r.arrival_slot for r in engine.finished if r.finish_slot is not None]
-    if not totals:
-        return {"n": 0}
-    return {
-        "n": len(totals),
-        "wait_p50": float(np.percentile(waits, 50)),
-        "wait_p99": float(np.percentile(waits, 99)),
-        "total_p50": float(np.percentile(totals, 50)),
-        "total_p99": float(np.percentile(totals, 99)),
-    }
+    """Wait/total latency percentiles over finished requests.
+
+    ``waits`` and ``totals`` filter on *different* fields (start_slot vs
+    finish_slot), so they can legitimately diverge — e.g. a request retired
+    through the sync-free readback after a preemption reset its start_slot —
+    and each percentile set is guarded on its own list. Also reports
+    ``admitted_but_unfinished``: requests holding an engine row or queue
+    slot at shutdown (a drain/accounting leak shows up here).
+    """
+    waits = [r.start_slot - r.arrival_slot for r in engine.finished
+             if r.start_slot is not None]
+    totals = [r.finish_slot - r.arrival_slot for r in engine.finished
+              if r.finish_slot is not None]
+    unfinished = (sum(1 for r in engine.active if r is not None)
+                  + len(engine.pending))
+    out = {"n": len(totals), "admitted_but_unfinished": unfinished}
+    if totals:
+        out["total_p50"] = float(np.percentile(totals, 50))
+        out["total_p99"] = float(np.percentile(totals, 99))
+    if waits:
+        out["wait_p50"] = float(np.percentile(waits, 50))
+        out["wait_p99"] = float(np.percentile(waits, 99))
+    return out

@@ -6,3 +6,10 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_configure(config):
+    # CI's fast lane runs `-m "not slow"`; the slow lane runs `-m slow`
+    # (heavy hypothesis/property sweeps). Tier-1 (`pytest -x -q`) runs both.
+    config.addinivalue_line(
+        "markers", "slow: heavy property/fuzz sweeps (second CI lane)")

@@ -1,0 +1,251 @@
+"""Cross-engine differential fuzz harness.
+
+One seeded workload generator (arrival bursts, ragged prompt lengths, EOS
+mixes, preemption pressure) drives every engine x serving-mode combination —
+
+    {dense, paged} x {legacy step, fused, sync-free, continuous-batching}
+
+— and asserts the repo's equivalence contract on each run:
+
+  * identical greedy token streams per request (generation is a pure
+    function of the prompt under greedy decoding, whatever the dispatch
+    schedule),
+  * identical retirement sets (every submitted request finishes exactly
+    once),
+  * conservation of served counts (the per-slot served history plus the
+    drain tail accounts for every finished request — nothing double-counted
+    or dropped by the async readback protocol).
+
+This promotes the ad-hoc equivalence matrix that grew in
+tests/test_sync_free.py into one parametrized property suite; new serving
+modes join by adding a MODES entry.
+"""
+import copy
+
+import jax
+import numpy as np
+import pytest
+
+from hypcompat import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.runtime import (
+    Engine,
+    EngineConfig,
+    PagedEngine,
+    PagedEngineConfig,
+)
+from repro.runtime.request import Request
+
+KEY = jax.random.PRNGKey(0)
+_CACHE = {}
+
+
+def _setup():
+    if "m" not in _CACHE:
+        cfg = get_config("granite-3-2b", smoke=True)
+        _CACHE["m"] = (cfg, init_params(KEY, cfg))
+    return _CACHE["m"]
+
+
+# --------------------------------------------------------------- workloads
+def make_workload(seed: int, n_reqs: int = 10, prompt_len: int = 16,
+                  min_prompt: int = 1, max_new_lo: int = 1,
+                  max_new_hi: int = 8, burst: int = 4):
+    """Seeded random workload: ragged prompts, mixed budgets, bursty
+    arrivals (a schedule of (slot, [requests]) pairs)."""
+    rng = np.random.default_rng(seed)
+    vocab = 256
+    reqs, schedule, slot = [], [], 0
+    rid = 0
+    while rid < n_reqs:
+        k = int(rng.integers(1, burst + 1))
+        batch = []
+        for _ in range(min(k, n_reqs - rid)):
+            plen = int(rng.integers(min_prompt, prompt_len + 1))
+            batch.append(Request(
+                rid=rid, arrival_slot=slot,
+                tokens=rng.integers(0, vocab, plen, dtype=np.int32),
+                max_new_tokens=int(rng.integers(max_new_lo, max_new_hi + 1)),
+            ))
+            rid += 1
+        schedule.append((slot, batch))
+        reqs.extend(batch)
+        slot += int(rng.integers(1, 4))
+    return reqs, schedule
+
+
+MODES = [
+    ("dense", "step"),
+    ("dense", "fused"),
+    ("dense", "sync"),
+    ("dense", "chunked"),
+    ("paged", "fused"),
+    ("paged", "sync"),
+    ("paged", "chunked"),
+]
+
+
+def _mk_engine(kind, cfg, params, eos_id=None, tight=False, chunk_size=0,
+               chunk_budget=0):
+    if kind == "dense":
+        return Engine(cfg, params, EngineConfig(
+            batch_slots=4, prompt_len=16, cache_len=64, eos_id=eos_id,
+            chunk_size=chunk_size, chunk_budget=chunk_budget))
+    return PagedEngine(cfg, params, PagedEngineConfig(
+        prompt_len=16, cache_len=64, page_size=8,
+        num_pages=10 if tight else 32, max_active=6, eos_id=eos_id,
+        chunk_size=chunk_size, chunk_budget=chunk_budget))
+
+
+def drive(eng, mode, reqs, schedule, n_steps=2, max_slots=300):
+    """Run one engine/mode over the arrival schedule to completion.
+
+    Returns (streams, retired rids, conservation tuple)."""
+    step = {"step": getattr(eng, "step", None), "fused": eng.step_slot,
+            "sync": eng.step_slot_sync, "chunked": eng.step_slot_chunked}[mode]
+    sched = {t: [copy.deepcopy(r) for r in batch] for t, batch in schedule}
+    t = 0
+    while (len(eng.finished) < len(reqs) or t <= max(sched)) and t < max_slots:
+        if t in sched:
+            eng.submit(sched[t])
+        if mode == "step":
+            for _ in range(n_steps):
+                step(t)
+        else:
+            step(t, n_steps=n_steps)
+        t += 1
+    drained = eng.drain()["served"] if mode in ("sync", "chunked") else 0
+    assert len(eng.finished) == len(reqs), (mode, len(eng.finished), len(reqs))
+    streams = {r.rid: tuple(r.generated) for r in eng.finished}
+    retired = frozenset(r.rid for r in eng.finished)
+    conservation = (sum(eng.served_history) + drained, len(eng.finished))
+    return streams, retired, conservation
+
+
+def _assert_equivalent(cfg, params, reqs, schedule, *, eos_id=None,
+                       tight=False, chunk_kw=()):
+    ref = None
+    for kind, mode in MODES:
+        if tight and kind == "dense":
+            continue  # pool pressure is a paged-only scenario
+        kw = dict(chunk_kw) if mode == "chunked" else {}
+        eng = _mk_engine(kind, cfg, params, eos_id=eos_id, tight=tight, **kw)
+        got = drive(eng, mode, reqs, schedule)
+        streams, retired, (served, finished) = got
+        assert served == finished == len(reqs), (kind, mode, served, finished)
+        if ref is None:
+            ref = (streams, retired)
+        else:
+            assert streams == ref[0], (kind, mode)
+            assert retired == ref[1], (kind, mode)
+
+
+# ------------------------------------------------------------------- tests
+def test_differential_fixed_seed():
+    """The full engine x mode matrix on one bursty ragged workload."""
+    cfg, params = _setup()
+    reqs, schedule = make_workload(seed=0)
+    _assert_equivalent(cfg, params, reqs, schedule,
+                       chunk_kw={"chunk_size": 4})
+
+
+def test_differential_eos_mix():
+    """EOS stopping: learn a token the model emits mid-stream, declare it
+    EOS, and require every path to stop at its first occurrence."""
+    cfg, params = _setup()
+    reqs, schedule = make_workload(seed=3, n_reqs=6, max_new_lo=6,
+                                   max_new_hi=10)
+    probe = _mk_engine("dense", cfg, params)
+    streams, _, _ = drive(probe, "fused", reqs, schedule)
+    eos = streams[reqs[0].rid][2]
+    _assert_equivalent(cfg, params, reqs, schedule, eos_id=eos,
+                       chunk_kw={"chunk_size": 4})
+    eng = _mk_engine("dense", cfg, params, eos_id=eos, chunk_size=4)
+    got, _, _ = drive(eng, "chunked", reqs, schedule)
+    g0 = got[reqs[0].rid]
+    assert g0[-1] == eos and eos not in g0[:-1]
+
+
+def test_differential_preemption_pressure():
+    """A pool too small for the offered load: paged modes must preempt
+    (including mid-chunked-prefill) and still match the dense streams."""
+    cfg, params = _setup()
+    reqs, schedule = make_workload(seed=7, n_reqs=8, max_new_lo=4,
+                                   max_new_hi=10)
+    dense = _mk_engine("dense", cfg, params)
+    ref_streams, ref_retired, _ = drive(dense, "fused", reqs, schedule)
+    for mode, kw in [("sync", {}), ("chunked", {"chunk_size": 8})]:
+        eng = _mk_engine("paged", cfg, params, tight=True, **kw)
+        streams, retired, (served, finished) = drive(eng, mode, reqs, schedule)
+        assert streams == ref_streams and retired == ref_retired, mode
+        assert served == finished == len(reqs)
+
+
+def test_differential_instant_finish():
+    """max_new_tokens == 1 edge: the activation token alone completes the
+    request on every path (no scan step ever runs for it)."""
+    cfg, params = _setup()
+    reqs, schedule = make_workload(seed=11, n_reqs=6, max_new_lo=1,
+                                   max_new_hi=2)
+    _assert_equivalent(cfg, params, reqs, schedule,
+                       chunk_kw={"chunk_size": 4})
+
+
+@pytest.mark.slow
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6),
+       chunk_size=st.sampled_from([3, 4, 8, 16]),
+       chunk_budget=st.sampled_from([0, 5, 12]),
+       n_steps=st.integers(min_value=1, max_value=3))
+def test_differential_fuzz(seed, chunk_size, chunk_budget, n_steps):
+    """Property sweep: random seeds x chunk geometry x scan depth. The
+    chunk schedule (size, budget, steps) must never leak into tokens,
+    retirement, or conservation."""
+    cfg, params = _setup()
+    reqs, schedule = make_workload(seed=seed % 997, n_reqs=8)
+    ref_eng = _mk_engine("dense", cfg, params)
+    ref_streams, ref_retired, _ = drive(ref_eng, "fused", reqs, schedule,
+                                        n_steps=n_steps)
+    for kind in ("dense", "paged"):
+        eng = _mk_engine(kind, cfg, params, chunk_size=chunk_size,
+                         chunk_budget=chunk_budget)
+        streams, retired, (served, finished) = drive(
+            eng, "chunked", reqs, schedule, n_steps=n_steps)
+        assert streams == ref_streams, (kind, seed)
+        assert retired == ref_retired
+        assert served == finished == len(reqs)
+
+
+def test_chunked_dispatch_budget_and_no_hol_stall():
+    """The tentpole's two service-level claims: (1) a continuous-batching
+    slot costs at most ONE dispatch regardless of prompt length; (2) a long
+    prompt admitted alongside short ones never stalls their decode — the
+    short requests finish while the long prompt is still prefilling."""
+    cfg, params = _setup()
+    eng = Engine(cfg, params, EngineConfig(
+        batch_slots=4, prompt_len=48, cache_len=64, chunk_size=4,
+        chunk_budget=8))
+    rng = np.random.default_rng(5)
+    long_req = Request(rid=0, arrival_slot=0,
+                       tokens=rng.integers(0, 256, 48, dtype=np.int32),
+                       max_new_tokens=4)
+    shorts = [Request(rid=1 + i, arrival_slot=0,
+                      tokens=rng.integers(0, 256, 4, dtype=np.int32),
+                      max_new_tokens=3) for i in range(3)]
+    eng.submit([long_req] + shorts)
+    t = 0
+    shorts_done_at = None
+    while len(eng.finished) < 4 and t < 80:
+        d0 = eng.prefill_dispatches + eng.decode_dispatches
+        eng.step_slot_chunked(t, n_steps=2)
+        assert eng.prefill_dispatches + eng.decode_dispatches - d0 <= 1
+        if shorts_done_at is None and sum(
+                r.rid != 0 for r in eng.finished) == 3:
+            shorts_done_at = t
+            assert 0 in eng._cursors  # the long prompt is STILL prefilling
+    eng.drain()
+    assert len(eng.finished) == 4
+    assert shorts_done_at is not None
+    assert eng.prefill_dispatches == 0  # admission never dispatches alone

@@ -7,6 +7,7 @@ import pytest
 from repro.kernels import ops
 from repro.kernels.ref import (
     attention_ref,
+    chunk_attention_ref,
     decode_attention_ref,
     paged_decode_attention_ref,
     ssd_ref,
@@ -108,6 +109,37 @@ def test_paged_attention_kernel_sweep(B, H, KVH, hd, N, ps, MP, dtype):
     )
     out = ops.paged_decode_attention(q, kp, vp, bt, pos, impl="interpret")
     np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,C,H,KVH,hd,L,blk", [(3, 16, 4, 2, 64, 256, 64), (2, 32, 4, 4, 64, 128, 128)]
+)
+def test_chunk_attention_kernel_sweep(B, C, H, KVH, hd, L, blk, dtype):
+    """Chunked-prefill kernel (scalar-prefetched pos0/valid, pl.when skip of
+    tiles beyond the written prefix) vs the oracle, mixing a first chunk, a
+    mid-prompt chunk, a partial (final) chunk, and an inactive row."""
+    k = jax.random.normal(KEY, (B, L, KVH, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 21), (B, L, KVH, hd), dtype)
+    q = jax.random.normal(jax.random.fold_in(KEY, 22), (B, C, H, hd), dtype)
+    pos0 = jnp.asarray(([0, 40, 96] * B)[:B], jnp.int32)
+    valid = jnp.asarray(([C, C // 2, 0] * B)[:B], jnp.int32)
+    # position-ordered cache: slot j holds position j up to the row's
+    # written prefix (pos0 + valid), -1 beyond — the engine's invariant
+    written = pos0 + jnp.maximum(valid, 1)
+    j = jnp.arange(L)[None, :]
+    sp = jnp.where(j < written[:, None], j, -1).astype(jnp.int32)
+    ref = chunk_attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), sp, pos0, valid)
+    out = ops.chunk_attention(q, k, v, sp, pos0, valid, impl="interpret",
+                              block_l=blk)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               **_tol(dtype))
+    if dtype == jnp.float32:
+        xla = ops.chunk_attention(q, k, v, sp, pos0, valid, impl="xla",
+                                  block_l=blk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(xla),
+                                   atol=2e-6, rtol=2e-6)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -1,0 +1,234 @@
+"""Serving-runtime hardening: latency_stats guards, drain/shutdown paths,
+and the token-backlog virtual queue (policy + scheduler + serve threading).
+"""
+import copy
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.control import TokenBacklogAware
+from repro.models import init_params
+from repro.runtime import (
+    Engine,
+    EngineConfig,
+    PagedEngine,
+    PagedEngineConfig,
+    PolicyScheduler,
+    RequestSource,
+    TokenAwareScheduler,
+    latency_stats,
+    serve,
+)
+from repro.runtime.request import Request
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("granite-3-2b", smoke=True)
+    params = init_params(KEY, cfg)
+    return cfg, params
+
+
+def _mk_reqs(cfg, n, max_new=4, seed=3, prompt_len=16, min_prompt=2):
+    src = RequestSource(vocab_size=cfg.vocab_size, prompt_len=prompt_len,
+                        min_prompt_len=min_prompt, raw_rate=n,
+                        max_new_tokens=max_new, seed=seed)
+    return src.poll(0, float(n))
+
+
+def _dense(cfg, params, **kw):
+    return Engine(cfg, params, EngineConfig(batch_slots=4, prompt_len=16,
+                                            cache_len=64, **kw))
+
+
+# ----------------------------------------------------------- latency_stats
+def _fake_engine(finished, active=(), pending=()):
+    return types.SimpleNamespace(finished=list(finished), active=list(active),
+                                 pending=list(pending))
+
+
+def _req(rid, arrival=0, start=None, finish=None):
+    r = Request(rid=rid, arrival_slot=arrival, tokens=np.zeros(4, np.int32))
+    r.start_slot, r.finish_slot = start, finish
+    return r
+
+
+def test_latency_stats_empty_waits_nonempty_totals():
+    """The PR-4 bug: waits and totals filter on different fields, so
+    np.percentile(waits) could throw on [] while totals was non-empty —
+    e.g. requests retired with start_slot reset by a preemption."""
+    eng = _fake_engine([_req(0, start=None, finish=5),
+                        _req(1, start=None, finish=7)])
+    stats = latency_stats(eng)          # must not raise
+    assert stats["n"] == 2
+    assert stats["total_p50"] == 6.0
+    assert "wait_p50" not in stats and "wait_p99" not in stats
+
+
+def test_latency_stats_counts_admitted_but_unfinished():
+    eng = _fake_engine(
+        finished=[_req(0, start=1, finish=3)],
+        active=[_req(1), None, _req(2)],
+        pending=[_req(3)],
+    )
+    stats = latency_stats(eng)
+    assert stats["n"] == 1
+    assert stats["admitted_but_unfinished"] == 3
+    assert stats["wait_p50"] == 1.0 and stats["total_p50"] == 3.0
+
+
+def test_latency_stats_all_empty():
+    stats = latency_stats(_fake_engine([]))
+    assert stats == {"n": 0, "admitted_but_unfinished": 0}
+
+
+# ------------------------------------------------------------ drain paths
+@pytest.mark.parametrize("mode", ["sync", "chunked"])
+def test_drain_zero_inflight_is_noop(setup, mode):
+    cfg, params = setup
+    eng = _dense(cfg, params)
+    out = eng.drain()                   # nothing ever dispatched
+    assert out["served"] == 0 and eng.finished == []
+    step = eng.step_slot_sync if mode == "sync" else eng.step_slot_chunked
+    step(0, n_steps=2)                  # empty slot: no pending, no active
+    assert eng.drain()["served"] == 0 and eng.finished == []
+
+
+@pytest.mark.parametrize("mode", ["sync", "chunked"])
+def test_double_drain_is_noop_with_stable_totals(setup, mode):
+    cfg, params = setup
+    eng = _dense(cfg, params)
+    reqs = _mk_reqs(cfg, 6)
+    eng.submit(copy.deepcopy(reqs))
+    step = eng.step_slot_sync if mode == "sync" else eng.step_slot_chunked
+    for t in range(40):
+        if len(eng.finished) == len(reqs):
+            break
+        step(t, n_steps=2)
+    first = eng.drain()["served"]
+    total = len(eng.finished)
+    assert total == len(reqs)
+    second = eng.drain()                # must be a no-op
+    assert second["served"] == 0 and len(eng.finished) == total
+    assert sum(eng.served_history) + first == total
+
+
+def test_drain_after_preemption_paged(setup):
+    """Preemption bounces requests back to pending; drain mid-flight must
+    neither lose nor double-count them, and resuming serves every request
+    with stable served totals."""
+    cfg, params = setup
+    eng = PagedEngine(cfg, params, PagedEngineConfig(
+        prompt_len=16, cache_len=64, page_size=8, num_pages=8, max_active=6,
+        chunk_size=8))
+    reqs = _mk_reqs(cfg, 6, max_new=8, seed=11)
+    eng.submit(copy.deepcopy(reqs))
+    drained = 0
+    for t in range(6):
+        eng.step_slot_chunked(t, n_steps=2)
+    drained += eng.drain()["served"]    # mid-flight shutdown flush
+    assert eng.drain()["served"] == 0   # and it is idempotent
+    for t in range(6, 200):
+        if len(eng.finished) == len(reqs):
+            break
+        eng.step_slot_chunked(t, n_steps=2)
+    drained += eng.drain()["served"]
+    assert len(eng.finished) == len(reqs)
+    assert sum(eng.served_history) + drained == len(reqs)
+    assert eng.preemptions >= 0
+    # every page returned: nothing leaks across preempt/retire/drain
+    assert eng.allocator.used_pages == 0
+    eng.allocator.check()
+
+
+def test_chunked_admission_rejects_prompt_larger_than_pool(setup):
+    """A prompt that cannot fit the whole page pool can never activate; it
+    must be refused loudly at admission instead of livelocking the chunk
+    scheduler in per-slot allocation failures."""
+    cfg, params = setup
+    eng = PagedEngine(cfg, params, PagedEngineConfig(
+        prompt_len=64, cache_len=128, page_size=8, num_pages=6,
+        max_active=4, chunk_size=8))
+    big = Request(rid=0, arrival_slot=0,
+                  tokens=np.arange(64, dtype=np.int32), max_new_tokens=2)
+    eng.submit([big])
+    with pytest.raises(ValueError, match="pool holds"):
+        eng.step_slot_chunked(0, n_steps=2)
+    assert eng.pending and eng.pending[0] is big  # raise before popping
+
+
+# ----------------------------------------------------- token-backlog queue
+def test_engine_token_backlog_tracks_pending_and_cursors(setup):
+    cfg, params = setup
+    eng = _dense(cfg, params, chunk_size=4, chunk_budget=4)
+    reqs = [Request(rid=i, arrival_slot=0,
+                    tokens=np.arange(12, dtype=np.int32), max_new_tokens=2)
+            for i in range(6)]
+    eng.submit(copy.deepcopy(reqs))
+    assert eng.token_backlog() == 6 * 12
+    eng.step_slot_chunked(0, n_steps=1)
+    # 4 rows admitted; one 4-token chunk shipped (budget): backlog dropped
+    # by exactly the tokens written, queued prompts still count in full
+    assert eng.token_backlog() == 6 * 12 - 4
+    eng.step_slot_chunked(1, n_steps=1)
+    assert eng.token_backlog() == 6 * 12 - 8
+
+
+def test_token_backlog_policy_virtual_queue_discipline():
+    """Z advances as max(Z + tok - budget, 0) on observe; a loaded queue
+    prices admission down (monotone: larger Z => chosen rate no higher)."""
+    pol = TokenBacklogAware(rates=tuple(float(f) for f in range(1, 9)),
+                            V=50.0, tokens_per_request=16.0, token_budget=32.0)
+    carry = pol.init()
+    carry = pol.observe(carry, 100.0)
+    assert float(carry.value) == pytest.approx(68.0)
+    carry = pol.observe(carry, 10.0)
+    assert float(carry.value) == pytest.approx(46.0)
+    f_loaded, _ = pol.act(carry, jnp.float32(5.0))
+    f_empty, _ = pol.act(pol.init(), jnp.float32(5.0))
+    assert float(f_loaded) <= float(f_empty)
+    carry = pol.init()
+    for _ in range(10):
+        carry = pol.observe(carry, 0.0)
+    assert float(carry.value) == 0.0    # never negative
+
+
+def test_scheduler_token_aware_table_path_matches_policy_act():
+    """The scheduler's shared jitted table dispatch must equal the policy's
+    own act() for every observed (backlog, token_backlog) pair."""
+    pol = TokenBacklogAware(rates=tuple(float(f) for f in range(1, 9)),
+                            V=40.0, tokens_per_request=8.0, token_budget=16.0)
+    sch = PolicyScheduler(policy=pol, capacity=64)
+    carry = pol.init()
+    for q, tok in [(0, 0.0), (3, 40.0), (12, 120.0), (2, 0.0), (30, 300.0)]:
+        carry = pol.observe(carry, tok)
+        want, _ = pol.act(carry, jnp.float32(q))
+        got = sch.control(q, token_backlog=tok)
+        assert got == float(want), (q, tok)
+
+
+def test_serve_threads_token_backlog_observation(setup):
+    """End to end: a chunked serve loop under TokenAwareScheduler must feed
+    the engine's token backlog into the virtual queue (it advances past 0
+    under a long-prompt flood) and still account for every request."""
+    cfg, params = setup
+    eng = Engine(cfg, params, EngineConfig(batch_slots=4, prompt_len=32,
+                                           cache_len=64, chunk_size=4,
+                                           chunk_budget=8))
+    sch = TokenAwareScheduler(rates=tuple(float(f) for f in range(1, 7)),
+                              V=20.0, tokens_per_request=32.0,
+                              token_budget=8.0, capacity=64)
+    src = RequestSource(vocab_size=cfg.vocab_size, prompt_len=32,
+                        min_prompt_len=24, raw_rate=6, max_new_tokens=3,
+                        seed=5)
+    tr = serve(eng, sch, src, horizon=12, steps_per_slot=2, chunked=True)
+    assert float(sch._carry.value) > 0.0     # the token queue saw pressure
+    assert int(tr["dispatches"].max()) <= 1  # one dispatch per slot, still
+    assert int(tr["syncs"].max()) == 0
+    assert int(tr["served"].sum()) == len(eng.finished)
