@@ -69,7 +69,7 @@ def main():
 
     pairs = PAIRS if args.pair == "all" else {args.pair: PAIRS[args.pair]}
     with open(args.out, "a") as f:
-        for pid, entries in pairs.items():
+        for _pid, entries in pairs.items():
             for tag, kw in entries:
                 try:
                     row = run_case(tag=tag, **kw)

@@ -53,7 +53,7 @@ def main():
     appeared = identified = processed = 0
     backlog_hist, rate_hist = [], []
 
-    for t in range(HORIZON):
+    for _t in range(HORIZON):
         # Algorithm 1 via the unified Policy API: backlog in, rate out
         f_star, carry = policy.act(carry, q.backlog)
         f = float(f_star)

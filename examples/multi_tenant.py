@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.control import distributed_action, multi_tenant_action
-from repro.core.queueing import bounded_queue_step, QueueState
+from repro.core.queueing import QueueState, bounded_queue_step
 from repro.core.utility import Utility
 
 RATES = jnp.arange(1.0, 11.0)
@@ -43,7 +43,7 @@ def multi_tenant():
         return bounded_queue_step(q, mu, f, capacity=64.0), f
 
     rates = []
-    for t in range(800):
+    for _ in range(800):
         rng, k = jax.random.split(rng)
         q, f = slot(q, k)
         rates.append(f)

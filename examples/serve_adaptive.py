@@ -37,13 +37,13 @@ def ascii_plot(series: dict, height=12, width=60):
         line = ""
         for x in range(width):
             ch = " "
-            for mark, (_, s) in zip("AXm", rows):
+            for mark, (_, s) in zip("AXm", rows, strict=False):
                 if s[x] == h:
                     ch = mark
             line += ch
         print("|" + line)
     print("+" + "-" * width)
-    for mark, (name, _) in zip("AXm", rows):
+    for mark, (name, _) in zip("AXm", rows, strict=False):
         print(f"  {mark} = {name}")
 
 

@@ -18,13 +18,17 @@ from repro.control.policy import (
     drift_plus_penalty_action,
 )
 from repro.control.rollout import closed_loop, rollout
+from repro.control.router import ROUTER_KINDS, FleetRouter, ReplicaLoad
 
 __all__ = [
     "DriftPlusPenalty",
+    "FleetRouter",
     "LatencyAware",
     "LyapunovController",
     "MemoryAware",
     "Policy",
+    "ROUTER_KINDS",
+    "ReplicaLoad",
     "Static",
     "TokenBacklogAware",
     "VirtualQueue",

@@ -1,0 +1,147 @@
+"""Join-the-shortest-drift routing over a fleet of engine replicas.
+
+One control plane, many queues. The paper's Algorithm 1 stabilizes a single
+queue by choosing a sampling rate; a replica fleet adds a second per-request
+decision — *which* queue the admitted request joins. Both decisions are
+priced through the one ``drift_plus_penalty_action`` in
+``repro.control.policy`` (the repo's single Algorithm-1 implementation):
+
+  * the per-slot sampling rate stays with ``PolicyScheduler`` (the fleet
+    just aggregates its observations — total backlog, total token backlog,
+    worst-replica occupancy),
+  * the route target is the argmax of the same functional over the replica
+    set:  i* = argmax_i { V * S_i - 1 * D_i(t) },
+    where S_i is a static per-replica preference (capacity share, so bigger
+    replicas win when the fleet is idle) and D_i(t) is the replica's
+    *drift load* — the composite virtual queue the router maintains from
+    the engine signals the repo already exposes:
+
+        D_i = (queued + active requests)
+            + token_price * token_backlog_i        (pending prompt tokens)
+            + occupancy_price * occupancy_hwm_i    (paged page-pool pressure)
+
+    Joining the queue whose composite backlog is smallest is exactly the
+    drift-greedy choice: each admission adds its load where the quadratic
+    Lyapunov drift sum_i D_i^2 grows least (join-the-shortest-queue is the
+    V=0 special case). This is the frame-dispatch rule of "Towards Timely
+    Video Analytics Services at the Network Edge" transplanted onto engine
+    replicas.
+
+Routing is deterministic: ``drift_plus_penalty_action`` breaks ties toward
+the lowest replica index, so a fleet driven by a fixed trace is exactly
+reproducible — the property the differential harness leans on.
+
+``round-robin`` and ``least-loaded`` are the classical baselines;
+``least-loaded`` is routed through the same argmax with V=0 and the raw
+request count as the load (drift routing with the virtual queues switched
+off), ``round-robin`` never looks at load at all.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.control.policy import drift_plus_penalty_action
+
+ROUTER_KINDS = ("drift", "round-robin", "least-loaded")
+
+
+@jax.jit
+def _route_action(loads, prefs, V):
+    """One module-level jitted route decision (Algorithm 1 over replicas).
+
+    Keyed on the fleet size only, so every router instance over an
+    N-replica fleet shares a single compile — the route must stay off the
+    trace-per-request path (an eager argmax costs ~ms per call on CPU)."""
+    rates = jnp.arange(loads.shape[0], dtype=jnp.float32)
+    idx, _ = drift_plus_penalty_action(jnp.float32(1.0), rates, prefs,
+                                       loads, V)
+    return idx
+
+
+@dataclasses.dataclass
+class ReplicaLoad:
+    """One replica's routing observation (host-side snapshot)."""
+
+    backlog: float = 0.0         # queued + active requests
+    token_backlog: float = 0.0   # pending prompt tokens (chunked tails incl.)
+    occupancy: float = 0.0       # paged pool high-water fill (0 for dense)
+
+
+@dataclasses.dataclass
+class FleetRouter:
+    """Deterministic replica selection for ``ReplicaFleet.submit``.
+
+    ``route`` picks one replica for one request given per-replica loads; the
+    fleet calls it request by request, charging each routed request onto its
+    target's load snapshot (``charge``) so a burst spreads instead of
+    piling onto the momentarily-shortest queue.
+    """
+
+    kind: str = "drift"
+    V: float = 1.0                 # preference weight (drift routing only)
+    token_price: float = 1.0 / 32.0  # drift load per pending prompt token
+    occupancy_price: float = 8.0   # drift load per unit of pool occupancy
+    request_cost: float = 1.0      # drift load one routed request adds
+
+    def __post_init__(self):
+        if self.kind not in ROUTER_KINDS:
+            raise ValueError(f"router kind {self.kind!r} not in {ROUTER_KINDS}")
+        self._rr = 0
+        self.routed: list[int] = []  # decision log (tests/starvation checks)
+
+    # ------------------------------------------------------------- loads
+    def drift_load(self, load: ReplicaLoad) -> float:
+        """Collapse a replica's virtual queues into one drift price.
+
+        ``least-loaded`` reads the raw request count only (the classical
+        baseline); ``drift`` adds the token and occupancy virtual queues.
+        """
+        if self.kind == "least-loaded":
+            return load.backlog
+        return (load.backlog
+                + self.token_price * load.token_backlog
+                + self.occupancy_price * load.occupancy)
+
+    def charge(self, loads: np.ndarray, i: int, prompt_tokens: int) -> None:
+        """Account a just-routed request on its target's load snapshot."""
+        loads[i] += self.request_cost
+        if self.kind == "drift":
+            loads[i] += self.token_price * prompt_tokens
+
+    # ------------------------------------------------------------- route
+    def route(self, loads: np.ndarray, routable: Sequence[bool],
+              prefs: np.ndarray) -> int:
+        """Pick the target replica for one request.
+
+        ``loads`` are drift loads (``drift_load`` per replica, updated by
+        ``charge`` as a batch routes), ``routable`` masks failed/draining
+        replicas, ``prefs`` are static capacity shares in [0, 1].
+        """
+        routable = np.asarray(routable, bool)
+        if not routable.any():
+            raise RuntimeError("no routable replica in the fleet")
+        if self.kind == "round-robin":
+            n = len(routable)
+            for _ in range(n):
+                i = self._rr % n
+                self._rr += 1
+                if routable[i]:
+                    self.routed.append(i)
+                    return i
+        # drift / least-loaded: the route target is an Algorithm-1 argmax
+        # over the replica set — i* = argmax_i { V * S_i - D_i } — with
+        # unroutable replicas priced out of the action set.
+        q = np.where(routable, np.asarray(loads, np.float32), np.float32(1e30))
+        if self.kind == "least-loaded":
+            v, s = 0.0, np.zeros(len(q), np.float32)
+        else:
+            v, s = self.V, np.asarray(prefs, np.float32)
+        i = int(_route_action(jnp.asarray(q), jnp.asarray(s),
+                              jnp.float32(v)))
+        self.routed.append(i)
+        return i

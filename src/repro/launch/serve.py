@@ -10,7 +10,12 @@ rate; ``--policy memory-aware`` prices KV page-pool occupancy (pairs with
 block tables, ``--page-size``/``--num-pages``/``--max-active`` geometry)
 instead of dense per-slot cache rows. ``--legacy-loop`` switches the dense
 engine off the fused (1 prefill + 1 decode dispatch per slot) path for
-before/after comparison.
+before/after comparison. ``--replicas N`` serves from a ``ReplicaFleet`` of
+N equal engines (one compile, shared jit cache) with requests routed by
+``--router`` — ``drift`` joins the shortest drift-plus-penalty queue
+(request backlog + pending prompt tokens + paged occupancy, priced through
+the one Algorithm-1 argmax), ``round-robin``/``least-loaded`` are the
+classical baselines.
 """
 from __future__ import annotations
 
@@ -20,13 +25,13 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.control import ROUTER_KINDS, FleetRouter, LatencyAware
 from repro.models import init_params
-from repro.control import LatencyAware
 from repro.runtime import (AdaptiveScheduler, Engine, EngineConfig,
                            MemoryAwareScheduler, PagedEngine,
-                           PagedEngineConfig, PolicyScheduler, RequestSource,
-                           StaticScheduler, TokenAwareScheduler,
-                           latency_stats, serve)
+                           PagedEngineConfig, PolicyScheduler, ReplicaFleet,
+                           RequestSource, StaticScheduler,
+                           TokenAwareScheduler, latency_stats, serve)
 
 
 def main():
@@ -69,6 +74,12 @@ def main():
                          "[min, prompt-len] (exercises bucketed prefill)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="stop token for on-device EOS detection")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve from a ReplicaFleet of N equal engines "
+                         "(1 = plain single engine)")
+    ap.add_argument("--router", choices=list(ROUTER_KINDS), default="drift",
+                    help="fleet request routing: drift = join the shortest "
+                         "drift-plus-penalty queue")
     ap.add_argument("--rate", type=float, default=5.0, help="static policy rate")
     ap.add_argument("--V", type=float, default=20.0)
     ap.add_argument("--raw-rate", type=int, default=5)
@@ -89,19 +100,30 @@ def main():
         ap.error("--policy memory-aware prices page-pool occupancy; "
                  "it requires --paged (the dense engine reports none)")
 
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+    if args.replicas > 1 and args.legacy_loop:
+        ap.error("--legacy-loop is a single-engine comparison path; "
+                 "the fleet steps replicas through the fused protocols")
+
     cfg = get_config(args.arch, smoke=args.smoke)
     params = init_params(jax.random.PRNGKey(0), cfg)
     if args.paged:
-        engine = PagedEngine(cfg, params, PagedEngineConfig(
+        mk_engine = lambda: PagedEngine(cfg, params, PagedEngineConfig(
             prompt_len=args.prompt_len, cache_len=args.cache_len,
             page_size=args.page_size, num_pages=args.num_pages,
             max_active=args.max_active, eos_id=args.eos_id,
             chunk_size=args.chunk_size, chunk_budget=args.chunk_budget))
     else:
-        engine = Engine(cfg, params, EngineConfig(
+        mk_engine = lambda: Engine(cfg, params, EngineConfig(
             batch_slots=args.slots, prompt_len=args.prompt_len,
             cache_len=args.cache_len, eos_id=args.eos_id,
             chunk_size=args.chunk_size, chunk_budget=args.chunk_budget))
+    if args.replicas > 1:
+        engine = ReplicaFleet.build(mk_engine, args.replicas,
+                                    router=FleetRouter(kind=args.router))
+    else:
+        engine = mk_engine()
     rates = tuple(float(f) for f in range(1, args.raw_rate + 1))
     if args.policy == "adaptive":
         sched = AdaptiveScheduler(rates=rates, V=args.V, capacity=args.capacity)
@@ -132,13 +154,19 @@ def main():
           f"mean_rate={float(np.mean(sched.rate_history)):.2f} "
           f"dispatches_per_slot={float(tr['dispatches'].mean()):.2f} "
           f"blocking_syncs_per_slot={float(tr['syncs'].mean()):.2f}")
+    if args.replicas > 1:
+        per = [len(e.finished) for e in engine.replicas]
+        print(f"fleet: replicas={args.replicas} router={args.router} "
+              f"served_per_replica={per} requeues={engine.requeues}")
     if args.paged:
-        st = engine.allocator.stats()
+        engines = engine.replicas if args.replicas > 1 else [engine]
+        st = [e.allocator.stats() for e in engines]
         print(f"paged: peak_occupancy={float(tr['occupancy'].max()):.2f} "
-              f"peak_pages={st.peak_used_pages}/{st.num_pages} "
-              f"peak_active={engine.peak_active} "
-              f"alloc_failures={engine.alloc_failures} "
-              f"preemptions={engine.preemptions}")
+              f"peak_pages={max(s.peak_used_pages for s in st)}"
+              f"/{st[0].num_pages} "
+              f"peak_active={max(e.peak_active for e in engines)} "
+              f"alloc_failures={sum(e.alloc_failures for e in engines)} "
+              f"preemptions={sum(e.preemptions for e in engines)}")
     print("latency:", latency_stats(engine))
 
 

@@ -87,7 +87,7 @@ def sanitize_spec(spec: P, shape: tuple, mesh) -> P:
     on a 16-way model axis). Falls back to replication for that dim."""
     parts = list(spec) + [None] * (len(shape) - len(spec))
     out = []
-    for dim, ax in zip(shape, parts):
+    for dim, ax in zip(shape, parts, strict=False):
         if ax is None:
             out.append(None)
             continue
@@ -125,7 +125,7 @@ def zero1_specs(pspecs: Any, abstract_params: Any, mesh) -> Any:
             return spec
         parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
         best, best_dim = -1, -1
-        for i, (p, d) in enumerate(zip(parts, leaf.shape)):
+        for i, (p, d) in enumerate(zip(parts, leaf.shape, strict=False)):
             if p is None and d % data == 0 and d > best:
                 best, best_dim = d, i
         if best_dim >= 0 and best >= data:

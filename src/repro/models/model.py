@@ -348,7 +348,7 @@ def paged_splice_prompt(pools, caches, page_idx):
 
     return [
         jax.vmap(lambda pl, c: A.paged_splice_prompt(pl, c, page_idx))(pool, cache)
-        for pool, cache in zip(pools, caches)
+        for pool, cache in zip(pools, caches, strict=True)
     ]
 
 

@@ -202,7 +202,7 @@ def forward_hidden(
     causal = role != "encoder"
     aux_acc = {"lb_loss": 0.0, "z_loss": 0.0, "drop_frac": 0.0}
     n_moe = 0
-    for seg, params in zip(segs, stack):
+    for seg, params in zip(segs, stack, strict=True):
         window = _window_for(seg.kind, cfg, shape_window)
 
         def body(carry, p, kind=seg.kind, window=window):
@@ -293,7 +293,7 @@ def prefill_hidden(stack, h, cfg: ModelConfig, *, cache_len, enc_out=None,
     """Full-prompt pass building decode caches. Returns (h, caches)."""
     segs = plan_segments(cfg, "decoder")
     caches = []
-    for seg, params in zip(segs, stack):
+    for seg, params in zip(segs, stack, strict=True):
         window = _window_for(seg.kind, cfg, shape_window)
 
         def body(hh, p, kind=seg.kind, window=window):
@@ -385,7 +385,7 @@ def chunk_hidden(stack, h, caches, pos0, valid, reset, cfg: ModelConfig, *,
     ``attn_chunk`` writing K/V at per-row offsets. Returns (h, caches)."""
     segs = plan_segments(cfg, "decoder")
     new_caches = []
-    for seg, params, cache in zip(segs, stack, caches):
+    for seg, params, cache in zip(segs, stack, caches, strict=True):
         if seg.kind != "attn":
             raise ValueError(f"chunked prefill is not supported for {seg.kind!r} blocks")
         window = _window_for(seg.kind, cfg, shape_window)
@@ -410,7 +410,7 @@ def chunk_hidden_paged(stack, h, pools, block_table, pos0, valid,
     the whole stack, like ``decode_hidden_paged``)."""
     segs = plan_segments(cfg, "decoder")
     new_pools = []
-    for seg, params, pool in zip(segs, stack, pools):
+    for seg, params, pool in zip(segs, stack, pools, strict=True):
         if seg.kind != "attn":
             raise ValueError(f"chunked prefill is not supported for {seg.kind!r} blocks")
 
@@ -469,7 +469,7 @@ def decode_hidden_paged(stack, h, pools, block_table, pos, cfg: ModelConfig):
     """
     segs = plan_segments(cfg, "decoder")
     new_pools = []
-    for seg, params, pool in zip(segs, stack, pools):
+    for seg, params, pool in zip(segs, stack, pools, strict=True):
         assert seg.kind in ("attn", "attn_moe"), seg.kind
 
         def body(hh, pp):
@@ -490,7 +490,7 @@ def decode_hidden(stack, h, caches, pos, cfg: ModelConfig, *, shape_window=None)
     """One-token pass. h: (B, D). Returns (h, new_caches)."""
     segs = plan_segments(cfg, "decoder")
     new_caches = []
-    for seg, params, cache in zip(segs, stack, caches):
+    for seg, params, cache in zip(segs, stack, caches, strict=True):
         window = _window_for(seg.kind, cfg, shape_window)
 
         def body(hh, pc, kind=seg.kind, window=window):

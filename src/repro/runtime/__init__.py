@@ -4,6 +4,7 @@ from repro.runtime.engine import (
     PagedEngine,
     PagedEngineConfig,
 )
+from repro.runtime.fleet import ReplicaFleet
 from repro.runtime.request import Request, RequestSource
 from repro.runtime.scheduler import (
     AdaptiveScheduler,
@@ -19,6 +20,7 @@ __all__ = [
     "EngineConfig",
     "PagedEngine",
     "PagedEngineConfig",
+    "ReplicaFleet",
     "Request",
     "RequestSource",
     "AdaptiveScheduler",

@@ -660,7 +660,7 @@ class Engine:
             budgets[:k] = [r.max_new_tokens for r in reqs]
             self.sync = _sync_admit(self.sync, logits, jnp.asarray(slot_idx),
                                     jnp.asarray(budgets), sig=self._sig)
-            for req, slot in zip(reqs, slots):
+            for req, slot in zip(reqs, slots, strict=True):
                 req.start_slot = now
                 req.generated = None  # filled from the device ring at retire
                 self.active[slot] = req
@@ -669,7 +669,7 @@ class Engine:
             return k
         self.blocking_syncs += 1
         first = np.asarray(jnp.argmax(logits[:k], axis=-1))
-        for j, (req, slot) in enumerate(zip(reqs, slots)):
+        for j, (req, slot) in enumerate(zip(reqs, slots, strict=True)):
             req.start_slot = now
             req.generated = [int(first[j])]
             self.active[slot] = req
@@ -1209,7 +1209,7 @@ class PagedEngine(Engine):
         toks = np.zeros((R, bucket), np.int32)
         lens = np.full(R, bucket, np.int32)
         page_idx = np.full((R, npp), self.ecfg.num_pages, np.int32)  # pad: drop
-        for j, (row, req, pages, L) in enumerate(take):
+        for j, (_row, req, pages, L) in enumerate(take):
             toks[j] = self._bucket(req.tokens, req, bucket)
             lens[j] = L
             pg = pages[:npp]
@@ -1223,7 +1223,7 @@ class PagedEngine(Engine):
         if sync:
             rows_arr = np.full(R, R, np.int32)
             budgets = np.zeros(R, np.int32)
-            for j, (row, req, pages, L) in enumerate(take):
+            for j, (row, req, _pages, _L) in enumerate(take):
                 rows_arr[j] = row
                 budgets[j] = req.max_new_tokens
             self.sync = _sync_admit(self.sync, logits, jnp.asarray(rows_arr),
@@ -1493,7 +1493,7 @@ class PagedEngine(Engine):
                 if req is not None and row not in self._cursors:
                     self.pos[row] += n_steps   # decode rows (host mirror)
             if plan is not None:
-                for row, cur, take, fin in plan["plan"]:
+                for row, _cur, take, fin in plan["plan"]:
                     # chunk writes, plus the same-slot decode scan for rows
                     # the chunk activated (over-covers if done at activation
                     # — the documented <= n_steps trade)

@@ -11,6 +11,11 @@ benchmarking. Returns a trace for analysis/plots — the serving-system
 analogue of the paper's Fig. 2, but with a *real* model in the loop instead
 of a simulated service.
 
+``engine`` may equally be a ``repro.runtime.fleet.ReplicaFleet`` — the
+fleet presents this exact engine surface (aggregated observations, routed
+``submit``, per-protocol ``step_slot*``), so one serve loop drives N
+replicas behind one Policy (DESIGN.md §9).
+
 ``sync_free=True`` selects the zero-blocking-sync protocol (DESIGN.md §7):
 the scheduler's decision pipelines through ``control_async`` (one-slot-
 lagged control) and the engine's ``step_slot_sync`` dispatches every slot

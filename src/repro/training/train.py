@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.model import init_params, loss_fn
-from repro.training.optimizer import AdamW, AdamState
+from repro.training.optimizer import AdamState, AdamW
 
 
 def make_train_step(cfg: ModelConfig, opt: AdamW, microbatch: int = 1) -> Callable:

@@ -40,7 +40,7 @@ def test_flash_backward_matches_dense_autodiff(kwargs):
 
     g1 = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
     g2 = jax.grad(g, argnums=(0, 1, 2))(q, k, v)
-    for a, b, name in zip(g1, g2, "qkv"):
+    for a, b, name in zip(g1, g2, "qkv", strict=True):
         np.testing.assert_allclose(
             np.asarray(a), np.asarray(b), atol=5e-5, rtol=5e-5, err_msg=f"d{name}"
         )

@@ -1,0 +1,101 @@
+"""The benchmark-regression CI gate (`benchmarks/run.py --check-against`).
+
+A perf harness that only fails on exceptions rots silently: a refactor can
+halve a speedup while every bench still "runs clean". The gate compares a
+run's machine-portable metrics (within-run speedup/scaling ratios plus
+dispatch/sync accounting) against checked-in BENCH_*.json baselines and exits
+nonzero past a relative tolerance. These tests prove the gate actually
+fires — including through the real CLI with a doctored baseline — because
+a gate that cannot fail is indistinguishable from no gate.
+"""
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)
+
+from benchmarks.run import _derived_metrics, _metric_direction, check_against
+
+
+def _row(name, derived):
+    return {"name": name, "us_per_call": 1.0, "derived": derived}
+
+
+def _baseline(tmp_path, rows, fname="baseline.json"):
+    path = tmp_path / fname
+    path.write_text(json.dumps(rows))
+    return str(path)
+
+
+def test_derived_metric_parsing():
+    m = _derived_metrics("a_tps=12.5;speedup=1.52x;same_tokens=True;junk")
+    assert m == {"a_tps": 12.5, "speedup": 1.52}
+    assert _derived_metrics(None) == {}
+    assert _metric_direction("speedup") == "higher"
+    assert _metric_direction("scaling_4v1") == "higher"
+    assert _metric_direction("fused_disp_per_slot") == "lower"
+    assert _metric_direction("sync_free_syncs_per_slot") == "lower"
+    assert _metric_direction("same_tokens") is None
+    # absolutes are machine-bound: gating them would compare hardware
+    assert _metric_direction("chunked_tps") is None
+    assert _metric_direction("fused_rps") is None
+    assert _metric_direction("p99_latency_s") is None
+
+
+def test_gate_passes_within_tolerance(tmp_path):
+    rows = [_row("b", "speedup=1.80x;disp_per_slot=1.10")]
+    base = _baseline(tmp_path, [_row("b", "speedup=2.00x;disp_per_slot=1.00")])
+    assert check_against(rows, [base], tolerance=0.15) == []
+
+
+def test_gate_fires_on_inflated_throughput_baseline(tmp_path):
+    """The doctored-baseline case: a baseline claiming more throughput than
+    the run achieves must produce a violation."""
+    rows = [_row("b", "speedup=1.00x;x_tps=100.0")]
+    base = _baseline(tmp_path, [_row("b", "speedup=2.00x;x_tps=900.0")])
+    out = check_against(rows, [base], tolerance=0.15)
+    # the ratio regression fires; the absolute tps delta is NOT gated
+    assert len(out) == 1 and out[0].startswith("REGRESSION:b.speedup")
+    # generous tolerance swallows it
+    assert check_against(rows, [base], tolerance=0.60) == []
+
+
+def test_gate_fires_on_dispatch_regression(tmp_path):
+    rows = [_row("b", "disp_per_slot=2.00")]
+    base = _baseline(tmp_path, [_row("b", "disp_per_slot=1.00")])
+    out = check_against(rows, [base], tolerance=0.15)
+    assert out and "disp_per_slot" in out[0]
+
+
+def test_gate_fires_on_vanished_metric_and_ignores_absent_bench(tmp_path):
+    """An ERROR row keeps its name but loses its metrics — that must fire.
+    A baseline bench that was not part of this run's subset must not."""
+    rows = [_row("b", "ERROR:RuntimeError:boom")]
+    base = _baseline(tmp_path, [_row("b", "speedup=1.50x"),
+                                _row("not_run_here", "speedup=5.00x")])
+    out = check_against(rows, [base], tolerance=0.15)
+    assert len(out) == 1 and "metric missing" in out[0]
+
+
+def test_gate_merges_multiple_baselines(tmp_path):
+    rows = [_row("a", "speedup=1.0x"), _row("b", "speedup=1.0x")]
+    b1 = _baseline(tmp_path, [_row("a", "speedup=1.0x")], "b1.json")
+    b2 = _baseline(tmp_path, [_row("b", "speedup=9.9x")], "b2.json")
+    out = check_against(rows, [b1, b2], tolerance=0.15)
+    assert len(out) == 1 and out[0].startswith("REGRESSION:b.speedup")
+
+
+def test_cli_exits_nonzero_on_doctored_baseline(tmp_path):
+    """End to end through `python -m benchmarks.run`: a doctored baseline
+    must flip the exit code of an otherwise-clean run."""
+    doctored = _baseline(tmp_path, [_row("roofline_table", "fake_speedup=1e9")])
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"), JAX_PLATFORMS="cpu")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "roofline_table",
+         "--check-against", doctored],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=300)
+    assert proc.returncode != 0, proc.stdout + proc.stderr
+    assert "REGRESSION:roofline_table.fake_speedup" in proc.stdout

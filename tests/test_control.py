@@ -209,7 +209,8 @@ def test_batched_admission_bit_identical(setup, k):
         eng_seq._admit_one(eng_seq.pending.pop(0), slot, 0)
     assert eng_seq.prefill_dispatches == k
 
-    for a, b in zip(jax.tree.leaves(eng_batch.state), jax.tree.leaves(eng_seq.state)):
+    for a, b in zip(jax.tree.leaves(eng_batch.state),
+                    jax.tree.leaves(eng_seq.state), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     toks_b = [r.generated for r in eng_batch.active if r is not None]
     toks_s = [r.generated for r in eng_seq.active if r is not None]
@@ -233,7 +234,8 @@ def test_fused_decode_matches_sequential_greedy(setup):
         toks, state = eng._decode(eng.params, state, toks, jax.random.PRNGKey(2))
         seq.append(toks)
     np.testing.assert_array_equal(np.asarray(fused_toks), np.asarray(jnp.stack(seq)))
-    for a, b in zip(jax.tree.leaves(fused_state), jax.tree.leaves(state)):
+    for a, b in zip(jax.tree.leaves(fused_state), jax.tree.leaves(state),
+                    strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 

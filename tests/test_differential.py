@@ -19,6 +19,12 @@ mixes, preemption pressure) drives every engine x serving-mode combination —
 This promotes the ad-hoc equivalence matrix that grew in
 tests/test_sync_free.py into one parametrized property suite; new serving
 modes join by adding a MODES entry.
+
+The replica-fleet configurations ({1, 2, 4} replicas x {dense, paged})
+assert the same contract one level up: under a deterministic router the
+fleet's *merged* greedy streams, retirement sets, and served-count
+conservation must be bit-identical to a single reference engine serving
+the same trace.
 """
 import copy
 
@@ -29,12 +35,14 @@ import pytest
 from hypcompat import given, settings, strategies as st
 
 from repro.configs import get_config
+from repro.control import FleetRouter
 from repro.models import init_params
 from repro.runtime import (
     Engine,
     EngineConfig,
     PagedEngine,
     PagedEngineConfig,
+    ReplicaFleet,
 )
 from repro.runtime.request import Request
 
@@ -216,6 +224,43 @@ def test_differential_fuzz(seed, chunk_size, chunk_budget, n_steps):
         assert streams == ref_streams, (kind, seed)
         assert retired == ref_retired
         assert served == finished == len(reqs)
+
+
+@pytest.mark.parametrize("kind", ["dense", "paged"])
+@pytest.mark.parametrize("n_replicas", [1, 2, 4])
+def test_differential_fleet(kind, n_replicas):
+    """A deterministically-routed fleet is indistinguishable from one
+    engine: merged greedy streams, retirement sets, and served-count
+    conservation match the single-engine reference for every replica
+    count."""
+    cfg, params = _setup()
+    reqs, schedule = make_workload(seed=17, n_reqs=12)
+    ref_eng = _mk_engine("dense", cfg, params)
+    ref_streams, ref_retired, _ = drive(ref_eng, "fused", reqs, schedule)
+    fleet = ReplicaFleet.build(lambda: _mk_engine(kind, cfg, params),
+                               n_replicas, router=FleetRouter(kind="drift"))
+    streams, retired, (served, finished) = drive(fleet, "sync", reqs,
+                                                 schedule)
+    assert streams == ref_streams, (kind, n_replicas)
+    assert retired == ref_retired, (kind, n_replicas)
+    assert served == finished == len(reqs), (kind, n_replicas)
+
+
+@pytest.mark.parametrize("router_kind", ["round-robin", "least-loaded"])
+def test_differential_fleet_router_kinds(router_kind):
+    """The equivalence cannot depend on the routing rule — any
+    deterministic router yields the reference streams (chunked fleet)."""
+    cfg, params = _setup()
+    reqs, schedule = make_workload(seed=19, n_reqs=10)
+    ref_eng = _mk_engine("dense", cfg, params)
+    ref_streams, ref_retired, _ = drive(ref_eng, "fused", reqs, schedule)
+    fleet = ReplicaFleet.build(
+        lambda: _mk_engine("dense", cfg, params, chunk_size=4), 2,
+        router=FleetRouter(kind=router_kind))
+    streams, retired, (served, finished) = drive(fleet, "chunked", reqs,
+                                                 schedule)
+    assert streams == ref_streams and retired == ref_retired
+    assert served == finished == len(reqs)
 
 
 def test_chunked_dispatch_budget_and_no_hol_stall():

@@ -1,0 +1,323 @@
+"""Replica-fleet hardening: failure, drain, routing, and compile sharing.
+
+The differential harness (tests/test_differential.py) proves a healthy
+fleet is bit-identical to a single engine; this file covers the paths where
+the fleet is NOT healthy — replica death mid-prefill and mid-decode,
+graceful drain, double-drain, router starvation — plus the compile-sharing
+property that makes an N-replica fleet cost one trace.
+"""
+import copy
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.control import FleetRouter
+from repro.models import init_params
+from repro.runtime import (
+    Engine,
+    EngineConfig,
+    PagedEngine,
+    PagedEngineConfig,
+    ReplicaFleet,
+)
+from repro.runtime import engine as engine_mod
+from repro.runtime.request import Request
+
+KEY = jax.random.PRNGKey(0)
+_CACHE = {}
+
+
+def _setup():
+    if "m" not in _CACHE:
+        cfg = get_config("granite-3-2b", smoke=True)
+        _CACHE["m"] = (cfg, init_params(KEY, cfg))
+    return _CACHE["m"]
+
+
+def _mk_dense(cfg, params, **kw):
+    return Engine(cfg, params, EngineConfig(
+        batch_slots=4, prompt_len=16, cache_len=64, **kw))
+
+
+def _mk_paged(cfg, params, **kw):
+    return PagedEngine(cfg, params, PagedEngineConfig(
+        prompt_len=16, cache_len=64, page_size=8, num_pages=24,
+        max_active=4, **kw))
+
+
+def _workload(seed, n_reqs=10, prompt_hi=16, max_new_hi=8):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, arrival_slot=0,
+                    tokens=rng.integers(0, 256, int(rng.integers(1, prompt_hi + 1)),
+                                        dtype=np.int32),
+                    max_new_tokens=int(rng.integers(1, max_new_hi + 1)))
+            for i in range(n_reqs)]
+
+
+def _reference_streams(cfg, params, reqs):
+    eng = _mk_dense(cfg, params)
+    eng.submit([copy.deepcopy(r) for r in reqs])
+    t = 0
+    while len(eng.finished) < len(reqs) and t < 200:
+        eng.step_slot(t, n_steps=2)
+        t += 1
+    assert len(eng.finished) == len(reqs)
+    return {r.rid: tuple(r.generated) for r in eng.finished}
+
+
+def _run_to_completion(fleet, reqs, mode="sync", start=0, max_slots=300):
+    step = {"sync": fleet.step_slot_sync,
+            "chunked": fleet.step_slot_chunked}[mode]
+    t = start
+    while len(fleet.finished) < len(reqs) and t < max_slots:
+        step(t, n_steps=2)
+        t += 1
+    drained = fleet.drain()["served"]
+    return drained
+
+
+# ----------------------------------------------------------------- failure
+def test_failure_mid_decode_requeues_to_survivors():
+    """Kill a replica while its rows are decoding: every request it held
+    (active or queued) must finish on the survivors with the same greedy
+    tokens, exactly once, and conservation must hold fleet-wide."""
+    cfg, params = _setup()
+    reqs = _workload(seed=1, n_reqs=12, max_new_hi=10)
+    ref = _reference_streams(cfg, params, reqs)
+
+    fleet = ReplicaFleet.build(lambda: _mk_dense(cfg, params), 3,
+                               router=FleetRouter())
+    fleet.submit([copy.deepcopy(r) for r in reqs])
+    for t in range(2):
+        fleet.step_slot_sync(t, n_steps=2)
+    victim = fleet.replicas[0]
+    held = [r.rid for r in victim.active if r is not None] + \
+           [r.rid for r in victim.pending]
+    assert held, "the victim must hold in-flight work for the test to bite"
+    requeued = fleet.fail_replica(0)
+    assert sorted(r.rid for r in requeued) == sorted(held)
+    assert not fleet.alive[0] and not fleet.routable[0]
+
+    drained = _run_to_completion(fleet, reqs, start=2)
+    streams = {r.rid: tuple(r.generated) for r in fleet.finished}
+    assert streams == ref
+    assert len(fleet.finished) == len(reqs)            # nothing double-served
+    assert sum(fleet.served_history) + drained == len(reqs)
+    assert not victim.pending and all(r is None for r in victim.active)
+
+
+def test_failure_mid_prefill_no_page_leak():
+    """Kill a paged replica while prompts are mid-chunked-prefill: its
+    allocator must end empty (every page back on the free list, ownership
+    invariant intact) and the requeued prompts must restart cleanly on the
+    survivors with identical streams."""
+    cfg, params = _setup()
+    reqs = _workload(seed=2, n_reqs=8, prompt_hi=16, max_new_hi=6)
+    ref = _reference_streams(cfg, params, reqs)
+
+    fleet = ReplicaFleet.build(
+        lambda: _mk_paged(cfg, params, chunk_size=8), 2,
+        router=FleetRouter())
+    fleet.submit([copy.deepcopy(r) for r in reqs])
+    fleet.step_slot_chunked(0, n_steps=1)   # admissions stage cursors
+    victim = next((i for i, e in enumerate(fleet.replicas) if e._cursors),
+                  None)
+    assert victim is not None, "a replica must be mid-prefill"
+    fleet.fail_replica(victim)
+    dead = fleet.replicas[victim]
+    assert dead.allocator.used_pages == 0   # no page leak
+    dead.allocator.check()                  # ownership invariant intact
+    assert not dead._cursors and dead._pending_read is None
+
+    drained = _run_to_completion(fleet, reqs, mode="chunked", start=1)
+    streams = {r.rid: tuple(r.generated) for r in fleet.finished}
+    assert streams == ref
+    assert sum(fleet.served_history) + drained == len(reqs)
+
+
+def test_failure_with_all_survivors_draining_loses_nothing():
+    """Kill a replica while every survivor is draining: the requeue must
+    fall back to the live set (a draining replica absorbing work beats
+    dropping it) — no request may vanish."""
+    cfg, params = _setup()
+    reqs = _workload(seed=10, n_reqs=10, max_new_hi=8)
+    ref = _reference_streams(cfg, params, reqs)
+    fleet = ReplicaFleet.build(lambda: _mk_dense(cfg, params), 2,
+                               router=FleetRouter())
+    fleet.submit([copy.deepcopy(r) for r in reqs])
+    fleet.step_slot_sync(0, n_steps=2)
+    fleet.drain_replica(1)            # the only survivor is now draining
+    fleet.fail_replica(0)             # must still requeue, not raise/drop
+    assert len(fleet.pending) + sum(r is not None for r in fleet.active) \
+        + len(fleet.finished) == len(reqs)
+    drained = _run_to_completion(fleet, reqs, start=1)
+    streams = {r.rid: tuple(r.generated) for r in fleet.finished}
+    assert streams == ref
+    assert sum(fleet.served_history) + drained == len(reqs)
+
+
+def test_drain_last_routable_replica_keeps_queue():
+    """drain_replica on the only routable replica must not lose its queued
+    work — with nowhere else to go, the work stays on the live set."""
+    cfg, params = _setup()
+    reqs = _workload(seed=11, n_reqs=12, max_new_hi=6)
+    fleet = ReplicaFleet.build(lambda: _mk_dense(cfg, params), 2,
+                               router=FleetRouter())
+    fleet.fail_replica(0)
+    fleet.submit([copy.deepcopy(r) for r in reqs])
+    fleet.drain_replica(1)
+    assert len(fleet.pending) + sum(r is not None for r in fleet.active) \
+        + len(fleet.finished) == len(reqs)
+    drained = _run_to_completion(fleet, reqs, start=0)
+    assert len(fleet.finished) == len(reqs)
+    assert sum(fleet.served_history) + drained == len(reqs)
+
+
+def test_cannot_fail_last_replica():
+    cfg, params = _setup()
+    fleet = ReplicaFleet.build(lambda: _mk_dense(cfg, params), 2)
+    fleet.fail_replica(1)
+    assert fleet.fail_replica(1) == []      # idempotent on a dead replica
+    with pytest.raises(RuntimeError):
+        fleet.fail_replica(0)
+
+
+# ------------------------------------------------------------------- drain
+def test_double_drain_is_noop():
+    """Drain of a drained fleet: zero served, no state disturbed."""
+    cfg, params = _setup()
+    reqs = _workload(seed=3, n_reqs=6)
+    fleet = ReplicaFleet.build(lambda: _mk_dense(cfg, params), 2)
+    fleet.submit([copy.deepcopy(r) for r in reqs])
+    drained = _run_to_completion(fleet, reqs)
+    assert sum(fleet.served_history) + drained == len(reqs)
+    assert fleet.drain() == {"served": 0}
+    assert fleet.drain() == {"served": 0}
+    assert len(fleet.finished) == len(reqs)
+
+
+def test_drain_replica_moves_queue_and_keeps_decoding():
+    """Graceful drain: queued work moves to the rest of the fleet, rows
+    already decoding on the drained replica finish there, and no new work
+    routes to it until resume_replica."""
+    cfg, params = _setup()
+    reqs = _workload(seed=4, n_reqs=16, max_new_hi=10)
+    ref = _reference_streams(cfg, params, reqs)
+    fleet = ReplicaFleet.build(lambda: _mk_dense(cfg, params), 2,
+                               router=FleetRouter())
+    fleet.submit([copy.deepcopy(r) for r in reqs])
+    fleet.step_slot_sync(0, n_steps=2)
+    out = fleet.drain_replica(0)
+    victim = fleet.replicas[0]
+    in_flight = [r.rid for r in victim.active if r is not None]
+    assert not victim.pending and out["moved"] >= 0
+    # new arrivals must all land on replica 1 while 0 is draining
+    extra = _workload(seed=5, n_reqs=4)
+    for r in extra:
+        r.rid += 100
+    fleet.submit([copy.deepcopy(r) for r in extra])
+    assert victim.queue_len() == 0
+    drained = _run_to_completion(fleet, reqs + extra, start=1)
+    assert sum(fleet.served_history) + drained == len(reqs) + len(extra)
+    # the drained replica finished its own in-flight rows
+    assert {r.rid for r in victim.finished} >= set(in_flight)
+    streams = {r.rid: tuple(r.generated) for r in fleet.finished
+               if r.rid < 100}
+    assert streams == ref
+    fleet.resume_replica(0)
+    assert fleet.routable[0]
+
+
+# ----------------------------------------------------------------- routing
+@pytest.mark.parametrize("kind", ["drift", "round-robin", "least-loaded"])
+def test_no_replica_starves_under_sustained_burst(kind):
+    """Sustained burst pressure: every replica must serve work — the router
+    may not leave any replica permanently idle."""
+    cfg, params = _setup()
+    fleet = ReplicaFleet.build(lambda: _mk_dense(cfg, params), 4,
+                               router=FleetRouter(kind=kind))
+    rng = np.random.default_rng(6)
+    rid = 0
+    for t in range(8):
+        burst = []
+        for _ in range(6):
+            burst.append(Request(
+                rid=rid, arrival_slot=t,
+                tokens=rng.integers(0, 256, 8, dtype=np.int32),
+                max_new_tokens=4))
+            rid += 1
+        fleet.submit(burst)
+        fleet.step_slot_sync(t, n_steps=2)
+    t = 8
+    while len(fleet.finished) < rid and t < 200:
+        fleet.step_slot_sync(t, n_steps=2)
+        t += 1
+    fleet.drain()
+    assert len(fleet.finished) == rid
+    per_replica = [len(e.finished) for e in fleet.replicas]
+    assert all(n > 0 for n in per_replica), (kind, per_replica)
+
+
+def test_drift_router_prefers_shorter_queue():
+    """With one replica pre-loaded, the drift router must send the next
+    burst to the empty one."""
+    cfg, params = _setup()
+    fleet = ReplicaFleet.build(lambda: _mk_dense(cfg, params), 2,
+                               router=FleetRouter())
+    first = _workload(seed=7, n_reqs=6)
+    fleet.submit([copy.deepcopy(r) for r in first])   # spreads 3/3
+    loaded = max(range(2), key=lambda i: fleet.replicas[i].queue_len()
+                 + sum(r is not None for r in fleet.replicas[i].active))
+    nxt = copy.deepcopy(first[0])
+    nxt.rid = 99
+    fleet.submit([nxt])
+    assert fleet.router.routed[-1] == 1 - loaded or \
+        fleet.replicas[0].queue_len() == fleet.replicas[1].queue_len()
+
+
+def test_router_rejects_unroutable_fleet():
+    from repro.control.router import FleetRouter as FR
+    r = FR()
+    with pytest.raises(RuntimeError):
+        r.route(np.zeros(2, np.float32), [False, False],
+                np.ones(2, np.float32))
+    with pytest.raises(ValueError):
+        FR(kind="random")
+
+
+# ----------------------------------------------------- compiles and mixing
+def test_fleet_shares_compiles_across_replicas():
+    """Equal-geometry replicas share the module-level jit cache: growing
+    the fleet after one warm replica must not re-trace."""
+    cfg, params = _setup()
+    reqs = _workload(seed=8, n_reqs=4)
+    solo = ReplicaFleet.build(lambda: _mk_dense(cfg, params), 1)
+    solo.submit([copy.deepcopy(r) for r in reqs])
+    _run_to_completion(solo, reqs)
+    warm = engine_mod.trace_count()
+    fleet = ReplicaFleet.build(lambda: _mk_dense(cfg, params), 4)
+    fleet.submit([copy.deepcopy(r) for r in reqs])
+    _run_to_completion(fleet, reqs)
+    assert engine_mod.trace_count() == warm
+
+
+def test_mixed_mode_fleet():
+    """modes= pins a protocol per replica: a sync replica and a chunked
+    replica serve one workload with reference-identical merged streams."""
+    cfg, params = _setup()
+    reqs = _workload(seed=9, n_reqs=8)
+    ref = _reference_streams(cfg, params, reqs)
+    fleet = ReplicaFleet(
+        [_mk_dense(cfg, params, chunk_size=4), _mk_dense(cfg, params)],
+        router=FleetRouter(), modes=["chunked", "sync"])
+    fleet.submit([copy.deepcopy(r) for r in reqs])
+    drained = _run_to_completion(fleet, reqs)
+    streams = {r.rid: tuple(r.generated) for r in fleet.finished}
+    assert streams == ref
+    assert sum(fleet.served_history) + drained == len(reqs)
+    with pytest.raises(ValueError):
+        ReplicaFleet([_mk_dense(cfg, params)], modes=["warp"])
+    with pytest.raises(ValueError):
+        ReplicaFleet([], router=FleetRouter())

@@ -40,6 +40,15 @@ def test_serve_launcher_paged_memory_aware():
     assert "paged:" in p.stdout and "alloc_failures=0" in p.stdout
 
 
+def test_serve_launcher_fleet():
+    f = _run(["repro.launch.serve", "--arch", "granite-3-2b", "--smoke",
+              "--replicas", "2", "--router", "drift", "--sync-free",
+              "--horizon", "10", "--raw-rate", "5"])
+    assert f.returncode == 0, f.stdout + f.stderr
+    assert "fleet: replicas=2 router=drift" in f.stdout
+    assert "latency:" in f.stdout
+
+
 def test_examples_quickstart():
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, list_archs
-from repro.models import forward, init_params, loss_fn, prefill, decode_step
+from repro.models import decode_step, forward, init_params, loss_fn, prefill
 from repro.models.frontends import audio_frame_embeddings, vision_patch_embeddings
 from repro.training import AdamW, make_train_step
 

@@ -37,7 +37,7 @@ def test_batch_blocked_prefill_equivalent():
     lg1, st1 = prefill(params, {"tokens": toks}, cfg, cache_len=32)
     lg2, st2 = prefill(params, {"tokens": toks}, cfg, cache_len=32, batch_block=2)
     np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2), atol=1e-5)
-    for a, b in zip(jax.tree.leaves(st1), jax.tree.leaves(st2)):
+    for a, b in zip(jax.tree.leaves(st1), jax.tree.leaves(st2), strict=True):
         np.testing.assert_allclose(
             np.asarray(a, np.float32), np.asarray(b, np.float32), atol=1e-5
         )

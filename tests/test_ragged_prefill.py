@@ -48,7 +48,7 @@ def _padded_to(prompts, bucket):
 
 
 def _tree_equal(a, b):
-    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b), strict=True):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 

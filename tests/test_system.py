@@ -16,7 +16,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, list_archs
 from repro.launch import shardings as SH
-from repro.launch.shapes import SHAPES, input_specs, cache_len_for
+from repro.launch.shapes import SHAPES, cache_len_for, input_specs
 from repro.models import model as M
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -37,9 +37,9 @@ def test_param_specs_cover_tree_and_divide():
         flat_p = jax.tree.leaves(aparams)
         flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
         assert len(flat_p) == len(flat_s)
-        for p, s in zip(flat_p, flat_s):
+        for p, s in zip(flat_p, flat_s, strict=True):
             assert len(s) <= len(p.shape), (arch, p.shape, s)
-            for dim, ax in zip(p.shape, tuple(s) + (None,) * 8):
+            for dim, ax in zip(p.shape, tuple(s) + (None,) * 8, strict=False):
                 if ax == "model":
                     assert dim % 16 == 0, (arch, p.shape, s)
 

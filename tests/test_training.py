@@ -70,7 +70,8 @@ def test_checkpoint_roundtrip(tmp_path):
     template = {"params": params, "opt": opt_state}
     restored, step = ckpt.restore(str(tmp_path), template)
     assert step == 7
-    for a, b in zip(jax.tree.leaves(restored["params"]), jax.tree.leaves(params)):
+    for a, b in zip(jax.tree.leaves(restored["params"]), jax.tree.leaves(params),
+                    strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
