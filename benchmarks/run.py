@@ -551,6 +551,111 @@ def bench_fleet_scaling(quick=False):
     return us, derived
 
 
+def bench_prefix_sharing(quick=False):
+    """Prefix-sharing paged KV cache (DESIGN.md §10) vs the exclusive-page
+    baseline at EQUAL pool bytes, on a multi-tenant trace where every
+    tenant's requests open with that tenant's long system prompt.
+
+    The pool (20 pages x 8 rows) holds ~2.5 private copies of a 47-token
+    prompt, so the exclusive allocator serializes admissions; the sharing
+    allocator pins each tenant's prefix pages once (refcounted, COW) and
+    charges later admissions only their novel suffix pages, so more
+    requests decode concurrently from the same bytes. Reported:
+
+      * prefix_capacity_scaling — peak concurrent requests, sharing/on
+        over sharing/off. Deterministic (admission is alloc-gated), so the
+        CI regression gate compares it across runs.
+      * prefix_tps_speedup — end-to-end tokens/s ratio at equal pool
+        bytes (both sides timed on this machine, best of reps).
+      * ttft_p50/p99 per side, in control slots (arrival -> first token):
+        sharing admits earlier, so TTFT collapses with the queueing delay.
+
+    Equivalence: greedy streams must be bit-identical across the two
+    allocator modes (same_tokens=True) — TOKEN_MISMATCH fails the smoke
+    gate. us_per_call = sharing-on us per control slot.
+    """
+    import copy
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.runtime import PagedEngine, PagedEngineConfig
+    from repro.runtime.request import Request
+
+    cfg = get_config("granite-3-2b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    per_tenant = 5 if quick else 8
+    reps = 2 if quick else 3
+
+    def trace():
+        """2 tenants x per_tenant requests: 40-token tenant prefix +
+        7-token unique suffix, one request per tenant per slot."""
+        rng = np.random.default_rng(11)
+        prefixes = [rng.integers(1, 250, 40, dtype=np.int32)
+                    for _ in range(2)]
+        reqs, rid = [], 0
+        for j in range(per_tenant):
+            for pre in prefixes:
+                reqs.append(Request(
+                    rid=rid, arrival_slot=j,
+                    tokens=np.concatenate(
+                        [pre, rng.integers(1, 250, 7, dtype=np.int32)]),
+                    max_new_tokens=4))
+                rid += 1
+        return reqs
+
+    def run(share):
+        eng = PagedEngine(cfg, params, PagedEngineConfig(
+            prompt_len=48, cache_len=64, page_size=8, num_pages=20,
+            max_active=8, prefix_sharing=share))
+        reqs = trace()
+        by_slot = {}
+        for r in reqs:
+            by_slot.setdefault(r.arrival_slot, []).append(copy.deepcopy(r))
+        t, t0 = 0, time.perf_counter()
+        while len(eng.finished) < len(reqs) and t < 300:
+            eng.submit(by_slot.get(t, []))
+            eng.step_slot(t, n_steps=2)
+            t += 1
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.generated) for r in eng.finished)
+        ttft = np.asarray([r.first_token_slot - r.arrival_slot
+                           for r in eng.finished], np.float64)
+        eng.allocator.check()  # leak/ownership invariant rides the bench
+        return {
+            "tps": toks / dt, "dt": dt, "slots": t, "peak": eng.peak_active,
+            "hits": eng.prefix_hits,
+            "ttft_p50": float(np.percentile(ttft, 50)),
+            "ttft_p99": float(np.percentile(ttft, 99)),
+            "streams": {r.rid: tuple(r.generated) for r in eng.finished},
+        }
+
+    run(True), run(False)                      # warm the jits
+    best = {}
+    for share in (False, True):
+        for _ in range(reps):
+            r = run(share)
+            if share not in best or r["tps"] > best[share]["tps"]:
+                best[share] = r
+    on, off = best[True], best[False]
+    same = on["streams"] == off["streams"]
+    us = on["dt"] / on["slots"] * 1e6
+    derived = (
+        f"prefix_capacity_scaling={on['peak'] / off['peak']:.2f}x"
+        f";prefix_tps_speedup={on['tps'] / off['tps']:.2f}x"
+        f";sharing_tps={on['tps']:.1f};exclusive_tps={off['tps']:.1f}"
+        f";peak_active_sharing={on['peak']};peak_active_exclusive={off['peak']}"
+        f";hit_tokens={on['hits']}"
+        f";ttft_p50_sharing={on['ttft_p50']:.1f}"
+        f";ttft_p99_sharing={on['ttft_p99']:.1f}"
+        f";ttft_p50_exclusive={off['ttft_p50']:.1f}"
+        f";ttft_p99_exclusive={off['ttft_p99']:.1f}"
+        f";pool_pages_each=20;same_tokens={same}"
+    )
+    if not same:
+        derived = "TOKEN_MISMATCH;" + derived
+    return us, derived
+
+
 def bench_flash_attention(quick=False):
     """XLA flash path per-call time + kernel/oracle agreement."""
     from repro.kernels import ops
@@ -613,7 +718,8 @@ def bench_roofline_table():
 # the sync-free serve loop, and a continuous-batching slot exceeding its
 # one-dispatch budget.
 SMOKE_BENCHES = ("controller_overhead", "paged_vs_dense_decode",
-                 "serve_sync_free", "continuous_batching", "fleet_scaling")
+                 "serve_sync_free", "continuous_batching", "fleet_scaling",
+                 "prefix_sharing")
 
 # ------------------------------------------------- benchmark-regression gate
 # `--check-against baseline.json[,baseline2.json]` compares this run's rows
@@ -725,6 +831,7 @@ def main() -> None:
         ("serve_sync_free", lambda: bench_serve_sync_free(args.quick)),
         ("continuous_batching", lambda: bench_continuous_batching(args.quick)),
         ("fleet_scaling", lambda: bench_fleet_scaling(args.quick)),
+        ("prefix_sharing", lambda: bench_prefix_sharing(args.quick)),
         ("flash_attention_xla", lambda: bench_flash_attention(args.quick)),
         ("ssd_scan_xla", lambda: bench_ssd_scan(args.quick)),
         ("roofline_table", bench_roofline_table),

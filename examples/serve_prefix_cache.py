@@ -1,0 +1,95 @@
+"""Prefix-sharing paged KV cache on a multi-tenant trace, live.
+
+Two tenants keep sending requests that open with their own long system
+prompt. At EQUAL pool bytes the exclusive-page allocator serializes
+admissions (every request pays private pages for the whole prompt); with
+``prefix_sharing=True`` each tenant's prefix is prefilled once, pinned in
+the radix index, and every later request maps it for free — refcounted
+pages, copy-on-write forks, only the novel suffix is charged (DESIGN.md
+§10). Greedy tokens are bit-identical either way; what changes is how
+many requests the same bytes can serve at once, and how long a request
+waits for its first token:
+
+    exclusive pages : peak 2 concurrent, TTFT p50 ~3.5 slots
+    prefix sharing  : peak 4 concurrent, TTFT p50 0,  560 hit tokens
+
+Run: PYTHONPATH=src python examples/serve_prefix_cache.py [--arch granite-3-2b]
+"""
+import argparse
+import copy
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.runtime import PagedEngine, PagedEngineConfig
+from repro.runtime.request import Request
+from repro.runtime.server import latency_stats
+
+
+def multi_tenant_trace(n_tenants=2, per_tenant=8, prefix_len=40,
+                       suffix_len=7):
+    """One request per tenant per slot: 40-token tenant system prompt +
+    a short unique user suffix."""
+    rng = np.random.default_rng(11)
+    prefixes = [rng.integers(1, 250, prefix_len, dtype=np.int32)
+                for _ in range(n_tenants)]
+    reqs, rid = [], 0
+    for slot in range(per_tenant):
+        for pre in prefixes:
+            reqs.append(Request(
+                rid=rid, arrival_slot=slot,
+                tokens=np.concatenate(
+                    [pre, rng.integers(1, 250, suffix_len, dtype=np.int32)]),
+                max_new_tokens=4))
+            rid += 1
+    return reqs
+
+
+def drive(cfg, params, reqs, sharing):
+    eng = PagedEngine(cfg, params, PagedEngineConfig(
+        prompt_len=48, cache_len=64, page_size=8, num_pages=20,
+        max_active=8, prefix_sharing=sharing))
+    by_slot = {}
+    for r in reqs:
+        by_slot.setdefault(r.arrival_slot, []).append(copy.deepcopy(r))
+    t = 0
+    while len(eng.finished) < len(reqs) and t < 300:
+        eng.submit(by_slot.get(t, []))
+        eng.step_slot(t, n_steps=2)
+        t += 1
+    eng.allocator.check()   # ownership invariant holds on every exit path
+    label = "prefix sharing " if sharing else "exclusive pages"
+    stats = latency_stats(eng)
+    print(f"  {label}: slots={t} peak_concurrent={eng.peak_active} "
+          f"ttft_p50={stats['ttft_p50']:.1f} ttft_p99={stats['ttft_p99']:.1f}")
+    if sharing:
+        print(f"                   hit_tokens={eng.prefix_hits} "
+              f"indexed_pages={len(eng._prefix)} "
+              f"evictable={eng.allocator.evictable_pages()} "
+              f"committed_occupancy={eng.occupancy():.2f}")
+    return {r.rid: tuple(r.generated) for r in eng.finished}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    args = ap.parse_args()
+    cfg = get_config(args.arch, smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    reqs = multi_tenant_trace()
+    print(f"2 tenants x 8 requests, 40-token shared prefixes, "
+          f"20-page pool (equal bytes both runs):")
+    off = drive(cfg, params, reqs, sharing=False)
+    on = drive(cfg, params, reqs, sharing=True)
+    assert on == off, "greedy streams must be bit-identical"
+    print("  greedy streams bit-identical: True")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,13 @@
 """Paged KV-cache subsystem: block-table page allocation for serving.
 
-``PageAllocator`` (host-side page ownership) pairs with the device-side
-``PagedKVPool`` (repro.models.attention) and the paged decode-attention
-kernel (repro.kernels.paged_attention). See DESIGN.md §6.
+``PageAllocator`` (host-side refcounted page ownership, copy-on-write
+forks) pairs with the device-side ``PagedKVPool`` (repro.models.attention)
+and the paged decode-attention kernel (repro.kernels.paged_attention);
+``PrefixIndex`` (a radix tree over token-id page blocks) maps shared prompt
+prefixes onto resident pages. See DESIGN.md §6 and §10.
 """
-from repro.cache.paged import AllocStats, PageAllocator, pages_for
+from repro.cache.paged import AllocStats, PageAllocator, PageEntry, pages_for
+from repro.cache.prefix import PrefixHit, PrefixIndex
 
-__all__ = ["AllocStats", "PageAllocator", "pages_for"]
+__all__ = ["AllocStats", "PageAllocator", "PageEntry", "PrefixHit",
+           "PrefixIndex", "pages_for"]

@@ -194,6 +194,16 @@ class MemoryAware(_TablePolicy):
     keeps time-average occupancy <= occupancy_budget (Neely), which holds
     the pool below hard capacity on bursty traces where ``Static`` overflows
     into allocation failures.
+
+    With prefix sharing (DESIGN.md §10) the engine reports *committed*
+    occupancy — pool fill net of pin-only cached prefix pages, which
+    eviction reclaims on demand — so Z prices the pool's true marginal
+    cost: an admission whose prompt is mostly resident commits only its
+    novel pages, and the virtual queue stops throttling admissions the
+    cache has already paid for. ``pages_per_request`` stays the *expected
+    novel* page demand; with a hot prefix cache the effective value falls,
+    which is exactly the capacity headroom the prefix_sharing benchmark
+    measures.
     """
 
     rates: tuple[float, ...]

@@ -39,7 +39,7 @@ off), ``round-robin`` never looks at load at all.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -87,6 +87,13 @@ class FleetRouter:
     token_price: float = 1.0 / 32.0  # drift load per pending prompt token
     occupancy_price: float = 8.0   # drift load per unit of pool occupancy
     request_cost: float = 1.0      # drift load one routed request adds
+    # prefix affinity (drift routing only): a replica already holding m of
+    # the request's prompt tokens in its prefix cache serves it m tokens
+    # cheaper — the discount enters the same argmax as a load reduction, so
+    # shared prefixes stay hot on one replica instead of re-prefilling (and
+    # re-caching) on whichever queue is momentarily shortest. Priced like
+    # token_price: a cached token cancels a backlogged one.
+    affinity_price: float = 1.0 / 32.0
 
     def __post_init__(self):
         if self.kind not in ROUTER_KINDS:
@@ -107,20 +114,32 @@ class FleetRouter:
                 + self.token_price * load.token_backlog
                 + self.occupancy_price * load.occupancy)
 
-    def charge(self, loads: np.ndarray, i: int, prompt_tokens: int) -> None:
-        """Account a just-routed request on its target's load snapshot."""
+    def charge(self, loads: np.ndarray, i: int, prompt_tokens: int,
+               hit_tokens: int = 0) -> None:
+        """Account a just-routed request on its target's load snapshot.
+
+        ``hit_tokens`` (the routed replica's prefix-cache coverage of this
+        prompt) discounts the token charge: cached tokens are never
+        re-prefilled, so they add no real load to the queue."""
         loads[i] += self.request_cost
         if self.kind == "drift":
-            loads[i] += self.token_price * prompt_tokens
+            loads[i] += self.token_price * max(prompt_tokens - hit_tokens, 0)
 
     # ------------------------------------------------------------- route
     def route(self, loads: np.ndarray, routable: Sequence[bool],
-              prefs: np.ndarray) -> int:
+              prefs: np.ndarray,
+              affinity: Optional[np.ndarray] = None) -> int:
         """Pick the target replica for one request.
 
         ``loads`` are drift loads (``drift_load`` per replica, updated by
         ``charge`` as a batch routes), ``routable`` masks failed/draining
         replicas, ``prefs`` are static capacity shares in [0, 1].
+        ``affinity`` (optional, drift routing only) is the per-replica
+        prefix-cache hit in prompt tokens; it enters the argmax as a load
+        discount — i* = argmax_i { V*S_i - (D_i - affinity_price*hit_i) } —
+        so the drift trade-off between joining the shortest queue and
+        reusing resident pages is priced through the one Algorithm-1
+        functional, not a separate heuristic tier.
         """
         routable = np.asarray(routable, bool)
         if not routable.any():
@@ -136,7 +155,11 @@ class FleetRouter:
         # drift / least-loaded: the route target is an Algorithm-1 argmax
         # over the replica set — i* = argmax_i { V * S_i - D_i } — with
         # unroutable replicas priced out of the action set.
-        q = np.where(routable, np.asarray(loads, np.float32), np.float32(1e30))
+        loads = np.asarray(loads, np.float32)
+        if affinity is not None and self.kind == "drift":
+            loads = loads - self.affinity_price * np.asarray(affinity,
+                                                             np.float32)
+        q = np.where(routable, loads, np.float32(1e30))
         if self.kind == "least-loaded":
             v, s = 0.0, np.zeros(len(q), np.float32)
         else:

@@ -50,6 +50,10 @@ def main():
     ap.add_argument("--num-pages", type=int, default=64)
     ap.add_argument("--max-active", type=int, default=16,
                     help="paged: decode batch rows (concurrency bound)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="paged: radix prefix cache — admissions map shared "
+                         "prompt prefixes onto resident pages (refcounted, "
+                         "copy-on-write) and prefill only the novel suffix")
     ap.add_argument("--occupancy-budget", type=float, default=0.6,
                     help="memory-aware: target time-average pool occupancy")
     ap.add_argument("--legacy-loop", action="store_true",
@@ -96,6 +100,9 @@ def main():
         ap.error("--sync-free and --legacy-loop are mutually exclusive")
     if args.chunked and args.legacy_loop:
         ap.error("--chunked and --legacy-loop are mutually exclusive")
+    if args.prefix_sharing and not args.paged:
+        ap.error("--prefix-sharing shares pages of the paged KV pool; "
+                 "it requires --paged")
     if args.policy == "memory-aware" and not args.paged:
         ap.error("--policy memory-aware prices page-pool occupancy; "
                  "it requires --paged (the dense engine reports none)")
@@ -113,6 +120,7 @@ def main():
             prompt_len=args.prompt_len, cache_len=args.cache_len,
             page_size=args.page_size, num_pages=args.num_pages,
             max_active=args.max_active, eos_id=args.eos_id,
+            prefix_sharing=args.prefix_sharing,
             chunk_size=args.chunk_size, chunk_budget=args.chunk_budget))
     else:
         mk_engine = lambda: Engine(cfg, params, EngineConfig(
@@ -167,6 +175,11 @@ def main():
               f"peak_active={max(e.peak_active for e in engines)} "
               f"alloc_failures={sum(e.alloc_failures for e in engines)} "
               f"preemptions={sum(e.preemptions for e in engines)}")
+        if args.prefix_sharing:
+            print(f"prefix: hit_tokens={sum(e.prefix_hits for e in engines)} "
+                  f"forks={sum(e.prefix_forks for e in engines)} "
+                  f"indexed_pages={sum(len(e._prefix) for e in engines)} "
+                  f"evicted={sum(e._prefix.evicted_pages for e in engines)}")
     print("latency:", latency_stats(engine))
 
 

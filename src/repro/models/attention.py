@@ -652,6 +652,25 @@ def paged_splice_prompt(pool: PagedKVPool, cache: KVCache,
     )
 
 
+def fork_pages(pool: PagedKVPool, src_idx: jax.Array,
+               dst_idx: jax.Array) -> PagedKVPool:
+    """Copy whole pages src -> dst inside one layer's pool (COW forks).
+
+    src_idx/dst_idx: (F,) physical page ids; pad entries carry an
+    out-of-range dst (>= num_pages, dropped by the scatter) with src
+    clamped into range (the gathered rows land nowhere), so one fixed-shape
+    dispatch forks any number of pages. The copy is whole-page: rows past
+    the fork point are overwritten by the new holder's chunks and rows past
+    its pos are masked, so over-copying is free.
+    """
+    N = pool.k.shape[0]
+    src = jnp.clip(src_idx, 0, N - 1)
+    return PagedKVPool(
+        k=pool.k.at[dst_idx].set(pool.k[src], mode="drop"),
+        v=pool.v.at[dst_idx].set(pool.v[src], mode="drop"),
+    )
+
+
 def cross_attn_cache(params, enc_out: jax.Array):
     """Precompute cross-attention K/V from encoder output (B, Se, D)."""
     k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"])

@@ -352,6 +352,19 @@ def paged_splice_prompt(pools, caches, page_idx):
     ]
 
 
+def fork_pages(pools, src_idx, dst_idx):
+    """Copy-on-write page forks across every segment's pools. src_idx /
+    dst_idx: (F,) physical page ids (pad: out-of-range dst, dropped). One
+    fixed-shape gather/scatter per segment — the whole admission batch's
+    forks ride in a single dispatch."""
+    from repro.models import attention as A
+
+    return [
+        jax.vmap(lambda pl: A.fork_pages(pl, src_idx, dst_idx))(pool)
+        for pool in pools
+    ]
+
+
 def decode_state_shape(params_or_abstract, batch_spec, cfg: ModelConfig, cache_len: int):
     """eval_shape of prefill's DecodeState (dry-run serve_step inputs)."""
     return jax.eval_shape(

@@ -68,7 +68,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cache import PageAllocator
+from repro.cache import PageAllocator, PrefixIndex
+from repro.cache.paged import pages_for
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.models.transformer import (
@@ -128,6 +129,11 @@ class PagedEngineConfig(EngineConfig):
     num_pages: int = 64
     max_active: int = 8
     max_pages_per_req: int = 0    # 0 => cache_len // page_size
+    # prefix sharing (DESIGN.md §10): admission maps a prompt's shared
+    # prefix onto resident pages through a radix index; only the novel
+    # suffix allocates/prefills. Off by default — sharing-off behavior is
+    # bit-for-bit the pre-sharing engine (no pins, no refcounts > 1).
+    prefix_sharing: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -351,9 +357,14 @@ class PrefillCursor:
     req: Request
     row: int
     toks: np.ndarray          # (L,) int32 — the real (truncated) prompt
+    # tokens already resident when the row was claimed (a prefix-cache hit):
+    # the cursor starts past them, so their chunks are never dispatched —
+    # "skip the cached chunks" is just a nonzero starting offset.
+    cached: int = 0
 
     def __post_init__(self):
-        self.off = 0
+        self.off = self.cached
+        self.started = False   # start_slot stamped at the first real chunk
 
     @property
     def remaining(self) -> int:
@@ -496,6 +507,7 @@ def _splice_many(state, new, slots):
 
 
 _paged_splice = jax.jit(M.paged_splice_prompt)
+_fork_pages = jax.jit(M.fork_pages)
 
 
 def _host_take(row_toks, req: Request, age: int, n_steps: int,
@@ -614,6 +626,7 @@ class Engine:
         self.state = _splice_one(self.state, one, slot)
         self.blocking_syncs += 1
         req.start_slot = now
+        req.first_token_slot = now   # first token came from this prefill
         req.generated = [int(jnp.argmax(logits[0]))]
         self.active[slot] = req
         self.slot_age[slot] = 1  # first token came from prefill
@@ -662,6 +675,7 @@ class Engine:
                                     jnp.asarray(budgets), sig=self._sig)
             for req, slot in zip(reqs, slots, strict=True):
                 req.start_slot = now
+                req.first_token_slot = now
                 req.generated = None  # filled from the device ring at retire
                 self.active[slot] = req
                 self.slot_age[slot] = 1
@@ -671,6 +685,7 @@ class Engine:
         first = np.asarray(jnp.argmax(logits[:k], axis=-1))
         for j, (req, slot) in enumerate(zip(reqs, slots, strict=True)):
             req.start_slot = now
+            req.first_token_slot = now
             req.generated = [int(first[j])]
             self.active[slot] = req
             self.slot_age[slot] = 1  # first token came from prefill
@@ -924,13 +939,22 @@ class Engine:
                     [toks, np.full(L - len(toks), PAD_ID, np.int32)])
             self.active[row] = req
             self.slot_age[row] = 0
-            self._claim_row(row)
-            self._cursors[row] = PrefillCursor(req=req, row=row, toks=toks)
+            cached = self._claim_row(row, toks)
+            self._cursors[row] = PrefillCursor(req=req, row=row, toks=toks,
+                                               cached=cached)
             k += 1
         return k
 
-    def _claim_row(self, row: int) -> None:
-        """Engine-specific setup when a chunked admission claims a row."""
+    def _claim_row(self, row: int, toks: np.ndarray) -> int:
+        """Engine-specific setup when a chunked admission claims a row;
+        returns the prompt tokens already resident (the paged engine's
+        prefix-cache hit — the cursor starts past them)."""
+        return 0
+
+    def _on_activate(self, row: int, cur: PrefillCursor, now: int) -> None:
+        """Hook: a row's final chunk just shipped, its first generated token
+        is computed in this slot's dispatch (``_sync_activate``)."""
+        cur.req.first_token_slot = now
 
     def _chunk_reserve(self, row: int, cur: PrefillCursor, take: int,
                        fin: bool, n_steps: int) -> bool:
@@ -989,13 +1013,15 @@ class Engine:
         pre-activation dispatches can never retire it (they carry the old
         epoch or meet the cursor guard)."""
         for row, cur, take, fin in plan["plan"]:
-            if cur.off == 0:
+            if not cur.started:
+                cur.started = True   # off may start past 0 (cached prefix)
                 cur.req.start_slot = now
             cur.off += take
             if fin:
                 del self._cursors[row]
                 self._row_epoch[row] += 1
                 self.slot_age[row] = 1
+                self._on_activate(row, cur, now)
 
     def step_slot_chunked(self, now: int, n_steps: int = 1) -> dict:
         """One continuous-batching control slot: admit (host bookkeeping
@@ -1105,6 +1131,14 @@ class PagedEngine(Engine):
 
         self.pools = paged_pools_init(cfg, ecfg.num_pages, ps)
         self.allocator = PageAllocator(ecfg.num_pages, ps)
+        # prefix sharing: the radix index over resident prompt pages, plus
+        # the per-slot COW fork plan (row -> (src, dst); flushed as one
+        # device dispatch before the slot's mixed dispatch)
+        self._prefix = PrefixIndex(self.allocator) if ecfg.prefix_sharing else None
+        self._fork_plan: dict[int, tuple[int, int]] = {}
+        self.prefix_hits = 0          # prompt tokens served from the cache
+        self.prefix_forks = 0         # COW forks of partially-matched pages
+        self.fork_dispatches = 0
         self.block_tables = np.full((R, self.MP), -1, np.int32)
         self.pos = np.zeros(R, np.int32)
         self.sync = sync_state_init(R, self._gen_cap)
@@ -1131,7 +1165,76 @@ class PagedEngine(Engine):
 
     # ------------------------------------------------------------------
     def occupancy(self) -> float:
-        return self.allocator.occupancy()
+        # with prefix sharing the controller prices *committed* occupancy:
+        # pin-only cached pages are reclaimable on demand, so charging them
+        # would make MemoryAware throttle admission below the pool's true
+        # marginal cost (identical to raw occupancy with sharing off)
+        if self._prefix is None:
+            return self.allocator.occupancy()
+        return self.allocator.committed_occupancy()
+
+    def prefix_hit_tokens(self, tokens) -> int:
+        """Prompt tokens of ``tokens`` resident in this engine's prefix
+        cache — the router's affinity probe (LRU state untouched)."""
+        if self._prefix is None:
+            return 0
+        L = max(1, min(len(tokens), self.ecfg.prompt_len))
+        return min(self._prefix.peek_tokens(np.asarray(tokens[:L], np.int32)),
+                   L - 1)
+
+    # ------------------------------------------- page acquisition helpers
+    def _evict_short(self, short: int) -> bool:
+        """Reclaim ``short`` pages from the prefix index's LRU tail."""
+        return (self._prefix is not None and short > 0
+                and self._prefix.evict(short) >= short)
+
+    def _alloc_pages(self, row: int, tokens: int,
+                     shared=()) -> tuple[Optional[list], list]:
+        """Allocator alloc with eviction retry. Returns (block table or
+        None, the shared pages actually acquired) — after a deep eviction a
+        shared page may itself have been reclaimed, in which case sharing
+        is abandoned for this request (a hit is an optimization, never a
+        correctness dependency)."""
+        shared = list(shared)
+        pages = self.allocator.alloc(row, tokens, shared=shared)
+        if pages is not None or self._prefix is None:
+            return pages, shared
+        short = (pages_for(tokens, self.ecfg.page_size) - len(shared)
+                 - self.allocator.free_pages)
+        if not self._evict_short(short):
+            return None, shared
+        if any(self.allocator.refcount(p) <= 0 for p in shared):
+            shared = []
+        return self.allocator.alloc(row, tokens, shared=shared), shared
+
+    def _extend_pages(self, row: int, tokens: int) -> Optional[list]:
+        """Allocator extend with eviction retry (decode growth and chunk
+        reservations reclaim cold cached prefixes before giving up)."""
+        pages = self.allocator.extend(row, tokens)
+        if pages is None and self._prefix is not None:
+            short = (pages_for(tokens, self.ecfg.page_size)
+                     - len(self.allocator.block_table(row))
+                     - self.allocator.free_pages)
+            if self._evict_short(short):
+                pages = self.allocator.extend(row, tokens)
+        return pages
+
+    def _flush_forks(self) -> None:
+        """Dispatch every staged COW page copy in ONE fixed-shape op (pad
+        rows carry an out-of-range dst and are dropped). Runs before the
+        slot's mixed dispatch, so forked rows are resident before any chunk
+        writes or reads touch the private copy."""
+        if not self._fork_plan:
+            return
+        R, N = self.ecfg.max_active, self.ecfg.num_pages
+        src = np.zeros(R, np.int32)
+        dst = np.full(R, N, np.int32)
+        for j, (s, d) in enumerate(self._fork_plan.values()):
+            src[j], dst[j] = s, d
+        self._fork_plan.clear()
+        self.pools = _fork_pages(self.pools, jnp.asarray(src),
+                                 jnp.asarray(dst))
+        self.fork_dispatches += 1
 
     def step(self, now: int) -> dict:
         raise NotImplementedError("the paged engine has no legacy per-step path")
@@ -1147,7 +1250,8 @@ class PagedEngine(Engine):
         self._release_row(row)
 
     def _release_row(self, row: int) -> None:
-        self.allocator.free(row)
+        self.allocator.free(row)   # refcounted: shared prefix pages survive
+        self._fork_plan.pop(row, None)
         self.block_tables[row] = -1
         self.pos[row] = 0
         self.slot_age[row] = 0
@@ -1163,6 +1267,7 @@ class PagedEngine(Engine):
         self.active[row] = None
         req.generated = None
         req.start_slot = None
+        req.first_token_slot = None
         self.pending.insert(0, req)
         self.preemptions += 1
 
@@ -1193,27 +1298,44 @@ class PagedEngine(Engine):
                     f"request {req.rid}: max_new_tokens {req.max_new_tokens} "
                     f"exceeds gen_buf_len {self._gen_cap}")
             L = max(1, min(len(req.tokens), P)) if self._ragged else P
+            # prefix sharing: resident full pages cover the prompt head; cap
+            # at (L-1)//ps so the final prompt token always recomputes (its
+            # logits activate the row) and no decode write ever lands in a
+            # shared page. This path shares at page granularity only — the
+            # whole prompt prefills anyway (one bucketed dispatch), so the
+            # win here is pool capacity, not FLOPs; token-granular skipping
+            # (and COW forks) lives on the chunked path.
+            shared: list = []
+            if self._prefix is not None:
+                hit = self._prefix.lookup(np.asarray(req.tokens[:L], np.int32))
+                shared = hit.pages[: (L - 1) // ps]
             # pages are keyed by engine row, not req.rid: a row uniquely owns
             # its request while active, whereas rids are only unique per
             # RequestSource (two sources feeding one engine may collide)
-            pages = self.allocator.alloc(row, min(L + lookahead, self.MP * ps))
+            pages, shared = self._alloc_pages(
+                row, min(L + lookahead, self.MP * ps), shared=shared)
             if pages is None:
                 self.alloc_failures += 1
                 break
+            self.prefix_hits += len(shared) * ps
             self.pending.pop(0)
-            take.append((row, req, pages, L))
+            take.append((row, req, pages, L, len(shared)))
         if not take:
             return 0
-        bucket = self._pick_bucket(max(L for *_, L in take)) if self._ragged else P
+        bucket = self._pick_bucket(max(L for *_, L, _ns in take)) if self._ragged else P
         npp = bucket // ps
         toks = np.zeros((R, bucket), np.int32)
         lens = np.full(R, bucket, np.int32)
         page_idx = np.full((R, npp), self.ecfg.num_pages, np.int32)  # pad: drop
-        for j, (_row, req, pages, L) in enumerate(take):
+        for j, (_row, req, pages, L, n_shared) in enumerate(take):
             toks[j] = self._bucket(req.tokens, req, bucket)
             lens[j] = L
             pg = pages[:npp]
             page_idx[j, : len(pg)] = pg
+            # shared pages already hold these blocks' K/V (bit-identical by
+            # the purity invariant) — point them at the drop sentinel so the
+            # splice never writes into a page other requests are reading
+            page_idx[j, : n_shared] = self.ecfg.num_pages
         # cache_len == bucket: the dense prefill cache is exactly the prompt
         # rows, ready to scatter into pages (no ring wraparound).
         logits, state = self._run_prefill(
@@ -1223,7 +1345,7 @@ class PagedEngine(Engine):
         if sync:
             rows_arr = np.full(R, R, np.int32)
             budgets = np.zeros(R, np.int32)
-            for j, (row, req, _pages, _L) in enumerate(take):
+            for j, (row, req, _pages, _L, _ns) in enumerate(take):
                 rows_arr[j] = row
                 budgets[j] = req.max_new_tokens
             self.sync = _sync_admit(self.sync, logits, jnp.asarray(rows_arr),
@@ -1232,13 +1354,19 @@ class PagedEngine(Engine):
         else:
             self.blocking_syncs += 1
             first = np.asarray(jnp.argmax(logits[: len(take)], axis=-1))
-        for j, (row, req, pages, L) in enumerate(take):
+        for j, (row, req, pages, L, _ns) in enumerate(take):
             req.start_slot = now
+            req.first_token_slot = now
             req.generated = None if sync else [int(first[j])]
             self.active[row] = req
             self.block_tables[row, : len(pages)] = pages
             self.pos[row] = L
             self.slot_age[row] = 1   # first token came from prefill
+            if self._prefix is not None:
+                # register this prompt's fully-written full pages (shared
+                # ones are already indexed — insert walks past them)
+                self._prefix.insert(np.asarray(req.tokens[:L], np.int32),
+                                    pages[: L // ps])
             if sync:
                 self._row_epoch[row] += 1
         self.peak_active = max(self.peak_active, sum(r is not None for r in self.active))
@@ -1260,7 +1388,7 @@ class PagedEngine(Engine):
             if req is None or row in self._cursors:
                 continue
             need = min(int(self.pos[row]) + n_steps, self.MP * ps)
-            pages = self.allocator.extend(row, need)
+            pages = self._extend_pages(row, need)
             if pages is None:
                 self._preempt(row)
                 cleared.append(row)
@@ -1404,8 +1532,59 @@ class PagedEngine(Engine):
                 f"{self.ecfg.num_pages}")
         super()._validate_chunked(req)
 
-    def _claim_row(self, row: int) -> None:
-        self.allocator.alloc(row, 0)   # register an empty block table
+    def _claim_row(self, row: int, toks: np.ndarray) -> int:
+        """Claim a row for chunked prefill; with prefix sharing, acquire the
+        prompt's resident prefix so the cursor starts past it.
+
+        Full resident pages are shared outright (one extra refcount each).
+        When the radix walk additionally matches a *partial* block — the
+        next resident page agrees on its first ``fork_len`` tokens — that
+        page is copy-on-write forked: a private copy joins this row's table,
+        the device copy is staged for ``_flush_forks``, and only the
+        divergent tail of the block recomputes. The hit is capped at L-1
+        tokens so the final prompt token always recomputes (its logits
+        activate the row).
+        """
+        if self._prefix is None:
+            self.allocator.alloc(row, 0)   # register an empty block table
+            return 0
+        ps, L = self.ecfg.page_size, len(toks)
+        hit = self._prefix.lookup(np.asarray(toks, np.int32))
+        want = hit.pages[: (L - 1) // ps]
+        fork_len = 0
+        if hit.fork_src is not None and len(want) == len(hit.pages):
+            fork_len = max(0, min(hit.fork_len, L - 1 - len(want) * ps))
+        pages, shared = self._alloc_pages(row, len(want) * ps + fork_len,
+                                          shared=want)
+        if pages is None:
+            self.allocator.alloc(row, 0)   # cold start: empty block table
+            return 0
+        if len(shared) < len(want):
+            cached = len(shared) * ps      # deep eviction ate part of the hit
+        else:
+            cached = len(want) * ps
+            # the fork source is pin-only (refcount 1) and could have been
+            # reclaimed by this very allocation's eviction retry — fork only
+            # if its pin survives (a still-pinned page is still the node's)
+            if fork_len > 0 and self.allocator.pages[hit.fork_src].pinned:
+                self._fork_plan[row] = (hit.fork_src, pages[-1])
+                self.prefix_forks += 1
+                cached += fork_len
+        self.block_tables[row, : len(pages)] = pages
+        self.pos[row] = cached   # chunk writes resume past the resident rows
+        self.prefix_hits += cached
+        return cached
+
+    def _on_activate(self, row: int, cur: PrefillCursor, now: int) -> None:
+        super()._on_activate(row, cur, now)
+        if self._prefix is not None:
+            # every prompt row is now written — index the full pages (the
+            # forked boundary page qualifies: its pre-fork rows are
+            # bit-identical to a recompute by the purity invariant)
+            L = len(cur.toks)
+            pages = self.allocator.block_table(row)
+            self._prefix.insert(np.asarray(cur.toks, np.int32),
+                                pages[: L // self.ecfg.page_size])
 
     def _chunk_reserve(self, row: int, cur: PrefillCursor, take: int,
                        fin: bool, n_steps: int) -> bool:
@@ -1415,7 +1594,7 @@ class PagedEngine(Engine):
         decodes retire."""
         ps = self.ecfg.page_size
         need = min(cur.off + take + (n_steps if fin else 0), self.MP * ps)
-        pages = self.allocator.extend(row, need)
+        pages = self._extend_pages(row, need)
         if pages is None:
             self.alloc_failures += 1
             return False
@@ -1433,6 +1612,7 @@ class PagedEngine(Engine):
         self.active[row] = None
         req.generated = None
         req.start_slot = None
+        req.first_token_slot = None
         self.pending.insert(0, req)
         self.preemptions += 1
 
@@ -1448,6 +1628,7 @@ class PagedEngine(Engine):
         served_prev, per_step_prev = (self._consume_read(prev) if early
                                       else (0, []))
         admitted = self._admit_chunked(now)
+        self._flush_forks()   # COW copies land before this slot's chunks
         self.peak_active = max(self.peak_active,
                                sum(r is not None for r in self.active))
         plan = self._chunk_plan(n_steps)

@@ -191,9 +191,18 @@ class ReplicaFleet:
             mask = list(self.alive)
         loads = np.asarray([self.router.drift_load(self._load_of(e))
                             for e in self.replicas], np.float32)
+        # prefix affinity: per-replica resident-prefix coverage of each
+        # prompt (0 everywhere when no replica runs a prefix cache — the
+        # router then reduces to plain join-the-shortest-drift)
+        probes = [getattr(e, "prefix_hit_tokens", None) for e in self.replicas]
         for req in reqs:
-            i = self.router.route(loads, mask, self._prefs)
-            self.router.charge(loads, i, len(req.tokens))
+            aff = None
+            if any(p is not None for p in probes):
+                aff = np.asarray([p(req.tokens) if p is not None else 0
+                                  for p in probes], np.float32)
+            i = self.router.route(loads, mask, self._prefs, affinity=aff)
+            hit = int(aff[i]) if aff is not None else 0
+            self.router.charge(loads, i, len(req.tokens), hit_tokens=hit)
             self.replicas[i].submit([req])
 
     # ------------------------------------------------------------ serving
@@ -259,6 +268,7 @@ class ReplicaFleet:
             eng._release_row(row)     # paged: pages back to the pool
             req.generated = None
             req.start_slot = None
+            req.first_token_slot = None
             requeued.append(req)
         requeued.extend(eng.pending)
         eng.pending.clear()

@@ -22,6 +22,7 @@ class Request:
     # filled by the engine:
     admit_slot: Optional[int] = None
     start_slot: Optional[int] = None
+    first_token_slot: Optional[int] = None  # first generated token emitted
     finish_slot: Optional[int] = None
     generated: Optional[list] = None
     truncated: bool = False       # prompt exceeded the engine's bucket

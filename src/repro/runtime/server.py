@@ -93,14 +93,20 @@ def latency_stats(engine: Engine) -> dict:
     ``waits`` and ``totals`` filter on *different* fields (start_slot vs
     finish_slot), so they can legitimately diverge — e.g. a request retired
     through the sync-free readback after a preemption reset its start_slot —
-    and each percentile set is guarded on its own list. Also reports
-    ``admitted_but_unfinished``: requests holding an engine row or queue
-    slot at shutdown (a drain/accounting leak shows up here).
+    and each percentile set is guarded on its own list. ``ttft`` is
+    admission-to-first-token (arrival to the slot whose dispatch emitted the
+    first generated token) — the latency prefix caching attacks: a cached
+    prefix skips its prefill chunks, so the activating dispatch arrives
+    slots earlier. Also reports ``admitted_but_unfinished``: requests
+    holding an engine row or queue slot at shutdown (a drain/accounting
+    leak shows up here).
     """
     waits = [r.start_slot - r.arrival_slot for r in engine.finished
              if r.start_slot is not None]
     totals = [r.finish_slot - r.arrival_slot for r in engine.finished
               if r.finish_slot is not None]
+    ttfts = [r.first_token_slot - r.arrival_slot for r in engine.finished
+             if r.first_token_slot is not None]
     unfinished = (sum(1 for r in engine.active if r is not None)
                   + len(engine.pending))
     out = {"n": len(totals), "admitted_but_unfinished": unfinished}
@@ -110,4 +116,7 @@ def latency_stats(engine: Engine) -> dict:
     if waits:
         out["wait_p50"] = float(np.percentile(waits, 50))
         out["wait_p99"] = float(np.percentile(waits, 99))
+    if ttfts:
+        out["ttft_p50"] = float(np.percentile(ttfts, 50))
+        out["ttft_p99"] = float(np.percentile(ttfts, 99))
     return out

@@ -13,3 +13,6 @@ def pytest_configure(config):
     # (heavy hypothesis/property sweeps). Tier-1 (`pytest -x -q`) runs both.
     config.addinivalue_line(
         "markers", "slow: heavy property/fuzz sweeps (second CI lane)")
+    config.addinivalue_line(
+        "markers", "cache: paged-KV cache subsystem (allocator/prefix-index "
+                   "property suite)")

@@ -3,7 +3,8 @@
 One seeded workload generator (arrival bursts, ragged prompt lengths, EOS
 mixes, preemption pressure) drives every engine x serving-mode combination —
 
-    {dense, paged} x {legacy step, fused, sync-free, continuous-batching}
+    {dense, paged, paged+prefix-sharing}
+        x {legacy step, fused, sync-free, continuous-batching}
 
 — and asserts the repo's equivalence contract on each run:
 
@@ -84,6 +85,23 @@ def make_workload(seed: int, n_reqs: int = 10, prompt_len: int = 16,
     return reqs, schedule
 
 
+def make_shared_workload(seed: int, n_reqs: int = 10, prompt_len: int = 16,
+                         prefix_len: int = 8, shared_frac: float = 0.6,
+                         **kw):
+    """A workload where a fraction of requests open with one common prompt
+    prefix (the multi-tenant system-prompt shape prefix sharing targets);
+    the rest stay fully random, so hit and miss paths interleave."""
+    reqs, schedule = make_workload(seed, n_reqs=n_reqs,
+                                   prompt_len=prompt_len, **kw)
+    rng = np.random.default_rng(seed + 1)
+    prefix = rng.integers(0, 256, prefix_len, dtype=np.int32)
+    for r in reqs:
+        if rng.random() < shared_frac:
+            k = min(prefix_len, len(r.tokens))
+            r.tokens = np.concatenate([prefix[:k], r.tokens[k:]])
+    return reqs, schedule
+
+
 MODES = [
     ("dense", "step"),
     ("dense", "fused"),
@@ -92,6 +110,9 @@ MODES = [
     ("paged", "fused"),
     ("paged", "sync"),
     ("paged", "chunked"),
+    ("shared", "fused"),
+    ("shared", "sync"),
+    ("shared", "chunked"),
 ]
 
 
@@ -104,6 +125,7 @@ def _mk_engine(kind, cfg, params, eos_id=None, tight=False, chunk_size=0,
     return PagedEngine(cfg, params, PagedEngineConfig(
         prompt_len=16, cache_len=64, page_size=8,
         num_pages=10 if tight else 32, max_active=6, eos_id=eos_id,
+        prefix_sharing=(kind == "shared"),
         chunk_size=chunk_size, chunk_budget=chunk_budget))
 
 
@@ -226,15 +248,48 @@ def test_differential_fuzz(seed, chunk_size, chunk_budget, n_steps):
         assert served == finished == len(reqs)
 
 
-@pytest.mark.parametrize("kind", ["dense", "paged"])
+def test_differential_shared_prefix_workload():
+    """The full matrix on a workload with a common prompt prefix: the
+    sharing engines serve hits and misses interleaved and must still match
+    every sharing-off path bit for bit."""
+    cfg, params = _setup()
+    reqs, schedule = make_shared_workload(seed=23)
+    _assert_equivalent(cfg, params, reqs, schedule,
+                       chunk_kw={"chunk_size": 4})
+
+
+def test_differential_sharing_under_pool_pressure():
+    """Sharing + a pool too small for the load: preemption, prefix
+    eviction, and COW interleave; streams must match the dense reference
+    and the pool must drain to pins only."""
+    cfg, params = _setup()
+    reqs, schedule = make_shared_workload(seed=29, n_reqs=8, max_new_lo=4,
+                                          max_new_hi=10)
+    dense = _mk_engine("dense", cfg, params)
+    ref_streams, ref_retired, _ = drive(dense, "fused", reqs, schedule)
+    for mode, kw in [("sync", {}), ("chunked", {"chunk_size": 8})]:
+        eng = _mk_engine("shared", cfg, params, tight=True, **kw)
+        streams, retired, (served, finished) = drive(eng, mode, reqs,
+                                                     schedule)
+        assert streams == ref_streams and retired == ref_retired, mode
+        assert served == finished == len(reqs)
+        eng.allocator.check()
+        assert eng.allocator.used_pages == len(eng._prefix)
+
+
+@pytest.mark.parametrize("kind", ["dense", "paged", "shared"])
 @pytest.mark.parametrize("n_replicas", [1, 2, 4])
 def test_differential_fleet(kind, n_replicas):
     """A deterministically-routed fleet is indistinguishable from one
     engine: merged greedy streams, retirement sets, and served-count
     conservation match the single-engine reference for every replica
-    count."""
+    count. The "shared" kind runs prefix sharing on every replica with a
+    common-prefix workload, so prefix-affinity routing is in the loop."""
     cfg, params = _setup()
-    reqs, schedule = make_workload(seed=17, n_reqs=12)
+    if kind == "shared":
+        reqs, schedule = make_shared_workload(seed=17, n_reqs=12)
+    else:
+        reqs, schedule = make_workload(seed=17, n_reqs=12)
     ref_eng = _mk_engine("dense", cfg, params)
     ref_streams, ref_retired, _ = drive(ref_eng, "fused", reqs, schedule)
     fleet = ReplicaFleet.build(lambda: _mk_engine(kind, cfg, params),

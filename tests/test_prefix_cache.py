@@ -1,0 +1,484 @@
+"""Prefix-sharing paged KV cache: allocator refcount/COW properties, the
+radix prefix index, and engine-level sharing equivalence (DESIGN.md §10).
+
+Three layers, matching the subsystem's trust chain:
+
+  * ``PageAllocator`` ownership — refcounts equal block-table occurrences
+    plus the prefix pin, no page is freed while referenced, a failed
+    multi-page alloc rolls back atomically (the historical bug: a partial
+    alloc leaked the pages claimed before the shortfall), and random
+    acquire/share/fork/release interleavings never leak (hypcompat sweep).
+  * ``PrefixIndex`` — radix walk correctness, sub-page fork hits, LRU
+    leaf eviction, and the no-touch router probe.
+  * Engine equivalence — sharing ON must be a pure optimization: greedy
+    streams bit-identical to sharing OFF on every serving protocol, with
+    strictly less prefill work and every preemption/drain path leak-free.
+"""
+import copy
+
+import jax
+import numpy as np
+import pytest
+
+from hypcompat import given, settings, strategies as st
+
+from repro.cache import PageAllocator, PrefixIndex
+from repro.configs import get_config
+from repro.models import init_params
+from repro.runtime import PagedEngine, PagedEngineConfig
+from repro.runtime.request import Request
+from repro.runtime.server import latency_stats
+
+pytestmark = pytest.mark.cache
+
+KEY = jax.random.PRNGKey(0)
+_CACHE = {}
+
+
+def _setup():
+    if "m" not in _CACHE:
+        cfg = get_config("granite-3-2b", smoke=True)
+        _CACHE["m"] = (cfg, init_params(KEY, cfg))
+    return _CACHE["m"]
+
+
+def _mk_engine(cfg, params, *, sharing, num_pages=24, max_active=4,
+               chunk_size=8, prompt_len=32, cache_len=64, page_size=8):
+    return PagedEngine(cfg, params, PagedEngineConfig(
+        prompt_len=prompt_len, cache_len=cache_len, page_size=page_size,
+        num_pages=num_pages, max_active=max_active,
+        prefix_sharing=sharing, chunk_size=chunk_size))
+
+
+def _shared_prefix_reqs(n, prefix_len=20, suffix_len=8, seed=0,
+                        max_new=5, arrival=0):
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(1, 200, prefix_len, dtype=np.int32)
+    return [Request(rid=i, arrival_slot=arrival,
+                    tokens=np.concatenate(
+                        [prefix, rng.integers(1, 200, suffix_len,
+                                              dtype=np.int32)]),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+# ===================================================== allocator unit tests
+def test_alloc_rollback_on_exhaustion():
+    """Regression: a multi-page alloc that hits an empty free list must
+    claim NOTHING — historically the pages popped before the shortfall
+    stayed claimed with no owning table, leaking them forever."""
+    a = PageAllocator(num_pages=4, page_size=4)
+    assert a.alloc(0, 12) is not None          # 3 of 4 pages
+    free0, used0 = a.free_pages, a.used_pages
+    assert a.alloc(1, 8) is None               # needs 2, only 1 free
+    assert (a.free_pages, a.used_pages) == (free0, used0)
+    assert 1 not in a.holders()
+    a.check()
+    # and the freed pool still works end to end
+    a.free(0)
+    assert a.alloc(1, 16) is not None
+    a.check()
+
+
+def test_alloc_rollback_with_shared_pages():
+    """The rollback must also drop references taken on SHARED pages before
+    the shortfall: a hit on a resident prefix must not inflate its refcount
+    when the novel tail cannot be covered."""
+    a = PageAllocator(num_pages=4, page_size=4)
+    owner = a.alloc(0, 8)                      # pages for a 2-page prefix
+    a.alloc(1, 8)                              # consume the rest of the pool
+    rc0 = [a.refcount(p) for p in owner]
+    assert a.alloc(2, 16, shared=owner) is None   # 2 novel pages, 0 free
+    assert [a.refcount(p) for p in owner] == rc0
+    a.check()
+
+
+def test_alloc_stale_shared_page_raises_atomically():
+    """Naming a non-resident page as shared is a caller bug (ValueError),
+    and even that error path must be atomic."""
+    a = PageAllocator(num_pages=8, page_size=4)
+    owner = a.alloc(0, 8)
+    stale = a.alloc(1, 4)[0]
+    a.free(1)                                  # stale now refcount 0
+    with pytest.raises(ValueError):
+        a.alloc(2, 12, shared=[owner[0], stale])
+    assert a.refcount(owner[0]) == 1           # the pre-error incref undone
+    a.check()
+    with pytest.raises(ValueError):
+        a.alloc(3, 4, shared=[999])            # out of range
+    a.check()
+
+
+def test_shared_page_not_freed_until_last_holder():
+    a = PageAllocator(num_pages=8, page_size=4)
+    base = a.alloc(0, 8)
+    a.alloc(1, 12, shared=base)
+    a.alloc(2, 8, shared=base)
+    assert [a.refcount(p) for p in base] == [3, 3]
+    assert a.free(0) == 0                      # nothing freed: 2 holders left
+    assert a.free(1) == 1                      # only its private tail page
+    assert [a.refcount(p) for p in base] == [1, 1]
+    assert a.free(2) == 2                      # last holder frees the prefix
+    assert a.used_pages == 0
+    a.check()
+
+
+def test_fork_page_swaps_private_copy():
+    a = PageAllocator(num_pages=6, page_size=4)
+    base = a.alloc(0, 8)
+    a.alloc(1, 8, shared=base)
+    src, dst = a.fork_page(1, 1)
+    assert src == base[1] and dst not in base
+    assert a.block_table(1) == [base[0], dst]
+    assert a.refcount(src) == 1 and a.refcount(dst) == 1
+    a.check()
+    # forking with an empty free list changes nothing
+    a.alloc(2, 12)
+    assert not a._free and a.fork_page(1, 0) is None
+    a.check()
+
+
+def test_pin_unpin_and_committed_occupancy():
+    a = PageAllocator(num_pages=8, page_size=4)
+    pages = a.alloc(0, 8)
+    for p in pages:
+        a.pin(p, key=("k", p))
+    with pytest.raises(ValueError):
+        a.pin(pages[0], key=("dup",))          # one pin per page
+    assert a.free(0) == 0                      # pins keep both resident
+    assert a.evictable_pages() == 2
+    assert a.committed_occupancy() == 0.0      # all residual fill evictable
+    assert a.occupancy() == 2 / 8
+    assert a.unpin(pages[0]) is True           # pin was the last reference
+    assert a.used_pages == 1
+    a.check()
+
+
+# ============================================== allocator property sweep
+def _leases_of(a):
+    return {rid: a.block_table(rid) for rid in a.holders()}
+
+
+def _random_ops(a, idx, rng, n_ops, max_tokens):
+    """One random acquire/share/fork/release/pin/evict interleaving with
+    the ownership invariant checked after every mutation."""
+    next_rid = 0
+    for _ in range(n_ops):
+        op = rng.integers(0, 5)
+        holders = a.holders()
+        if op == 0 or not holders:            # fresh alloc
+            a.alloc(next_rid, int(rng.integers(1, max_tokens)))
+            next_rid += 1
+        elif op == 1:                          # alloc sharing a live prefix
+            donor = a.block_table(holders[rng.integers(len(holders))])
+            k = int(rng.integers(0, len(donor) + 1))
+            toks = int(rng.integers(k * a.page_size, max_tokens + 1)) \
+                if k * a.page_size <= max_tokens else k * a.page_size
+            a.alloc(next_rid, max(toks, 1), shared=donor[:k])
+            next_rid += 1
+        elif op == 2:                          # COW fork a random page
+            rid = holders[rng.integers(len(holders))]
+            table = a.block_table(rid)
+            a.fork_page(rid, int(rng.integers(len(table))))
+        elif op == 3:                          # release
+            a.free(holders[rng.integers(len(holders))])
+        else:                                  # index churn: pin then evict
+            rid = holders[rng.integers(len(holders))]
+            toks = np.asarray(
+                rng.integers(0, 50, len(a.block_table(rid)) * a.page_size),
+                np.int32)
+            idx.insert(toks, a.block_table(rid))
+            if rng.integers(0, 2):
+                idx.evict(int(rng.integers(1, 4)))
+        a.check()
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6),
+       page_size=st.sampled_from([1, 4, 8]),
+       num_pages=st.integers(min_value=4, max_value=32))
+def test_allocator_interleaving_never_leaks(seed, page_size, num_pages):
+    """Random acquire/share/fork/release/pin/evict sequences: the ownership
+    invariant holds after every operation, and releasing every holder plus
+    dropping the index returns the pool to exactly zero."""
+    rng = np.random.default_rng(seed)
+    a = PageAllocator(num_pages=num_pages, page_size=page_size)
+    idx = PrefixIndex(a)
+    _random_ops(a, idx, rng, n_ops=60, max_tokens=3 * page_size)
+    for rid in list(a.holders()):
+        a.free(rid)
+        a.check()
+    assert a.used_pages == len(idx)            # only pins remain
+    idx.drop()
+    a.check()
+    assert a.used_pages == 0 and a.free_pages == num_pages
+
+
+@pytest.mark.slow
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**9),
+       page_size=st.sampled_from([1, 2, 4, 8, 16]),
+       num_pages=st.integers(min_value=2, max_value=64),
+       n_ops=st.integers(min_value=20, max_value=200))
+def test_allocator_interleaving_never_leaks_heavy(seed, page_size,
+                                                  num_pages, n_ops):
+    """The slow-lane version of the sweep: longer op sequences over a wider
+    geometry range (CI's cache-subsystem property entry)."""
+    rng = np.random.default_rng(seed)
+    a = PageAllocator(num_pages=num_pages, page_size=page_size)
+    idx = PrefixIndex(a)
+    _random_ops(a, idx, rng, n_ops=n_ops, max_tokens=4 * page_size)
+    for rid in list(a.holders()):
+        a.free(rid)
+    idx.drop()
+    a.check()
+    assert a.used_pages == 0
+
+
+# ======================================================= prefix index unit
+def test_index_walk_and_partial_tail():
+    a = PageAllocator(num_pages=16, page_size=4)
+    toks = np.arange(12, dtype=np.int32)
+    pages = a.alloc(0, 12)
+    idx = PrefixIndex(a)
+    assert idx.insert(toks, pages) == 3
+    # full-path hit
+    hit = idx.lookup(toks)
+    assert hit.pages == pages and hit.matched == 12 and hit.fork_src is None
+    # half-path + sub-page divergence: first 6 tokens agree
+    probe = np.concatenate([toks[:6], np.asarray([99, 99], np.int32)])
+    hit = idx.lookup(probe)
+    assert hit.pages == pages[:1]
+    assert hit.fork_src == pages[1] and hit.fork_len == 2
+    assert hit.matched == 6
+    # disjoint prompt: clean miss
+    miss = idx.lookup(np.full(8, 77, np.int32))
+    assert miss.pages == [] and miss.matched == 0
+
+
+def test_index_first_writer_wins_and_no_double_pin():
+    a = PageAllocator(num_pages=16, page_size=4)
+    idx = PrefixIndex(a)
+    toks = np.arange(8, dtype=np.int32)
+    p0 = a.alloc(0, 8)
+    assert idx.insert(toks, p0) == 2
+    p1 = a.alloc(1, 8)                        # same tokens, private pages
+    assert idx.insert(toks, p1) == 0          # incumbents keep their nodes
+    assert idx.lookup(toks).pages == p0
+    assert a.refcount(p1[0]) == 1             # duplicate copy stays private
+    a.check()
+
+
+def test_index_evicts_lru_leaves_first():
+    a = PageAllocator(num_pages=16, page_size=4)
+    idx = PrefixIndex(a)
+    cold = np.asarray([1, 1, 1, 1, 2, 2, 2, 2], np.int32)
+    hot = np.asarray([1, 1, 1, 1, 3, 3, 3, 3], np.int32)
+    idx.insert(cold, a.alloc(0, 8))
+    idx.insert(hot, a.alloc(1, 8))
+    a.free(0), a.free(1)                      # index pins keep all 3 pages
+    assert a.used_pages == 3                  # shared root + two leaves
+    leaf_cold = idx.lookup(cold).pages[1]
+    idx.lookup(hot)                           # hot path now more recent
+    assert idx.evict(1) == 1                  # drops the COLD leaf
+    assert a.refcount(leaf_cold) == 0
+    assert idx.lookup(hot).matched == 8       # hot path fully intact
+    # the shared root only becomes a leaf (hence evictable) after its
+    # remaining child goes
+    assert idx.evict(10) == 2
+    assert a.used_pages == 0
+    a.check()
+
+
+def test_index_peek_does_not_touch_lru():
+    a = PageAllocator(num_pages=16, page_size=4)
+    idx = PrefixIndex(a)
+    toks = np.arange(4, dtype=np.int32)
+    idx.insert(toks, a.alloc(0, 4))
+    a.free(0)
+    page = idx.lookup(toks).pages[0]
+    stamp = a.pages[page].last_use
+    assert idx.peek_tokens(toks) == 4
+    assert a.pages[page].last_use == stamp    # probe left the clock alone
+    idx.lookup(toks)
+    assert a.pages[page].last_use > stamp
+
+
+def test_device_fork_pages_preserves_contents():
+    """The COW device op: forked pages carry bit-identical K/V; pages not
+    named in the fork batch are untouched (drop-mode padding)."""
+    from repro.models import attention as A
+
+    shape = (4, 2, 2, 4)                      # (num_pages, ps, KVH, hd)
+    k = jax.random.normal(KEY, shape)
+    v = jax.random.normal(jax.random.fold_in(KEY, 1), shape)
+    pool = A.PagedKVPool(k=k, v=v)
+    out = A.fork_pages(pool, src_idx=np.asarray([0, 0], np.int32),
+                       dst_idx=np.asarray([2, 4], np.int32))  # 4 = pad slot
+    assert np.array_equal(np.asarray(out.k[2]), np.asarray(k[0]))
+    assert np.array_equal(np.asarray(out.v[2]), np.asarray(v[0]))
+    assert np.array_equal(np.asarray(out.k[3]), np.asarray(k[3]))  # untouched
+
+
+# ==================================================== engine-level sharing
+def _drive(eng, reqs, mode="chunked", max_slots=80):
+    eng.submit([copy.deepcopy(r) for r in reqs])
+    step = {"fused": eng.step_slot, "sync": eng.step_slot_sync,
+            "chunked": eng.step_slot_chunked}[mode]
+    t = 0
+    while len(eng.finished) < len(reqs) and t < max_slots:
+        step(t, n_steps=2)
+        t += 1
+    eng.drain()
+    assert len(eng.finished) == len(reqs)
+    return {r.rid: tuple(r.generated) for r in eng.finished}
+
+
+@pytest.mark.parametrize("mode", ["fused", "sync", "chunked"])
+def test_sharing_is_bit_identical(mode):
+    """Sharing ON yields the exact greedy streams of sharing OFF on every
+    serving protocol, while actually hitting the cache."""
+    cfg, params = _setup()
+    reqs = _shared_prefix_reqs(6, seed=1)
+    ref = _drive(_mk_engine(cfg, params, sharing=False, num_pages=32),
+                 reqs, mode)
+    eng = _mk_engine(cfg, params, sharing=True, num_pages=32)
+    got = _drive(eng, reqs, mode)
+    assert got == ref
+    assert eng.prefix_hits > 0
+    eng.allocator.check()
+
+
+def test_sharing_leak_free_after_drain():
+    """Every page the engine still holds after full retirement is a prefix
+    pin; dropping the index returns the pool to zero."""
+    cfg, params = _setup()
+    eng = _mk_engine(cfg, params, sharing=True)
+    _drive(eng, _shared_prefix_reqs(6, seed=2))
+    assert all(r is None for r in eng.active)
+    assert eng.allocator.used_pages == len(eng._prefix)
+    eng._prefix.drop()
+    eng.allocator.check()
+    assert eng.allocator.used_pages == 0
+
+
+def test_sharing_survives_preemption_pressure():
+    """A pool too small for the offered load with sharing ON: preemptions
+    and prefix evictions interleave, streams still match sharing OFF, and
+    nothing leaks."""
+    cfg, params = _setup()
+    reqs = _shared_prefix_reqs(8, prefix_len=24, suffix_len=6, seed=3,
+                               max_new=8)
+    ref = _drive(_mk_engine(cfg, params, sharing=False, num_pages=9,
+                            max_active=3), reqs, max_slots=200)
+    eng = _mk_engine(cfg, params, sharing=True, num_pages=9, max_active=3)
+    got = _drive(eng, reqs, max_slots=200)
+    assert got == ref
+    assert eng.preemptions > 0                # the pressure actually bit
+    eng.allocator.check()
+    eng._prefix.drop()
+    assert eng.allocator.used_pages == 0
+
+
+def test_sharing_expands_effective_capacity():
+    """The tentpole's capacity claim, at engine scale: a pool that holds
+    only ~1.5 private copies of a long prompt serves 4 prefix-sharing
+    requests CONCURRENTLY with sharing on; off, they must serialize."""
+    cfg, params = _setup()
+    reqs = _shared_prefix_reqs(4, prefix_len=40, suffix_len=7, seed=4,
+                               max_new=4)
+    # 40+7+4 tokens -> 7 pages private; pool of 12 fits one + change, so
+    # the alloc-gated fused admission serializes without sharing
+    mk = lambda s: _mk_engine(cfg, params, sharing=s, num_pages=12,
+                              max_active=4, prompt_len=48, cache_len=64)
+    on, off = mk(True), mk(False)
+    got_on = _drive(on, reqs, "fused", max_slots=200)
+    got_off = _drive(off, reqs, "fused", max_slots=200)
+    assert got_on == got_off
+    assert on.peak_active >= 3 > off.peak_active
+    assert on.prefix_hits > 0
+    on.allocator.check()
+
+
+def test_sharing_skips_prefill_flops():
+    """Chunked prefill skips cached chunks: with a warm prefix the second
+    wave of requests spends strictly fewer prefill-token slots."""
+    cfg, params = _setup()
+    eng = _mk_engine(cfg, params, sharing=True, num_pages=32)
+    _drive(eng, _shared_prefix_reqs(2, seed=5))
+    warm_hits = eng.prefix_hits
+    backlog0 = eng.token_backlog()
+    wave2 = _shared_prefix_reqs(4, seed=5)
+    for r in wave2:
+        r.rid += 100
+    eng.submit([copy.deepcopy(r) for r in wave2])
+    # cached tokens never enter the pending-prefill backlog accounting the
+    # moment the rows activate
+    t = 0
+    while len(eng.finished) < 6 and t < 80:
+        eng.step_slot_chunked(t, n_steps=2)
+        t += 1
+    eng.drain()
+    assert eng.prefix_hits > warm_hits        # second wave hit the cache
+    assert backlog0 == 0
+    eng.allocator.check()
+
+
+def test_router_prefix_affinity_prefers_warm_replica():
+    """Fleet routing: a request whose prefix is resident on replica 1 routes
+    there despite replica 0 being the idle-tie winner."""
+    from repro.control import FleetRouter
+    from repro.runtime import ReplicaFleet
+
+    cfg, params = _setup()
+    fleet = ReplicaFleet.build(
+        lambda: _mk_engine(cfg, params, sharing=True, num_pages=32),
+        2, router=FleetRouter(kind="drift"))
+    warm = _shared_prefix_reqs(1, seed=6)[0]
+    warm.rid = 0
+    other = _shared_prefix_reqs(1, seed=66)[0]        # disjoint prefix
+    other.rid = 10
+    # warm replica 1 with the target prefix, replica 0 with an unrelated
+    # one — symmetric load/occupancy, so affinity is the deciding term
+    fleet.replicas[1].submit([copy.deepcopy(warm)])
+    fleet.replicas[0].submit([copy.deepcopy(other)])
+    t = 0
+    while (len(fleet.replicas[1].finished) < 1
+           or len(fleet.replicas[0].finished) < 1) and t < 40:
+        fleet.replicas[1].step_slot_chunked(t, n_steps=2)
+        fleet.replicas[0].step_slot_chunked(t, n_steps=2)
+        t += 1
+    fleet.drain()
+    assert fleet.replicas[1].prefix_hit_tokens(warm.tokens) > 0
+    assert fleet.replicas[0].prefix_hit_tokens(warm.tokens) == 0
+    probe = _shared_prefix_reqs(2, seed=6)[1]         # same prefix, new tail
+    probe.rid = 1
+    fleet.submit([probe])
+    assert fleet.router.routed[-1] == 1
+
+
+def test_ttft_percentiles_in_latency_stats():
+    """TTFT (first-token slot minus arrival) lands in latency_stats for
+    both sharing settings, and a warm prefix cannot worsen it."""
+    cfg, params = _setup()
+    for sharing in (False, True):
+        eng = _mk_engine(cfg, params, sharing=sharing)
+        _drive(eng, _shared_prefix_reqs(5, seed=7))
+        st_ = latency_stats(eng)
+        assert "ttft_p50" in st_ and "ttft_p99" in st_
+        assert st_["ttft_p50"] >= 0
+        for r in eng.finished:
+            assert r.first_token_slot is not None
+            assert r.arrival_slot <= r.first_token_slot <= r.finish_slot
+
+
+def test_sharing_off_is_default_and_inert():
+    """prefix_sharing defaults OFF: no index is built and the probe reports
+    zero — the pre-sharing engine behavior, bit for bit."""
+    cfg, params = _setup()
+    eng = _mk_engine(cfg, params, sharing=False)
+    assert eng._prefix is None
+    assert eng.prefix_hit_tokens(np.arange(16, dtype=np.int32)) == 0
+    _drive(eng, _shared_prefix_reqs(3, seed=8))
+    assert eng.prefix_hits == 0
+    assert eng.allocator.used_pages == 0
