@@ -1,7 +1,14 @@
-"""Render EXPERIMENTS.md tables from dryrun_results.jsonl / hillclimb.jsonl.
+"""Render EXPERIMENTS.md tables from dryrun_results.jsonl / hillclimb.jsonl,
+and Fig.-2-style backlog/rate trajectories from a recorded DecisionLog.
 
 Run: PYTHONPATH=src python -m benchmarks.report [--dryrun FILE] [--hillclimb FILE]
-Prints markdown to stdout (pasted into EXPERIMENTS.md).
+     PYTHONPATH=src python -m benchmarks.report --decisions decisions.json
+Prints markdown to stdout (pasted into EXPERIMENTS.md). ``--decisions``
+consumes the JSON saved by ``--decisions-out`` (repro.launch.serve) or
+``DecisionLog.save`` and renders the recorded controller run — backlog
+Q(t) and sampling rate f*(t) as ASCII sparkline rows plus a per-phase
+summary table, the paper's Fig. 2 regenerated from a *real* serving run's
+decision log instead of a simulation.
 """
 from __future__ import annotations
 
@@ -63,11 +70,78 @@ def hillclimb_table(path: str):
         )
 
 
+def _sparkline(values, width: int = 64) -> str:
+    """Downsample a series to ``width`` columns of block characters."""
+    import numpy as np
+
+    blocks = " ▁▂▃▄▅▆▇█"
+    v = np.asarray(values, float)
+    if v.size == 0:
+        return ""
+    if v.size > width:
+        edges = np.linspace(0, v.size, width + 1).astype(int)
+        v = np.asarray([v[a:b].mean() for a, b in zip(edges, edges[1:])])
+    lo, hi = float(v.min()), float(v.max())
+    if hi == lo:   # flat series: a visible mid-level line beats blanks
+        return "▄" * v.size
+    return "".join(blocks[int((x - lo) / (hi - lo) * (len(blocks) - 1))]
+                   for x in v)
+
+
+def decisions_report(path: str):
+    """Fig.-2-style view of a recorded control run (DecisionLog JSON)."""
+    import numpy as np
+
+    from repro.obs import DecisionLog
+
+    log = DecisionLog.load(path)
+    s = log.rate_series()
+    n = len(s["t"])
+    if n == 0:
+        print(f"no rate decisions in {path}")
+        return
+    print(f"## §Control — recorded run ({path}, {n} slots)\n")
+    print(f"backlog Q(t)   [{s['backlog'].min():6.1f} .. "
+          f"{s['backlog'].max():6.1f}]  {_sparkline(s['backlog'])}")
+    print(f"rate    f*(t)  [{s['rate'].min():6.1f} .. "
+          f"{s['rate'].max():6.1f}]  {_sparkline(s['rate'])}")
+    if s["vq"].any():
+        print(f"virtual Z(t)   [{s['vq'].min():6.1f} .. "
+              f"{s['vq'].max():6.1f}]  {_sparkline(s['vq'])}")
+    thirds = np.array_split(np.arange(n), 3)
+    print("\n| phase | slots | mean Q | mean f* | mean Z |")
+    print("|---|---|---|---|---|")
+    for name, idx in zip(("warmup", "middle", "tail"), thirds):
+        if idx.size == 0:
+            continue
+        print(f"| {name} | {idx[0]}..{idx[-1]} "
+              f"| {s['backlog'][idx].mean():.1f} "
+              f"| {s['rate'][idx].mean():.2f} "
+              f"| {s['vq'][idx].mean():.2f} |")
+    if log.routes:
+        counts = log.route_counts()
+        print(f"\nroutes: {len(log.routes)} decisions over "
+              f"{counts.size} replicas — per-replica "
+              f"{counts.tolist()}")
+    lagged = sum(1 for r in log.rates if r["lagged"])
+    print(f"\nlast decision decomposition (explain_rate):\n"
+          f"{log.explain_rate(-1)}")
+    if lagged:
+        print(f"({lagged}/{n} decisions recorded under one-slot-lagged "
+              f"sync-free control)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun", default="dryrun_results.jsonl")
     ap.add_argument("--hillclimb", default="hillclimb.jsonl")
+    ap.add_argument("--decisions", default=None, metavar="JSON",
+                    help="render a recorded DecisionLog (Fig.-2-style "
+                         "backlog/rate trajectory + argmax decomposition)")
     args = ap.parse_args()
+    if args.decisions:
+        decisions_report(args.decisions)
+        return
     if os.path.exists(args.dryrun):
         print("## §Roofline — baseline, every (arch × shape)")
         dryrun_table(args.dryrun, "16x16")

@@ -280,6 +280,26 @@ def bench_serve_sync_free(quick=False):
     tps_s, syncs_s, dt_s = run(ragged=True, sync_free=True)
     tps_f, syncs_f, _ = run(ragged=False, sync_free=False)
 
+    # registry-sourced dispatch/sync accounting: a short observed run whose
+    # counters land in BENCH_*.json as row["metrics"] — the regression gate
+    # reads disp_per_slot/syncs_per_slot from the metrics registry, not a
+    # hand-maintained stats dict (deterministic: fixed source seed)
+    from repro.obs import observability
+    obs = observability()
+    eng = Engine(cfg, params, EngineConfig(batch_slots=8, prompt_len=P,
+                                           cache_len=128,
+                                           ragged_prefill=True), obs=obs)
+    serve(eng, StaticScheduler(rate=8.0, capacity=256), mk_src(0),
+          horizon=8, steps_per_slot=2, sync_free=True)
+    eng.export_metrics()
+    snap = obs.registry.snapshot()
+    slots = snap["repro_steps"] / 2
+    metrics = {
+        "disp_per_slot": (snap["repro_prefill_dispatches"]
+                          + snap["repro_decode_dispatches"]) / slots,
+        "syncs_per_slot": snap["repro_blocking_syncs"] / slots,
+    }
+
     def drive(eng, sync):
         src = RequestSource(vocab_size=cfg.vocab_size, prompt_len=16,
                             min_prompt_len=3, raw_rate=12, max_new_tokens=6,
@@ -315,7 +335,7 @@ def bench_serve_sync_free(quick=False):
         derived = "TOKEN_MISMATCH;" + derived
     if syncs_s > 0:
         derived = "SYNC_VIOLATION;" + derived
-    return us, derived
+    return us, derived, metrics
 
 
 def bench_continuous_batching(quick=False):
@@ -438,6 +458,23 @@ def bench_continuous_batching(quick=False):
     paged_legacy, paged_cb = drive(mk_p(), "fused"), drive(mk_p(), "chunked")
     same = (dense_legacy == dense_cb == paged_cb and paged_legacy == paged_cb)
 
+    # registry-sourced accounting for the gate (see bench_serve_sync_free)
+    from repro.obs import observability
+    obs = observability()
+    eng = Engine(cfg, params, EngineConfig(batch_slots=8, prompt_len=P,
+                                           cache_len=128, chunk_size=16,
+                                           chunk_budget=0), obs=obs)
+    loop(eng, mk_src(0), True, 8)
+    eng.drain()
+    eng.export_metrics()
+    snap = obs.registry.snapshot()
+    slots = snap["repro_steps"] / 2
+    metrics = {
+        "disp_per_slot": (snap["repro_prefill_dispatches"]
+                          + snap["repro_decode_dispatches"]) / slots,
+        "syncs_per_slot": snap["repro_blocking_syncs"] / slots,
+    }
+
     us = dt_c / horizon * 1e6
     derived = (
         f"chunked_tps={tps_c:.1f};sync_free_tps={tps_s:.1f}"
@@ -452,7 +489,7 @@ def bench_continuous_batching(quick=False):
         derived = "TOKEN_MISMATCH;" + derived
     if disp_c > 1.0:
         derived = "DISPATCH_VIOLATION;" + derived
-    return us, derived
+    return us, derived, metrics
 
 
 def bench_fleet_scaling(quick=False):
@@ -656,6 +693,100 @@ def bench_prefix_sharing(quick=False):
     return us, derived
 
 
+def bench_observability(quick=False):
+    """Telemetry overhead: the sync-free serve loop with the full
+    observability bundle (live trace ring + decision log + registry export)
+    vs OBS_OFF, same engine geometry, scheduler, and source seeds.
+
+    The bundle is host-side and pull-based, so the hot path pays one
+    ``enabled`` branch plus tuple builds into a preallocated ring —
+    ``telemetry_speedup`` (on/off tokens/s, best of reps each) must stay
+    ~1.0 and is gated higher-is-better by the regression machinery.
+
+    Equivalence: a fixed request set driven both ways must produce
+    bit-identical greedy streams (observability cannot change a token) —
+    TOKEN_MISMATCH fails the smoke gate. us_per_call = telemetry-on us per
+    control slot.
+    """
+    import copy
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.obs import OBS_OFF, observability
+    from repro.runtime import (Engine, EngineConfig, RequestSource,
+                               StaticScheduler, serve)
+
+    cfg = get_config("granite-3-2b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    P, horizon = 64, (10 if quick else 25)
+    reps = 3 if quick else 4
+    mk_src = lambda s: RequestSource(vocab_size=cfg.vocab_size, prompt_len=16,
+                                     min_prompt_len=4, raw_rate=8,
+                                     max_new_tokens=6, seed=s)
+
+    def tokens_of(eng):
+        return (sum(len(r.generated) for r in eng.finished)
+                + sum(len(r.generated or []) for r in eng.active if r))
+
+    def run(obs):
+        live = obs is not OBS_OFF
+        eng = Engine(cfg, params, EngineConfig(batch_slots=8, prompt_len=P,
+                                               cache_len=128,
+                                               ragged_prefill=True), obs=obs)
+        mk_sch = lambda: StaticScheduler(rate=8.0, capacity=256,
+                                         obs=obs if live else None)
+        serve(eng, mk_sch(), mk_src(0), horizon=6, steps_per_slot=2,
+              sync_free=True)   # warm the jits
+        best_tps, dt_best = 0.0, 0.0
+        for rep in range(reps):
+            eng.pending.clear()
+            if live:
+                obs.trace.clear()
+            tok0, t0 = tokens_of(eng), time.perf_counter()
+            serve(eng, mk_sch(), mk_src(rep + 1), horizon=horizon,
+                  steps_per_slot=2, sync_free=True)
+            dt = time.perf_counter() - t0
+            tps = (tokens_of(eng) - tok0) / dt
+            if tps > best_tps:
+                best_tps, dt_best = tps, dt
+        if live:
+            eng.export_metrics()
+        return best_tps, dt_best
+
+    tps_off, _ = run(OBS_OFF)
+    obs = observability()
+    tps_on, dt_on = run(obs)
+
+    def drive(o):
+        eng = Engine(cfg, params, EngineConfig(batch_slots=4, prompt_len=16,
+                                               cache_len=64), obs=o)
+        src = RequestSource(vocab_size=cfg.vocab_size, prompt_len=16,
+                            min_prompt_len=3, raw_rate=12, max_new_tokens=6,
+                            seed=7)
+        eng.submit(copy.deepcopy(src.poll(0, 12.0)))
+        t = 0
+        while len(eng.finished) < 12 and t < 60:
+            eng.step_slot_sync(t, n_steps=2)
+            t += 1
+        eng.drain()
+        return {r.rid: r.generated for r in eng.finished}
+
+    same = drive(OBS_OFF) == drive(observability())
+    ratio = tps_on / tps_off
+    us = dt_on / horizon * 1e6
+    derived = (
+        f"telemetry_speedup={ratio:.2f}x"
+        f";telemetry_on_tps={tps_on:.1f};telemetry_off_tps={tps_off:.1f}"
+        f";trace_events={len(obs.trace)}"
+        f";registry_metrics={len(obs.registry)}"
+        f";decisions={len(obs.decisions.rates)}"
+        f";same_tokens={same}"
+    )
+    if not same:
+        derived = "TOKEN_MISMATCH;" + derived
+    return us, derived
+
+
 def bench_flash_attention(quick=False):
     """XLA flash path per-call time + kernel/oracle agreement."""
     from repro.kernels import ops
@@ -719,7 +850,7 @@ def bench_roofline_table():
 # one-dispatch budget.
 SMOKE_BENCHES = ("controller_overhead", "paged_vs_dense_decode",
                  "serve_sync_free", "continuous_batching", "fleet_scaling",
-                 "prefix_sharing")
+                 "prefix_sharing", "observability")
 
 # ------------------------------------------------- benchmark-regression gate
 # `--check-against baseline.json[,baseline2.json]` compares this run's rows
@@ -758,6 +889,18 @@ def _metric_direction(key: str):
     return None
 
 
+def _gated_metrics(row: dict) -> dict:
+    """All of a row's comparable metrics: derived-string key=value pairs
+    plus the registry-sourced ``metrics`` dict (rows that embed one)."""
+    out = _derived_metrics(row.get("derived"))
+    for key, val in (row.get("metrics") or {}).items():
+        try:
+            out[key] = float(val)
+        except (TypeError, ValueError):
+            pass
+    return out
+
+
 def check_against(rows: list, baseline_paths: list, tolerance: float) -> list:
     """Compare a run's rows to baseline JSON rows; return violation strings.
 
@@ -780,8 +923,8 @@ def check_against(rows: list, baseline_paths: list, tolerance: float) -> list:
         crow = current.get(name)
         if crow is None:
             continue   # not part of this run's subset
-        cur = _derived_metrics(crow.get("derived"))
-        for key, bval in _derived_metrics(brow.get("derived")).items():
+        cur = _gated_metrics(crow)
+        for key, bval in _gated_metrics(brow).items():
             direction = _metric_direction(key)
             if direction is None:
                 continue
@@ -832,6 +975,7 @@ def main() -> None:
         ("continuous_batching", lambda: bench_continuous_batching(args.quick)),
         ("fleet_scaling", lambda: bench_fleet_scaling(args.quick)),
         ("prefix_sharing", lambda: bench_prefix_sharing(args.quick)),
+        ("observability", lambda: bench_observability(args.quick)),
         ("flash_attention_xla", lambda: bench_flash_attention(args.quick)),
         ("ssd_scan_xla", lambda: bench_ssd_scan(args.quick)),
         ("roofline_table", bench_roofline_table),
@@ -845,10 +989,19 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, fn in benches:
         try:
-            us, derived = fn()
+            out = fn()
+            # benches may return (us, derived) or (us, derived, metrics) —
+            # the third element is a registry-sourced dict gated like the
+            # derived ratios and embedded in the JSON row
+            us, derived = out[0], out[1]
+            metrics = out[2] if len(out) > 2 else None
             print(f"{name},{us:.1f},{derived}")
-            rows.append({"name": name, "us_per_call": round(us, 1),
-                         "derived": derived})
+            row = {"name": name, "us_per_call": round(us, 1),
+                   "derived": derived}
+            if metrics:
+                row["metrics"] = {k: round(float(v), 4)
+                                  for k, v in metrics.items()}
+            rows.append(row)
         except Exception as e:  # keep the harness robust
             print(f"{name},nan,ERROR:{type(e).__name__}:{e}")
             rows.append({"name": name, "us_per_call": None,

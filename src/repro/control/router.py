@@ -94,6 +94,9 @@ class FleetRouter:
     # re-caching) on whichever queue is momentarily shortest. Priced like
     # token_price: a cached token cancels a backlogged one.
     affinity_price: float = 1.0 / 32.0
+    # optional DecisionLog (repro.obs): records every route with its
+    # per-replica score vector; None (or a NullDecisionLog) costs one branch
+    decisions: Optional[object] = None
 
     def __post_init__(self):
         if self.kind not in ROUTER_KINDS:
@@ -151,6 +154,9 @@ class FleetRouter:
                 self._rr += 1
                 if routable[i]:
                     self.routed.append(i)
+                    if self.decisions is not None and self.decisions.enabled:
+                        self.decisions.record_route(rid=None, chosen=i,
+                                                    kind=self.kind)
                     return i
         # drift / least-loaded: the route target is an Algorithm-1 argmax
         # over the replica set — i* = argmax_i { V * S_i - D_i } — with
@@ -167,4 +173,10 @@ class FleetRouter:
         i = int(_route_action(jnp.asarray(q), jnp.asarray(s),
                               jnp.float32(v)))
         self.routed.append(i)
+        if self.decisions is not None and self.decisions.enabled:
+            # per-replica score vector the argmax saw: T_i = V*S_i - D_i
+            self.decisions.record_route(
+                rid=None, chosen=i, kind=self.kind, V=float(v),
+                scores=np.float32(v) * s - q, loads=loads, prefs=s,
+                affinity=affinity)
         return i

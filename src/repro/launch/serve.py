@@ -16,6 +16,13 @@ N equal engines (one compile, shared jit cache) with requests routed by
 (request backlog + pending prompt tokens + paged occupancy, priced through
 the one Algorithm-1 argmax), ``round-robin``/``least-loaded`` are the
 classical baselines.
+
+``--metrics`` prints the Prometheus text exposition of every engine counter
+at shutdown; ``--trace-out PATH`` records the full request lifecycle and
+writes a Chrome-trace JSON (open in Perfetto); ``--decisions-out PATH``
+saves the control plane's per-slot argmax decompositions. All three thread
+one ``repro.obs.Observability`` bundle through engine, fleet, scheduler,
+and router — and none of them changes a single generated token.
 """
 from __future__ import annotations
 
@@ -27,6 +34,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.control import ROUTER_KINDS, FleetRouter, LatencyAware
 from repro.models import init_params
+from repro.obs import OBS_OFF, observability
 from repro.runtime import (AdaptiveScheduler, Engine, EngineConfig,
                            MemoryAwareScheduler, PagedEngine,
                            PagedEngineConfig, PolicyScheduler, ReplicaFleet,
@@ -84,6 +92,14 @@ def main():
     ap.add_argument("--router", choices=list(ROUTER_KINDS), default="drift",
                     help="fleet request routing: drift = join the shortest "
                          "drift-plus-penalty queue")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the Prometheus exposition at shutdown")
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="write a Chrome-trace JSON of the request "
+                         "lifecycle (open in Perfetto)")
+    ap.add_argument("--decisions-out", type=str, default=None,
+                    help="save the control plane's recorded Algorithm-1 "
+                         "decisions (JSON; benchmarks/report.py renders)")
     ap.add_argument("--rate", type=float, default=5.0, help="static policy rate")
     ap.add_argument("--V", type=float, default=20.0)
     ap.add_argument("--raw-rate", type=int, default=5)
@@ -115,41 +131,51 @@ def main():
 
     cfg = get_config(args.arch, smoke=args.smoke)
     params = init_params(jax.random.PRNGKey(0), cfg)
+    telemetry = args.metrics or args.trace_out or args.decisions_out
+    obs = observability() if telemetry else OBS_OFF
     if args.paged:
         mk_engine = lambda: PagedEngine(cfg, params, PagedEngineConfig(
             prompt_len=args.prompt_len, cache_len=args.cache_len,
             page_size=args.page_size, num_pages=args.num_pages,
             max_active=args.max_active, eos_id=args.eos_id,
             prefix_sharing=args.prefix_sharing,
-            chunk_size=args.chunk_size, chunk_budget=args.chunk_budget))
+            chunk_size=args.chunk_size, chunk_budget=args.chunk_budget),
+            obs=obs)
     else:
         mk_engine = lambda: Engine(cfg, params, EngineConfig(
             batch_slots=args.slots, prompt_len=args.prompt_len,
             cache_len=args.cache_len, eos_id=args.eos_id,
-            chunk_size=args.chunk_size, chunk_budget=args.chunk_budget))
+            chunk_size=args.chunk_size, chunk_budget=args.chunk_budget),
+            obs=obs)
     if args.replicas > 1:
-        engine = ReplicaFleet.build(mk_engine, args.replicas,
-                                    router=FleetRouter(kind=args.router))
+        router = FleetRouter(kind=args.router,
+                             decisions=obs.decisions if telemetry else None)
+        engine = ReplicaFleet.build(mk_engine, args.replicas, router=router,
+                                    obs=obs if telemetry else None)
     else:
         engine = mk_engine()
     rates = tuple(float(f) for f in range(1, args.raw_rate + 1))
+    sched_obs = obs if telemetry else None
     if args.policy == "adaptive":
-        sched = AdaptiveScheduler(rates=rates, V=args.V, capacity=args.capacity)
+        sched = AdaptiveScheduler(rates=rates, V=args.V,
+                                  capacity=args.capacity, obs=sched_obs)
     elif args.policy == "latency-aware":
         sched = PolicyScheduler(
             policy=LatencyAware(rates=rates, V=args.V, cost_gain=1.0,
                                 cost_budget=args.cost_budget),
-            capacity=args.capacity)
+            capacity=args.capacity, obs=sched_obs)
     elif args.policy == "memory-aware":
         sched = MemoryAwareScheduler(
             rates=rates, V=args.V, occupancy_budget=args.occupancy_budget,
-            capacity=args.capacity)
+            capacity=args.capacity, obs=sched_obs)
     elif args.policy == "token-aware":
         sched = TokenAwareScheduler(
             rates=rates, V=args.V, token_budget=args.token_budget,
-            tokens_per_request=float(args.prompt_len), capacity=args.capacity)
+            tokens_per_request=float(args.prompt_len),
+            capacity=args.capacity, obs=sched_obs)
     else:
-        sched = StaticScheduler(rate=args.rate, capacity=args.capacity)
+        sched = StaticScheduler(rate=args.rate, capacity=args.capacity,
+                                obs=sched_obs)
     src = RequestSource(vocab_size=cfg.vocab_size, prompt_len=args.prompt_len,
                         raw_rate=args.raw_rate, max_new_tokens=4,
                         min_prompt_len=args.min_prompt_len)
@@ -181,6 +207,17 @@ def main():
                   f"indexed_pages={sum(len(e._prefix) for e in engines)} "
                   f"evicted={sum(e._prefix.evicted_pages for e in engines)}")
     print("latency:", latency_stats(engine))
+    if telemetry:
+        engine.export_metrics()
+        if args.metrics:
+            print(obs.registry.prometheus_text(), end="")
+        if args.trace_out:
+            print(f"trace: {obs.trace.save(args.trace_out)} "
+                  f"({len(obs.trace)} events, {obs.trace.dropped} dropped)")
+        if args.decisions_out:
+            print(f"decisions: {obs.decisions.save(args.decisions_out)} "
+                  f"({len(obs.decisions.rates)} rate, "
+                  f"{len(obs.decisions.routes)} route)")
 
 
 if __name__ == "__main__":

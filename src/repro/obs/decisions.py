@@ -1,0 +1,230 @@
+"""Control-plane introspection: per-decision Lyapunov explanations.
+
+Every Algorithm-1 argmax the system takes — the scheduler's per-slot rate
+decision (``drift_plus_penalty_action`` over the policy tables) and the
+fleet router's per-request replica pick — can be recorded here with its
+inputs: backlog Q(t), virtual-queue value Z(t), V, and the per-action
+drift / V·penalty decomposition
+
+    T(f) = V * S(f)  -  Q(t) * lambda(f)  -  Z(t) * cost(f)
+           `--penalty--'  `------------drift------------'
+
+so a recorded run answers "why did the controller pick f=3 at slot 117"
+without rerunning anything, and the (t, backlog, rate) series regenerates
+Fig.-2-style backlog/rate plots from *real* serving runs
+(``benchmarks/report.py --decisions`` renders them).
+
+``replay_rollout`` closes the loop with the trace simulator: it re-executes
+``repro.control.rollout`` slot by slot on the host (same float32
+arithmetic, same first-maximizer tie-break), recording every decision —
+and its backlog/rate series must match the lax.scan rollout bit-for-bit,
+which tests/test_observability.py asserts. That is the acceptance check
+that the decision log really captures the controller the analysis runs.
+"""
+from __future__ import annotations
+
+import json
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+
+class DecisionLog:
+    """Bounded log of rate (scheduler) and route (router) decisions."""
+
+    enabled = True
+
+    def __init__(self, capacity: int = 8192):
+        self.rates: deque = deque(maxlen=capacity)
+        self.routes: deque = deque(maxlen=capacity)
+
+    # ---------------------------------------------------------- recording
+    def record_rate(self, *, t: int, backlog: float, vq: float, V: float,
+                    chosen: float, rates=(), drift=(), penalty=(),
+                    argmax: Optional[float] = None,
+                    lagged: bool = False) -> None:
+        """One scheduler decision. ``rates``/``drift``/``penalty`` are the
+        per-action decomposition (empty for non-table policies); ``lagged``
+        marks the sync-free pipeline where the applied rate is the previous
+        slot's decision (``chosen`` may then differ from ``argmax``)."""
+        self.rates.append({
+            "t": int(t), "backlog": float(backlog), "vq": float(vq),
+            "V": float(V), "chosen": float(chosen),
+            "rates": tuple(float(x) for x in rates),
+            "drift": tuple(float(x) for x in drift),
+            "penalty": tuple(float(x) for x in penalty),
+            "argmax": None if argmax is None else float(argmax),
+            "lagged": bool(lagged),
+        })
+
+    def record_route(self, *, rid, chosen: int, scores=None, loads=None,
+                     prefs=None, affinity=None, V: float = 0.0,
+                     kind: str = "drift") -> None:
+        """One router decision with its per-replica score vector
+        (V*S_i - D_i; None for round-robin, which never scores)."""
+        as_tuple = (lambda x: None if x is None
+                    else tuple(float(v) for v in np.asarray(x).ravel()))
+        self.routes.append({
+            "rid": rid, "chosen": int(chosen), "kind": kind, "V": float(V),
+            "scores": as_tuple(scores), "loads": as_tuple(loads),
+            "prefs": as_tuple(prefs), "affinity": as_tuple(affinity),
+        })
+
+    # ------------------------------------------------------------- views
+    def rate_series(self) -> dict:
+        """{'t', 'backlog', 'rate', 'vq'} arrays — the Fig.-2 axes."""
+        recs = list(self.rates)
+        return {
+            "t": np.asarray([r["t"] for r in recs], np.int64),
+            "backlog": np.asarray([r["backlog"] for r in recs], np.float32),
+            "rate": np.asarray([r["chosen"] for r in recs], np.float32),
+            "vq": np.asarray([r["vq"] for r in recs], np.float32),
+        }
+
+    def route_counts(self, n_replicas: Optional[int] = None) -> np.ndarray:
+        """Per-replica routed-request tally (the fleet balance picture)."""
+        chosen = [r["chosen"] for r in self.routes]
+        n = n_replicas if n_replicas is not None else (max(chosen) + 1
+                                                       if chosen else 0)
+        out = np.zeros(n, np.int64)
+        for c in chosen:
+            if c < n:
+                out[c] += 1
+        return out
+
+    def explain_rate(self, i: int = -1) -> str:
+        """Human-readable decomposition of one recorded rate decision."""
+        r = list(self.rates)[i]
+        lines = [f"slot {r['t']}: Q={r['backlog']:g} Z={r['vq']:g} "
+                 f"V={r['V']:g} -> f*={r['chosen']:g}"
+                 + (" (lagged)" if r["lagged"] else "")]
+        for f, d, p in zip(r["rates"], r["drift"], r["penalty"], strict=True):
+            star = " <-- chosen" if (r["argmax"] is not None
+                                     and f == r["argmax"]) else ""
+            lines.append(f"  f={f:6g}  V*S={p:10.3f}  drift={d:10.3f}  "
+                         f"T={p + d:10.3f}{star}")
+        return "\n".join(lines)
+
+    # ----------------------------------------------------------- exports
+    def to_json(self) -> dict:
+        return {"rates": list(self.rates), "routes": list(self.routes)}
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "DecisionLog":
+        with open(path) as f:
+            data = json.load(f)
+        log = cls()
+        log.rates.extend(data.get("rates", []))
+        log.routes.extend(data.get("routes", []))
+        return log
+
+
+class NullDecisionLog(DecisionLog):
+    """Disabled log: recording is a no-op behind one ``enabled`` branch."""
+
+    enabled = False
+
+    def __init__(self):
+        super().__init__(capacity=1)
+
+    def record_rate(self, **kw) -> None:  # noqa: ARG002
+        return None
+
+    def record_route(self, **kw) -> None:  # noqa: ARG002
+        return None
+
+
+NULL_DECISIONS = NullDecisionLog()
+
+
+def explain_tables(backlog: float, f_tab, s_tab, lam_tab, V: float,
+                   vq: float = 0.0, cost_tab=None) -> dict:
+    """Host-side recompute of one table-policy decision, float32 throughout
+    so the decomposition (and tie-break) matches the jitted argmax exactly."""
+    f = np.asarray(f_tab, np.float32)
+    s = np.asarray(s_tab, np.float32)
+    lam = np.asarray(lam_tab, np.float32)
+    penalty = np.float32(V) * s
+    qterm = np.float32(backlog) * lam
+    # exact op order of drift_plus_penalty_action: (V*S - Q*lam) - extra —
+    # float addition is non-associative, so the grouping matters bit-wise
+    T = penalty - qterm
+    drift = -qterm
+    if cost_tab is not None:
+        extra = np.float32(vq) * np.asarray(cost_tab, np.float32)
+        T = T - extra
+        drift = drift - extra
+    idx = int(np.argmax(T))   # first maximizer — same tie-break as jnp
+    return {"rates": f, "penalty": penalty, "drift": drift, "T": T,
+            "argmax": float(f[idx]), "T_star": float(T[idx])}
+
+
+def replay_rollout(policy, mus, capacity: float = np.inf,
+                   log: Optional[DecisionLog] = None) -> dict:
+    """Host replay of ``repro.control.rollout.rollout`` that records every
+    decision; the returned backlog/rate series must equal the lax.scan
+    rollout's bit-for-bit (float32 elementwise arithmetic is IEEE-exact on
+    both sides, argmax tie-breaks agree).
+
+    Supports the table-policy family (Static / DriftPlusPenalty /
+    LatencyAware / MemoryAware / TokenBacklogAware). Observation-driven
+    policies (MemoryAware/TokenBacklogAware) keep Z at its init value here,
+    matching ``rollout`` — their virtual queues advance only on engine
+    observations, which a trace-sim has none of.
+    """
+    if log is None:
+        log = DecisionLog(capacity=len(np.asarray(mus)) + 1)
+    mus = np.asarray(mus, np.float32)
+    f_tab, s_tab, lam_tab = (np.asarray(a, np.float32)
+                             for a in policy.tables())
+    V = np.float32(getattr(policy, "V", 0.0))
+    # per-action virtual-queue price (mirrors PolicyScheduler.__post_init__)
+    cls = type(policy).__name__
+    if cls == "LatencyAware":
+        cost = np.float32(policy.cost_gain)
+    elif cls == "MemoryAware":
+        cost = np.float32(policy.mem_gain * policy.pages_per_request)
+    elif cls == "TokenBacklogAware":
+        cost = np.float32(policy.tok_gain * policy.tokens_per_request)
+    else:
+        cost = np.float32(0.0)
+    cost_tab = cost * f_tab
+    gain = np.float32(getattr(policy, "arrival_gain", 1.0))
+    static_rate = getattr(policy, "rate", None)
+
+    carry = policy.init()
+    z = np.float32(np.asarray(getattr(carry, "value", 0.0)))
+    budget = np.float32(np.asarray(getattr(carry, "budget", 0.0)))
+    Q = np.float32(0.0)
+    backlog, rate, vqs = [], [], []
+    for t, mu in enumerate(mus):
+        if static_rate is not None:
+            f_star = np.float32(static_rate)
+            ex = {"rates": f_tab, "penalty": V * s_tab,
+                  "drift": -(Q * lam_tab), "argmax": float(f_star)}
+        else:
+            ex = explain_tables(Q, f_tab, s_tab, lam_tab, float(V),
+                                vq=float(z), cost_tab=cost_tab)
+            f_star = np.float32(ex["argmax"])
+        if cls == "LatencyAware":   # Z advances on the chosen action's cost
+            z = np.maximum(z + cost * f_star - budget, np.float32(0.0))
+        lam = gain * f_star
+        after = np.maximum(Q - np.float32(mu), np.float32(0.0))
+        room = np.maximum(np.float32(capacity) - after, np.float32(0.0))
+        Q = after + np.minimum(lam, room)
+        backlog.append(Q)
+        rate.append(f_star)
+        vqs.append(z)
+        log.record_rate(t=t, backlog=float(Q), vq=float(z), V=float(V),
+                        chosen=float(f_star), rates=ex["rates"],
+                        drift=ex["drift"], penalty=ex["penalty"],
+                        argmax=float(ex["argmax"]))
+    return {"backlog": np.asarray(backlog, np.float32),
+            "rate": np.asarray(rate, np.float32),
+            "vq": np.asarray(vqs, np.float32), "log": log}

@@ -78,6 +78,7 @@ from repro.models.transformer import (
     paged_segments_supported,
     ragged_prefill_supported,
 )
+from repro.obs import OBS_OFF
 from repro.runtime.request import Request
 
 # Sentinel for short-prompt padding. Padding used to cycle the prompt via
@@ -526,9 +527,15 @@ def _host_take(row_toks, req: Request, age: int, n_steps: int,
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig, extra_batch=None):
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
+                 extra_batch=None, obs=None):
         self.cfg, self.params, self.ecfg = cfg, params, ecfg
         self.extra = extra_batch or {}
+        # observability is host-side and pull-based: the jitted hot paths
+        # never see it, so on/off cannot change a single token
+        self.obs = obs or OBS_OFF
+        self.obs_pid = 0          # replica index (the fleet stamps it)
+        self._now = 0             # current control slot, for deep emit sites
         B, P = ecfg.batch_slots, ecfg.prompt_len
         self._sig = _DecodeSig.of(ecfg)
         self._ragged = ecfg.ragged_prefill and ragged_prefill_supported(cfg)
@@ -561,6 +568,17 @@ class Engine:
         self.blocking_syncs = 0       # dispatch-gating synchronous readbacks
         self.readback_waits = 0       # sync-free consume-side overlap misses
         self._pending_read = None     # sync-free: last slot's async readback
+        # paged-only counters, carried at 0 by the dense engine so the
+        # counters() key set never drifts between engine types (DESIGN.md
+        # §11: `preemptions` is reported as 0, never missing)
+        self.preemptions = 0
+        self.alloc_failures = 0
+        self.peak_active = 0
+        self.prefix_hits = 0
+        self.prefix_forks = 0
+        self.fork_dispatches = 0
+        self.eviction_raced_hits = 0
+        self.occupancy_hwm = 0.0
         # admission epoch per row: a readback packet only retires a row if
         # the row still hosts the request it observed (guards against a
         # stale pre-admission done flag retiring a freshly admitted request)
@@ -586,7 +604,101 @@ class Engine:
         return t + sum(c.remaining for c in self._cursors.values())
 
     def submit(self, reqs: list) -> None:
+        tr = self.obs.trace
+        if tr.enabled:
+            for r in reqs:
+                tr.emit("arrival", slot=r.arrival_slot, rid=r.rid,
+                        pid=self.obs_pid, prompt_len=len(r.tokens))
         self.pending.extend(reqs)
+
+    # ----------------------------------------------------- observability
+    def counters(self) -> dict:
+        """The one counter/gauge surface every engine type shares.
+
+        Replaces the per-step-mode stats dicts as the source of truth for
+        cumulative state: a dense engine reports the paged-only keys
+        (preemptions, pages_*, occupancy...) as 0 rather than omitting
+        them, so fleet aggregation and the metrics exporter never branch
+        on engine type. Level keys (GAUGE_KEYS in repro.obs.metrics)
+        export as gauges; everything else is a monotone counter.
+        """
+        return {
+            "steps": self.steps,
+            "requests_finished": len(self.finished),
+            "requests_active": sum(r is not None for r in self.active),
+            "requests_pending": len(self.pending),
+            "requests_prefilling": len(self._cursors),
+            "prefill_dispatches": self.prefill_dispatches,
+            "decode_dispatches": self.decode_dispatches,
+            "fork_dispatches": self.fork_dispatches,
+            "blocking_syncs": self.blocking_syncs,
+            "readback_waits": self.readback_waits,
+            "preemptions": self.preemptions,
+            "alloc_failures": self.alloc_failures,
+            "eviction_raced_hits": self.eviction_raced_hits,
+            "peak_active": self.peak_active,
+            "prefix_hit_tokens": self.prefix_hits,
+            "prefix_forks": self.prefix_forks,
+            "prefix_inserted_pages": 0,
+            "prefix_evicted_pages": 0,
+            "occupancy": 0.0,
+            "occupancy_hwm": float(self.occupancy_hwm),
+            "committed_occupancy": 0.0,
+            "pages_used": 0,
+            "pages_free": 0,
+            "pages_shared": 0,
+            "pages_pinned": 0,
+            "frag_tokens": 0,
+            "peak_pages": 0,
+        }
+
+    def export_metrics(self, labels: Optional[dict] = None) -> None:
+        """Publish counters() into the obs registry (no-op when off)."""
+        self.obs.export(self.counters(), labels)
+
+    def _slot_stats(self, n_active: int, served: int, **extra) -> dict:
+        """The per-slot stats dict every step mode returns — one builder
+        instead of four hand-rolled near-duplicates, so the key set cannot
+        drift between modes or engine types (dense modes report
+        occupancy=0.0 and preemptions=0, not missing keys)."""
+        self.peak_active = max(self.peak_active, n_active)
+        d = {
+            "active": n_active,
+            "queue": len(self.pending),
+            "served": served,
+            "finished_total": len(self.finished),
+            "prefilling": len(self._cursors),
+            "occupancy": 0.0,
+            "preemptions": self.preemptions,
+            "blocking_syncs": self.blocking_syncs,
+        }
+        d.update(extra)
+        return d
+
+    def _emit_admission(self, req: Request, row: int, now: int) -> None:
+        """Stamp engine-claim time (queue-wait = admit_slot - arrival_slot)
+        and record the admission event. Preemption resets the stamp; the
+        re-claim restamps it, like start_slot/first_token_slot."""
+        req.admit_slot = now
+        tr = self.obs.trace
+        if tr.enabled:
+            tr.emit("admission", slot=now, rid=req.rid, row=row,
+                    pid=self.obs_pid)
+
+    def _emit_retire(self, req: Request, row: int, slot: int) -> None:
+        tr = self.obs.trace
+        if tr.enabled:
+            tr.emit("retirement", slot=slot, rid=req.rid, row=row,
+                    pid=self.obs_pid, tokens=len(req.generated or ()))
+
+    def _raced_hit(self, row: int, what: str) -> None:
+        """A prefix-cache hit degraded by a concurrent eviction — counted,
+        and traced so the cache's race window is visible on the timeline."""
+        self.eviction_raced_hits += 1
+        tr = self.obs.trace
+        if tr.enabled:
+            tr.emit("raced_hit", slot=self._now, row=row, pid=self.obs_pid,
+                    what=what)
 
     def free_slots(self) -> list:
         return [i for i, r in enumerate(self.active) if r is None]
@@ -630,6 +742,7 @@ class Engine:
         req.generated = [int(jnp.argmax(logits[0]))]
         self.active[slot] = req
         self.slot_age[slot] = 1  # first token came from prefill
+        self._emit_admission(req, slot, now)
 
     def admit_pending(self, now: int, sync: bool = False) -> int:
         """Fill all free slots from the pending queue with ONE prefill.
@@ -665,9 +778,14 @@ class Engine:
         slot_idx = np.full(B, B, np.int32)  # B = out of range -> scatter drops
         slot_idx[:k] = slots
         batch = {"tokens": jnp.asarray(toks), **self.extra}
+        tr = self.obs.trace
+        t0 = tr.now() if tr.enabled else 0.0
         logits, new = self._run_prefill(batch, lens, self.ecfg.cache_len)
         self.prefill_dispatches += 1
         self.state = _splice_many(self.state, new, jnp.asarray(slot_idx))
+        if tr.enabled:
+            tr.emit("dispatch", slot=now, pid=self.obs_pid, ts=t0,
+                    dur=tr.now() - t0, what="prefill", rows=k)
         if sync:
             budgets = np.zeros(B, np.int32)
             budgets[:k] = [r.max_new_tokens for r in reqs]
@@ -680,6 +798,7 @@ class Engine:
                 self.active[slot] = req
                 self.slot_age[slot] = 1
                 self._row_epoch[slot] += 1
+                self._emit_admission(req, slot, now)
             return k
         self.blocking_syncs += 1
         first = np.asarray(jnp.argmax(logits[:k], axis=-1))
@@ -689,10 +808,12 @@ class Engine:
             req.generated = [int(first[j])]
             self.active[slot] = req
             self.slot_age[slot] = 1  # first token came from prefill
+            self._emit_admission(req, slot, now)
         return k
 
     def step(self, now: int) -> dict:
         """Legacy engine slot: admit one-by-one -> one decode -> retire."""
+        self._now = now
         eos = self.ecfg.eos_id
         for slot in self.free_slots():
             if not self.pending:
@@ -707,6 +828,7 @@ class Engine:
                 r.finish_slot = now          # covered max_new_tokens<=1)
                 self.finished.append(r)
                 self.active[i] = None
+                self._emit_retire(r, i, now)
                 served += 1
         n_active = sum(r is not None for r in self.active)
         if n_active:
@@ -714,9 +836,14 @@ class Engine:
                 [r.generated[-1] if r else 0 for r in self.active], jnp.int32
             )
             self._key, sub = jax.random.split(self._key)
+            tr = self.obs.trace
+            t0 = tr.now() if tr.enabled else 0.0
             nxt, self.state = self._decode(self.params, self.state, toks, sub)
             self.decode_dispatches += 1
             self.blocking_syncs += 1
+            if tr.enabled:
+                tr.emit("dispatch", slot=now, pid=self.obs_pid, ts=t0,
+                        dur=tr.now() - t0, what="decode", n=1)
             nxt = np.asarray(nxt)
             for i, r in enumerate(self.active):
                 if r is None:
@@ -728,16 +855,12 @@ class Engine:
                     r.finish_slot = now
                     self.finished.append(r)
                     self.active[i] = None
+                    self._emit_retire(r, i, now)
                     served += 1
 
         self.served_history.append(served)
         self.steps += 1
-        return {
-            "active": n_active,
-            "queue": len(self.pending),
-            "served": served,
-            "finished_total": len(self.finished),
-        }
+        return self._slot_stats(n_active, served)
 
     def step_slot(self, now: int, n_steps: int = 1) -> dict:
         """One control slot, fused: batched admit -> scan decode -> retire.
@@ -749,6 +872,7 @@ class Engine:
         match what the legacy per-step loop would observe; the one semantic
         difference is that admission happens only at slot boundaries.
         """
+        self._now = now
         admitted = self.admit_pending(now)
         n_active = sum(r is not None for r in self.active)
         per_step = [0] * n_steps
@@ -757,11 +881,16 @@ class Engine:
                 [r.generated[-1] if r else 0 for r in self.active], jnp.int32
             )
             self._key, sub = jax.random.split(self._key)
+            tr = self.obs.trace
+            t0 = tr.now() if tr.enabled else 0.0
             all_toks, self.state = self._decode_n(
                 self.params, self.state, toks, sub, n=n_steps
             )
             self.decode_dispatches += 1
             self.blocking_syncs += 1
+            if tr.enabled:
+                tr.emit("dispatch", slot=now, pid=self.obs_pid, ts=t0,
+                        dur=tr.now() - t0, what="decode", n=n_steps)
             all_toks = np.asarray(all_toks)  # (n_steps, B)
             for i, r in enumerate(self.active):
                 if r is None:
@@ -775,17 +904,12 @@ class Engine:
                     self.finished.append(r)
                     per_step[max(take - 1, 0)] += 1
                     self.active[i] = None
+                    self._emit_retire(r, i, now)
         served = sum(per_step)
         self.served_history.append(served)
         self.steps += n_steps
-        return {
-            "active": n_active,
-            "queue": len(self.pending),
-            "served": served,
-            "served_per_step": per_step,
-            "admitted": admitted,
-            "finished_total": len(self.finished),
-        }
+        return self._slot_stats(n_active, served, served_per_step=per_step,
+                                admitted=admitted)
 
     # ------------------------------------------------- sync-free protocol
     def _release_row(self, row: int) -> None:
@@ -802,6 +926,9 @@ class Engine:
                 a.copy_to_host_async()
             except (AttributeError, RuntimeError):  # backend without async copy
                 pass
+        tr = self.obs.trace
+        if tr.enabled:
+            tr.emit("readback", slot=now, pid=self.obs_pid, what="initiate")
         self._pending_read = {"slot": now, "arrays": arrays,
                               "epoch": self._row_epoch.copy()}
 
@@ -821,11 +948,14 @@ class Engine:
         ``readback_waits`` (the host waited, the device never idled)."""
         if p is None:
             return 0, []
+        waited = False
         if count_waits:
             for a in p["arrays"].values():
                 if hasattr(a, "is_ready") and not a.is_ready():
                     self.readback_waits += 1
+                    waited = True
                     break
+        t0 = self.obs.trace.now() if self.obs.trace.enabled else 0.0
         done = np.asarray(p["arrays"]["done"])
         age = np.asarray(p["arrays"]["age"])
         gen = np.asarray(p["arrays"]["gen"])
@@ -846,7 +976,13 @@ class Engine:
             self.active[row] = None
             self.slot_age[row] = 0
             self._release_row(row)
+            self._emit_retire(req, row, p["slot"])
             served += 1
+        tr = self.obs.trace
+        if tr.enabled:
+            tr.emit("readback", slot=p["slot"], pid=self.obs_pid, ts=t0,
+                    dur=tr.now() - t0, what="consume", retired=served,
+                    waited=waited)
         extra = served - sum(per_step)
         if extra > 0:  # admission-time finishers (budget <= 1 / EOS first tok)
             per_step = per_step or [0]
@@ -867,6 +1003,7 @@ class Engine:
         its slot is reusable after at most two slots (call ``drain`` after
         the last slot to flush the tail).
         """
+        self._now = now
         prev, self._pending_read = self._pending_read, None
         early = prev is not None and self._readback_ready(prev)
         served_prev, per_step_prev = (self._consume_read(prev) if early
@@ -875,25 +1012,24 @@ class Engine:
         n_active = sum(r is not None for r in self.active)
         if n_active:
             self._key, sub = jax.random.split(self._key)
+            tr = self.obs.trace
+            t0 = tr.now() if tr.enabled else 0.0
             self.state, self.sync, served_steps = _decode_n_sync(
                 self.params, self.state, self.sync, sub,
                 n=n_steps, cfg=self.cfg, sig=self._sig,
             )
             self.decode_dispatches += 1
+            if tr.enabled:
+                tr.emit("dispatch", slot=now, pid=self.obs_pid, ts=t0,
+                        dur=tr.now() - t0, what="decode", n=n_steps)
             self._post_readback(now, served_steps)
         if not early:
             served_prev, per_step_prev = self._consume_read(prev)
         self.served_history.append(served_prev)
         self.steps += n_steps
-        return {
-            "active": n_active,
-            "queue": len(self.pending),
-            "served": served_prev,
-            "served_per_step": per_step_prev,
-            "admitted": admitted,
-            "finished_total": len(self.finished),
-            "blocking_syncs": self.blocking_syncs,
-        }
+        return self._slot_stats(n_active, served_prev,
+                                served_per_step=per_step_prev,
+                                admitted=admitted)
 
     def drain(self) -> dict:
         """Flush the in-flight slot's readback (shutdown; blocks once)."""
@@ -942,6 +1078,7 @@ class Engine:
             cached = self._claim_row(row, toks)
             self._cursors[row] = PrefillCursor(req=req, row=row, toks=toks,
                                                cached=cached)
+            self._emit_admission(req, row, now)
             k += 1
         return k
 
@@ -1012,16 +1149,23 @@ class Engine:
         may retire it again) and its epoch bumps, so done-flag packets from
         pre-activation dispatches can never retire it (they carry the old
         epoch or meet the cursor guard)."""
+        tr = self.obs.trace
         for row, cur, take, fin in plan["plan"]:
             if not cur.started:
                 cur.started = True   # off may start past 0 (cached prefix)
                 cur.req.start_slot = now
+            if tr.enabled:
+                tr.emit("chunk", slot=now, rid=cur.req.rid, row=row,
+                        pid=self.obs_pid, off=cur.off, take=take)
             cur.off += take
             if fin:
                 del self._cursors[row]
                 self._row_epoch[row] += 1
                 self.slot_age[row] = 1
                 self._on_activate(row, cur, now)
+                if tr.enabled:
+                    tr.emit("activation", slot=now, rid=cur.req.rid, row=row,
+                            pid=self.obs_pid, cached=cur.cached)
 
     def step_slot_chunked(self, now: int, n_steps: int = 1) -> dict:
         """One continuous-batching control slot: admit (host bookkeeping
@@ -1036,6 +1180,7 @@ class Engine:
         bit-identical to every legacy path.
         """
         self._require_chunked()
+        self._now = now
         prev, self._pending_read = self._pending_read, None
         early = prev is not None and self._readback_ready(prev)
         served_prev, per_step_prev = (self._consume_read(prev) if early
@@ -1043,8 +1188,10 @@ class Engine:
         admitted = self._admit_chunked(now)
         plan = self._chunk_plan(n_steps)
         n_active = sum(r is not None for r in self.active)
+        tr = self.obs.trace
         if plan is not None:
             self._key, sub = jax.random.split(self._key)
+            t0 = tr.now() if tr.enabled else 0.0
             self.state, self.sync, served_steps = _chunk_decode_sync(
                 self.params, self.state, self.sync,
                 jnp.asarray(plan["toks"]), jnp.asarray(plan["pos0"]),
@@ -1053,30 +1200,31 @@ class Engine:
                 sub, n=n_steps, cfg=self.cfg, sig=self._sig,
             )
             self.decode_dispatches += 1
+            if tr.enabled:
+                tr.emit("dispatch", slot=now, pid=self.obs_pid, ts=t0,
+                        dur=tr.now() - t0, what="mixed", n=n_steps,
+                        chunk_rows=len(plan["plan"]))
             self._finish_chunk_plan(plan, now)
             self._post_readback(now, served_steps)
         elif n_active:
             self._key, sub = jax.random.split(self._key)
+            t0 = tr.now() if tr.enabled else 0.0
             self.state, self.sync, served_steps = _decode_n_sync(
                 self.params, self.state, self.sync, sub,
                 n=n_steps, cfg=self.cfg, sig=self._sig,
             )
             self.decode_dispatches += 1
+            if tr.enabled:
+                tr.emit("dispatch", slot=now, pid=self.obs_pid, ts=t0,
+                        dur=tr.now() - t0, what="decode", n=n_steps)
             self._post_readback(now, served_steps)
         if not early:
             served_prev, per_step_prev = self._consume_read(prev)
         self.served_history.append(served_prev)
         self.steps += n_steps
-        return {
-            "active": n_active,
-            "queue": len(self.pending),
-            "served": served_prev,
-            "served_per_step": per_step_prev,
-            "admitted": admitted,
-            "prefilling": len(self._cursors),
-            "finished_total": len(self.finished),
-            "blocking_syncs": self.blocking_syncs,
-        }
+        return self._slot_stats(n_active, served_prev,
+                                served_per_step=per_step_prev,
+                                admitted=admitted)
 
 
 class PagedEngine(Engine):
@@ -1109,7 +1257,8 @@ class PagedEngine(Engine):
     freeing pages one slot late.
     """
 
-    def __init__(self, cfg: ModelConfig, params, ecfg: PagedEngineConfig):
+    def __init__(self, cfg: ModelConfig, params, ecfg: PagedEngineConfig,
+                 obs=None):
         if not paged_segments_supported(cfg):
             raise ValueError(f"{cfg.name}: paged decode needs an all-attention stack")
         if ecfg.shape_window is not None:
@@ -1118,6 +1267,9 @@ class PagedEngine(Engine):
         if P % ps:
             raise ValueError(f"prompt_len {P} must be a multiple of page_size {ps}")
         self.cfg, self.params, self.ecfg = cfg, params, ecfg
+        self.obs = obs or OBS_OFF
+        self.obs_pid = 0
+        self._now = 0
         self.MP = ecfg.max_pages_per_req or max(ecfg.cache_len // ps, P // ps + 1)
         self._sig = _DecodeSig.of(ecfg)
         self._ragged = ecfg.ragged_prefill and ragged_prefill_supported(cfg)
@@ -1158,10 +1310,35 @@ class PagedEngine(Engine):
         self.alloc_failures = 0       # admissions deferred: pool exhausted
         self.preemptions = 0          # active requests bounced for pages
         self.peak_active = 0
+        self.eviction_raced_hits = 0  # prefix hits degraded by racing evictions
         # high-water occupancy of the last control slot (post-admission,
         # pre-retirement) — the commitment peak the controller must price;
         # end-of-slot occupancy dips as finished requests free pages.
         self.occupancy_hwm = 0.0
+
+    # ----------------------------------------------------- observability
+    def counters(self) -> dict:
+        c = super().counters()
+        st = self.allocator.stats()
+        c.update(
+            occupancy=self.allocator.occupancy(),
+            committed_occupancy=self.allocator.committed_occupancy(),
+            pages_used=st.used_pages,
+            pages_free=st.free_pages,
+            pages_shared=st.shared_pages,
+            pages_pinned=st.pinned_pages,
+            frag_tokens=st.frag_tokens,
+            peak_pages=st.peak_used_pages,
+        )
+        if self._prefix is not None:
+            c.update(prefix_inserted_pages=self._prefix.inserted_pages,
+                     prefix_evicted_pages=self._prefix.evicted_pages)
+        return c
+
+    def _slot_stats(self, n_active: int, served: int, **extra) -> dict:
+        d = super()._slot_stats(n_active, served, **extra)
+        d["occupancy"] = self.occupancy()
+        return d
 
     # ------------------------------------------------------------------
     def occupancy(self) -> float:
@@ -1204,6 +1381,7 @@ class PagedEngine(Engine):
         if not self._evict_short(short):
             return None, shared
         if any(self.allocator.refcount(p) <= 0 for p in shared):
+            self._raced_hit(row, "shared-page-evicted")
             shared = []
         return self.allocator.alloc(row, tokens, shared=shared), shared
 
@@ -1232,9 +1410,14 @@ class PagedEngine(Engine):
         for j, (s, d) in enumerate(self._fork_plan.values()):
             src[j], dst[j] = s, d
         self._fork_plan.clear()
+        tr = self.obs.trace
+        t0 = tr.now() if tr.enabled else 0.0
         self.pools = _fork_pages(self.pools, jnp.asarray(src),
                                  jnp.asarray(dst))
         self.fork_dispatches += 1
+        if tr.enabled:
+            tr.emit("dispatch", slot=self._now, pid=self.obs_pid, ts=t0,
+                    dur=tr.now() - t0, what="fork", rows=j + 1)
 
     def step(self, now: int) -> dict:
         raise NotImplementedError("the paged engine has no legacy per-step path")
@@ -1248,6 +1431,7 @@ class PagedEngine(Engine):
         self.finished.append(req)
         self.active[row] = None
         self._release_row(row)
+        self._emit_retire(req, row, now)
 
     def _release_row(self, row: int) -> None:
         self.allocator.free(row)   # refcounted: shared prefix pages survive
@@ -1266,10 +1450,15 @@ class PagedEngine(Engine):
         self._release_row(row)
         self.active[row] = None
         req.generated = None
+        req.admit_slot = None
         req.start_slot = None
         req.first_token_slot = None
         self.pending.insert(0, req)
         self.preemptions += 1
+        tr = self.obs.trace
+        if tr.enabled:
+            tr.emit("preemption", slot=self._now, rid=req.rid, row=row,
+                    pid=self.obs_pid, what="decode")
 
     def admit_pending(self, now: int, lookahead: int = 1, sync: bool = False) -> int:
         """Fill free rows from the pending queue with ONE bucketed prefill.
@@ -1338,10 +1527,15 @@ class PagedEngine(Engine):
             page_idx[j, : n_shared] = self.ecfg.num_pages
         # cache_len == bucket: the dense prefill cache is exactly the prompt
         # rows, ready to scatter into pages (no ring wraparound).
+        tr = self.obs.trace
+        t0 = tr.now() if tr.enabled else 0.0
         logits, state = self._run_prefill(
             {"tokens": jnp.asarray(toks)}, lens, bucket)
         self.prefill_dispatches += 1
         self.pools = _paged_splice(self.pools, state.caches, jnp.asarray(page_idx))
+        if tr.enabled:
+            tr.emit("dispatch", slot=now, pid=self.obs_pid, ts=t0,
+                    dur=tr.now() - t0, what="prefill", rows=len(take))
         if sync:
             rows_arr = np.full(R, R, np.int32)
             budgets = np.zeros(R, np.int32)
@@ -1358,6 +1552,7 @@ class PagedEngine(Engine):
             req.start_slot = now
             req.first_token_slot = now
             req.generated = None if sync else [int(first[j])]
+            self._emit_admission(req, row, now)
             self.active[row] = req
             self.block_tables[row, : len(pages)] = pages
             self.pos[row] = L
@@ -1403,12 +1598,15 @@ class PagedEngine(Engine):
     def step_slot(self, now: int, n_steps: int = 1) -> dict:
         """One control slot: batched admit -> page extension -> scan decode
         -> retire (pages freed). <= 1 prefill + 1 decode dispatch."""
+        self._now = now
         admitted = self.admit_pending(now, lookahead=n_steps)
         self._ensure_pages(n_steps)
         self.occupancy_hwm = self.occupancy()
         n_active = sum(r is not None for r in self.active)
         per_step = [0] * n_steps
         if n_active:
+            tr = self.obs.trace
+            t0 = tr.now() if tr.enabled else 0.0
             toks = jnp.asarray(
                 [r.generated[-1] if r else 0 for r in self.active], jnp.int32
             )
@@ -1426,6 +1624,9 @@ class PagedEngine(Engine):
             self.pools = state.pools
             self.decode_dispatches += 1
             self.blocking_syncs += 1
+            if tr.enabled:
+                tr.emit("dispatch", slot=now, pid=self.obs_pid, ts=t0,
+                        dur=tr.now() - t0, what="decode", n=n_steps)
             all_toks = np.asarray(all_toks)  # (n_steps, R)
             for row, req in enumerate(self.active):
                 if req is None:
@@ -1442,16 +1643,8 @@ class PagedEngine(Engine):
         served = sum(per_step)
         self.served_history.append(served)
         self.steps += n_steps
-        return {
-            "active": n_active,
-            "queue": len(self.pending),
-            "served": served,
-            "served_per_step": per_step,
-            "admitted": admitted,
-            "finished_total": len(self.finished),
-            "occupancy": self.occupancy(),
-            "preemptions": self.preemptions,
-        }
+        return self._slot_stats(n_active, served, served_per_step=per_step,
+                                admitted=admitted)
 
     def step_slot_sync(self, now: int, n_steps: int = 1) -> dict:
         """Sync-free control slot over the paged pool: admit (pages + device
@@ -1463,6 +1656,7 @@ class PagedEngine(Engine):
         over-covers by <= n_steps rows, i.e. at most one page, returned
         when the row frees). The decode dispatch never waits on the device.
         """
+        self._now = now
         prev, self._pending_read = self._pending_read, None
         early = prev is not None and self._readback_ready(prev)
         served_prev, per_step_prev = (self._consume_read(prev) if early
@@ -1472,6 +1666,8 @@ class PagedEngine(Engine):
         self.occupancy_hwm = self.occupancy()
         n_active = sum(r is not None for r in self.active)
         if n_active:
+            tr = self.obs.trace
+            t0 = tr.now() if tr.enabled else 0.0
             # .copy(): jnp.asarray may alias the numpy buffer (CPU zero-copy)
             # and this path never blocks — the host mutates pos/block_tables
             # before the async decode is guaranteed to have read them.
@@ -1491,6 +1687,9 @@ class PagedEngine(Engine):
             )
             self.pools = state.pools
             self.decode_dispatches += 1
+            if tr.enabled:
+                tr.emit("dispatch", slot=now, pid=self.obs_pid, ts=t0,
+                        dur=tr.now() - t0, what="decode", n=n_steps)
             for row, req in enumerate(self.active):
                 if req is not None:
                     self.pos[row] += n_steps
@@ -1499,17 +1698,9 @@ class PagedEngine(Engine):
             served_prev, per_step_prev = self._consume_read(prev)
         self.served_history.append(served_prev)
         self.steps += n_steps
-        return {
-            "active": n_active,
-            "queue": len(self.pending),
-            "served": served_prev,
-            "served_per_step": per_step_prev,
-            "admitted": admitted,
-            "finished_total": len(self.finished),
-            "occupancy": self.occupancy(),
-            "preemptions": self.preemptions,
-            "blocking_syncs": self.blocking_syncs,
-        }
+        return self._slot_stats(n_active, served_prev,
+                                served_per_step=per_step_prev,
+                                admitted=admitted)
 
     # --------------------------------------- continuous batching (chunked)
     def _validate_chunked(self, req: Request) -> None:
@@ -1566,10 +1757,13 @@ class PagedEngine(Engine):
             # the fork source is pin-only (refcount 1) and could have been
             # reclaimed by this very allocation's eviction retry — fork only
             # if its pin survives (a still-pinned page is still the node's)
-            if fork_len > 0 and self.allocator.pages[hit.fork_src].pinned:
-                self._fork_plan[row] = (hit.fork_src, pages[-1])
-                self.prefix_forks += 1
-                cached += fork_len
+            if fork_len > 0:
+                if self.allocator.pages[hit.fork_src].pinned:
+                    self._fork_plan[row] = (hit.fork_src, pages[-1])
+                    self.prefix_forks += 1
+                    cached += fork_len
+                else:
+                    self._raced_hit(row, "fork-source-evicted")
         self.block_tables[row, : len(pages)] = pages
         self.pos[row] = cached   # chunk writes resume past the resident rows
         self.prefix_hits += cached
@@ -1611,10 +1805,15 @@ class PagedEngine(Engine):
         self._release_row(row)
         self.active[row] = None
         req.generated = None
+        req.admit_slot = None
         req.start_slot = None
         req.first_token_slot = None
         self.pending.insert(0, req)
         self.preemptions += 1
+        tr = self.obs.trace
+        if tr.enabled:
+            tr.emit("preemption", slot=self._now, rid=req.rid, row=row,
+                    pid=self.obs_pid, what="prefill", off=cur.off)
 
     def step_slot_chunked(self, now: int, n_steps: int = 1) -> dict:
         """Continuous batching over the paged pool: one mixed dispatch per
@@ -1623,6 +1822,7 @@ class PagedEngine(Engine):
         at schedule time; decode rows pre-extend as in the sync-free path.
         """
         self._require_chunked()
+        self._now = now
         prev, self._pending_read = self._pending_read, None
         early = prev is not None and self._readback_ready(prev)
         served_prev, per_step_prev = (self._consume_read(prev) if early
@@ -1646,6 +1846,8 @@ class PagedEngine(Engine):
         decoding = any(r is not None and row not in self._cursors
                        for row, r in enumerate(self.active))
         if plan is not None or decoding:
+            tr = self.obs.trace
+            t0 = tr.now() if tr.enabled else 0.0
             # .copy(): see step_slot_sync — the non-blocking loop mutates
             # pos/block_tables before the async dispatch must have read them
             state = M.PagedDecodeState(
@@ -1670,6 +1872,12 @@ class PagedEngine(Engine):
                 )
             self.pools = state.pools
             self.decode_dispatches += 1
+            if tr.enabled:
+                tr.emit("dispatch", slot=now, pid=self.obs_pid, ts=t0,
+                        dur=tr.now() - t0,
+                        what="mixed" if plan is not None else "decode",
+                        n=n_steps,
+                        chunk_rows=len(plan["plan"]) if plan else 0)
             for row, req in enumerate(self.active):
                 if req is not None and row not in self._cursors:
                     self.pos[row] += n_steps   # decode rows (host mirror)
@@ -1685,18 +1893,9 @@ class PagedEngine(Engine):
             served_prev, per_step_prev = self._consume_read(prev)
         self.served_history.append(served_prev)
         self.steps += n_steps
-        return {
-            "active": n_active,
-            "queue": len(self.pending),
-            "served": served_prev,
-            "served_per_step": per_step_prev,
-            "admitted": admitted,
-            "prefilling": len(self._cursors),
-            "finished_total": len(self.finished),
-            "occupancy": self.occupancy(),
-            "preemptions": self.preemptions,
-            "blocking_syncs": self.blocking_syncs,
-        }
+        return self._slot_stats(n_active, served_prev,
+                                served_per_step=per_step_prev,
+                                admitted=admitted)
 
 
 def _slice_extra(extra: dict, b: int) -> dict:

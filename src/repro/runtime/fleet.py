@@ -49,7 +49,15 @@ from __future__ import annotations
 import numpy as np
 
 from repro.control.router import FleetRouter, ReplicaLoad
+from repro.obs import OBS_OFF
 from repro.runtime.engine import Engine
+
+# counters() keys that are levels, not totals: fleet aggregation takes the
+# max over live replicas (worst replica) instead of summing
+_MAX_KEYS = frozenset({
+    "occupancy", "occupancy_hwm", "committed_occupancy",
+    "peak_active", "peak_pages",
+})
 
 
 class ReplicaFleet:
@@ -68,7 +76,7 @@ class ReplicaFleet:
     }
 
     def __init__(self, replicas: list, router: FleetRouter | None = None,
-                 modes: list | None = None):
+                 modes: list | None = None, obs=None):
         if not replicas:
             raise ValueError("a fleet needs at least one replica")
         if modes is not None and len(modes) != len(replicas):
@@ -80,6 +88,16 @@ class ReplicaFleet:
         self.replicas = list(replicas)
         self.router = router or FleetRouter()
         self.modes = list(modes) if modes is not None else None
+        # one bundle for the whole fleet: replicas that were not handed
+        # their own get the fleet's, tagged with their index as the trace
+        # pid (one Perfetto process lane per replica)
+        self.obs = obs or OBS_OFF
+        for i, e in enumerate(self.replicas):
+            e.obs_pid = i
+            if obs is not None and e.obs is OBS_OFF:
+                e.obs = self.obs
+        if obs is not None and getattr(self.router, "decisions", None) is None:
+            self.router.decisions = self.obs.decisions
         n = len(self.replicas)
         self.alive = [True] * n       # failed replicas are never stepped again
         self.routable = [True] * n    # draining replicas step but get no work
@@ -99,11 +117,11 @@ class ReplicaFleet:
     # ------------------------------------------------------------ builders
     @classmethod
     def build(cls, make_engine, n: int, router: FleetRouter | None = None,
-              modes: list | None = None) -> "ReplicaFleet":
+              modes: list | None = None, obs=None) -> "ReplicaFleet":
         """Fleet of ``n`` replicas from a zero-arg engine factory (equal
         geometry => the module-level jit cache gives them one compile)."""
         return cls([make_engine() for _ in range(n)], router=router,
-                   modes=modes)
+                   modes=modes, obs=obs)
 
     # ------------------------------------------------------- observations
     def queue_len(self) -> int:
@@ -166,6 +184,39 @@ class ReplicaFleet:
 
         return latency_stats(self)
 
+    # ------------------------------------------------------------- metrics
+    def counters(self) -> dict:
+        """Label-wise aggregation of every replica's ``counters()``: levels
+        (``_MAX_KEYS``) fold by max over live replicas, totals sum over all
+        (a dead replica's work still happened), plus fleet-only keys."""
+        per = [e.counters() for e in self.replicas]
+        out: dict = {}
+        for key in per[0]:
+            if key in _MAX_KEYS:
+                vals = [c[key] for c, a in zip(per, self.alive, strict=True)
+                        if a]
+                out[key] = max(vals) if vals else 0
+            else:
+                out[key] = sum(c[key] for c in per)
+        out["replicas"] = len(self.replicas)
+        out["replicas_alive"] = self.n_healthy()
+        out["requeues"] = self.requeues
+        out["failures"] = self.failures
+        out["routed_total"] = len(self.router.routed)
+        return out
+
+    def export_metrics(self, labels: dict | None = None) -> None:
+        """Publish per-replica counters (labeled ``replica="i"``) plus the
+        fleet-only aggregates (unlabeled — they share no name with the
+        labeled per-replica families, so registration never collides)."""
+        base = dict(labels or {})
+        for i, e in enumerate(self.replicas):
+            e.export_metrics({**base, "replica": str(i)})
+        agg = self.counters()
+        self.obs.export({k: agg[k] for k in ("replicas", "replicas_alive",
+                                             "requeues", "failures",
+                                             "routed_total")}, base or None)
+
     # ------------------------------------------------------------ routing
     def _load_of(self, eng: Engine) -> ReplicaLoad:
         return ReplicaLoad(
@@ -203,6 +254,10 @@ class ReplicaFleet:
             i = self.router.route(loads, mask, self._prefs, affinity=aff)
             hit = int(aff[i]) if aff is not None else 0
             self.router.charge(loads, i, len(req.tokens), hit_tokens=hit)
+            tr = self.obs.trace
+            if tr.enabled:
+                tr.emit("route", slot=req.arrival_slot, rid=req.rid, pid=i,
+                        replica=i, affinity_hit=hit)
             self.replicas[i].submit([req])
 
     # ------------------------------------------------------------ serving
@@ -256,6 +311,7 @@ class ReplicaFleet:
         release the rows they held. Returns them in admission order."""
         eng = self.replicas[i]
         requeued = []
+        tr = self.obs.trace
         # in-flight readbacks reference rows we are about to recycle; the
         # packet is dropped, so those completions can never double-land
         eng._pending_read = None
@@ -267,9 +323,15 @@ class ReplicaFleet:
             eng.slot_age[row] = 0
             eng._release_row(row)     # paged: pages back to the pool
             req.generated = None
+            req.admit_slot = None
             req.start_slot = None
             req.first_token_slot = None
             requeued.append(req)
+            if tr.enabled:
+                tr.emit("requeue", rid=req.rid, row=row, pid=i, what="active")
+        if tr.enabled:
+            for req in eng.pending:
+                tr.emit("requeue", rid=req.rid, pid=i, what="pending")
         requeued.extend(eng.pending)
         eng.pending.clear()
         return requeued

@@ -24,11 +24,13 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.control import (DriftPlusPenalty, LatencyAware, MemoryAware,
                            Policy, Static, TokenBacklogAware)
 from repro.control.policy import drift_plus_penalty_action
 from repro.core.utility import Utility, paper_utility
+from repro.obs import explain_tables
 
 # trace counter for the no-retrace regression test: the body runs only when
 # jax traces (not on cached calls), so this counts compiles, not calls.
@@ -68,6 +70,11 @@ class PolicyScheduler:
 
     policy: Policy = None  # type: ignore[assignment]
     capacity: int = 256
+    # optional Observability bundle (repro.obs): when its DecisionLog is
+    # live, every control-slot argmax is recorded with its host-recomputed
+    # drift/penalty decomposition — off the decision path, after the jitted
+    # dispatch, so recording never changes what the engine sees
+    obs: Optional[object] = None
 
     def __post_init__(self):
         if self.policy is None:
@@ -101,6 +108,13 @@ class PolicyScheduler:
             self._cost_tab = jax.device_put(
                 jnp.float32(cost) * f if cost else jnp.zeros_like(f)
             )
+            # host float32 mirrors of the tables for decision recording
+            # (same IEEE arithmetic as the device dispatch)
+            self._f_np = np.asarray(f, np.float32)
+            self._s_np = np.asarray(s, np.float32)
+            self._lam_np = np.asarray(lam, np.float32)
+            self._cost_np = np.float32(cost) * self._f_np
+        self._decisions = self.obs.decisions if self.obs is not None else None
         self._carry = self.policy.init()
         self.dropped = 0
         self.rate_history: list = []
@@ -126,12 +140,38 @@ class PolicyScheduler:
         page-pool fill fraction) and ``token_backlog`` (pending prompt
         tokens) feed observation-driven virtual queues via ``_observe``."""
         self._observe(occupancy, token_backlog)
+        d = self._decisions
+        rec = d is not None and d.enabled
+        vq = self._vq_value() if rec else 0.0
         if self._static_rate is not None:  # no device round-trip for baselines
             f = float(self._static_rate)
         else:
             f = float(self._dispatch_decision(backlog))
         self.rate_history.append(f)
+        if rec:
+            self._record(backlog, vq, f, lagged=False)
         return f
+
+    def _vq_value(self) -> float:
+        return float(np.asarray(getattr(self._carry, "value", 0.0)))
+
+    def _record(self, backlog, vq: float, applied: float,
+                lagged: bool) -> None:
+        """Log one control decision with its host-recomputed decomposition
+        (table policies only have one; others record the scalar inputs)."""
+        V = float(getattr(self.policy, "V", 0.0))
+        t = len(self.rate_history) - 1
+        if self._table_path:
+            ex = explain_tables(float(backlog), self._f_np, self._s_np,
+                                self._lam_np, V, vq=vq,
+                                cost_tab=self._cost_np)
+            self._decisions.record_rate(
+                t=t, backlog=float(backlog), vq=vq, V=V, chosen=applied,
+                rates=ex["rates"], drift=ex["drift"], penalty=ex["penalty"],
+                argmax=ex["argmax"], lagged=lagged)
+        else:
+            self._decisions.record_rate(t=t, backlog=float(backlog), vq=vq,
+                                        V=V, chosen=applied, lagged=lagged)
 
     def _dispatch_decision(self, backlog: int):
         """Evaluate the policy on device; return the (unread) decision."""
@@ -159,9 +199,14 @@ class PolicyScheduler:
         arrivals/services). The first call blocks once to seed the pipeline;
         Static policies short-circuit with no device work at all."""
         self._observe(occupancy, token_backlog)
+        d = self._decisions
+        rec = d is not None and d.enabled
+        vq = self._vq_value() if rec else 0.0
         if self._static_rate is not None:
             f = float(self._static_rate)
             self.rate_history.append(f)
+            if rec:
+                self._record(backlog, vq, f, lagged=False)
             return f
         f_star = self._dispatch_decision(backlog)
         try:
@@ -171,6 +216,10 @@ class PolicyScheduler:
         prev, self._pending_rate = self._pending_rate, f_star
         f = float(prev if prev is not None else f_star)
         self.rate_history.append(f)
+        if rec:
+            # the applied rate is the previous slot's decision; the recorded
+            # decomposition explains THIS slot's argmax (chosen may differ)
+            self._record(backlog, vq, f, lagged=True)
         return f
 
     def admit(self, engine, reqs: list, now: int) -> list:
@@ -188,18 +237,21 @@ def AdaptiveScheduler(
     V: float = 50.0,
     utility: Optional[Utility] = None,
     capacity: int = 256,
+    obs=None,
 ) -> PolicyScheduler:
     """Algorithm-1 scheduler (historical constructor)."""
     policy = DriftPlusPenalty(
         rates=tuple(float(f) for f in rates), V=V,
         utility=utility or paper_utility(max(rates)),
     )
-    return PolicyScheduler(policy=policy, capacity=capacity)
+    return PolicyScheduler(policy=policy, capacity=capacity, obs=obs)
 
 
-def StaticScheduler(rate: float = 10.0, capacity: int = 256) -> PolicyScheduler:
+def StaticScheduler(rate: float = 10.0, capacity: int = 256,
+                    obs=None) -> PolicyScheduler:
     """Paper baseline: fixed sampling rate, no queue awareness."""
-    return PolicyScheduler(policy=Static(rate=float(rate)), capacity=capacity)
+    return PolicyScheduler(policy=Static(rate=float(rate)),
+                           capacity=capacity, obs=obs)
 
 
 def TokenAwareScheduler(
@@ -209,6 +261,7 @@ def TokenAwareScheduler(
     token_budget: float = 64.0,
     tok_gain: float = 1.0,
     capacity: int = 256,
+    obs=None,
 ) -> PolicyScheduler:
     """Algorithm-1 scheduler that also prices pending prompt tokens (pairs
     with the continuous-batching engines' ``token_backlog()`` observation)."""
@@ -217,7 +270,7 @@ def TokenAwareScheduler(
         tokens_per_request=tokens_per_request,
         token_budget=token_budget, tok_gain=tok_gain,
     )
-    return PolicyScheduler(policy=policy, capacity=capacity)
+    return PolicyScheduler(policy=policy, capacity=capacity, obs=obs)
 
 
 def MemoryAwareScheduler(
@@ -227,6 +280,7 @@ def MemoryAwareScheduler(
     occupancy_budget: float = 0.6,
     mem_gain: float = 1.0,
     capacity: int = 256,
+    obs=None,
 ) -> PolicyScheduler:
     """Algorithm-1 scheduler that also prices page-pool occupancy."""
     policy = MemoryAware(
@@ -234,4 +288,4 @@ def MemoryAwareScheduler(
         pages_per_request=pages_per_request,
         occupancy_budget=occupancy_budget, mem_gain=mem_gain,
     )
-    return PolicyScheduler(policy=policy, capacity=capacity)
+    return PolicyScheduler(policy=policy, capacity=capacity, obs=obs)

@@ -97,12 +97,17 @@ def latency_stats(engine: Engine) -> dict:
     admission-to-first-token (arrival to the slot whose dispatch emitted the
     first generated token) — the latency prefix caching attacks: a cached
     prefix skips its prefill chunks, so the activating dispatch arrives
-    slots earlier. Also reports ``admitted_but_unfinished``: requests
+    slots earlier. ``queue_wait`` is arrival-to-engine-claim (admit_slot is
+    stamped when the engine claims a row, and re-stamped after a
+    preemption or fleet requeue, so it prices the *last* wait the request
+    actually paid). Also reports ``admitted_but_unfinished``: requests
     holding an engine row or queue slot at shutdown (a drain/accounting
     leak shows up here).
     """
     waits = [r.start_slot - r.arrival_slot for r in engine.finished
              if r.start_slot is not None]
+    qwaits = [r.admit_slot - r.arrival_slot for r in engine.finished
+              if r.admit_slot is not None]
     totals = [r.finish_slot - r.arrival_slot for r in engine.finished
               if r.finish_slot is not None]
     ttfts = [r.first_token_slot - r.arrival_slot for r in engine.finished
@@ -116,6 +121,9 @@ def latency_stats(engine: Engine) -> dict:
     if waits:
         out["wait_p50"] = float(np.percentile(waits, 50))
         out["wait_p99"] = float(np.percentile(waits, 99))
+    if qwaits:
+        out["queue_wait_p50"] = float(np.percentile(qwaits, 50))
+        out["queue_wait_p99"] = float(np.percentile(qwaits, 99))
     if ttfts:
         out["ttft_p50"] = float(np.percentile(ttfts, 50))
         out["ttft_p99"] = float(np.percentile(ttfts, 99))

@@ -117,16 +117,16 @@ MODES = [
 
 
 def _mk_engine(kind, cfg, params, eos_id=None, tight=False, chunk_size=0,
-               chunk_budget=0):
+               chunk_budget=0, obs=None):
     if kind == "dense":
         return Engine(cfg, params, EngineConfig(
             batch_slots=4, prompt_len=16, cache_len=64, eos_id=eos_id,
-            chunk_size=chunk_size, chunk_budget=chunk_budget))
+            chunk_size=chunk_size, chunk_budget=chunk_budget), obs=obs)
     return PagedEngine(cfg, params, PagedEngineConfig(
         prompt_len=16, cache_len=64, page_size=8,
         num_pages=10 if tight else 32, max_active=6, eos_id=eos_id,
         prefix_sharing=(kind == "shared"),
-        chunk_size=chunk_size, chunk_budget=chunk_budget))
+        chunk_size=chunk_size, chunk_budget=chunk_budget), obs=obs)
 
 
 def drive(eng, mode, reqs, schedule, n_steps=2, max_slots=300):
@@ -316,6 +316,57 @@ def test_differential_fleet_router_kinds(router_kind):
                                                  schedule)
     assert streams == ref_streams and retired == ref_retired
     assert served == finished == len(reqs)
+
+
+@pytest.mark.parametrize("kind,mode", MODES)
+def test_differential_observability_bit_identical(kind, mode):
+    """PR-7's hard constraint, cell by cell: running any engine x mode with
+    the FULL telemetry bundle live (trace ring + metrics registry +
+    decision log) produces byte-identical streams, retirement sets, and
+    served counts to the same run with observability off. Recording is
+    host-side and pull-based; the jitted dispatches never see it."""
+    from repro.obs import observability
+
+    cfg, params = _setup()
+    reqs, schedule = make_shared_workload(seed=31, n_reqs=8)
+    kw = {"chunk_size": 4} if mode == "chunked" else {}
+    off = drive(_mk_engine(kind, cfg, params, **kw), mode, reqs, schedule)
+    obs = observability()
+    eng = _mk_engine(kind, cfg, params, obs=obs, **kw)
+    on = drive(eng, mode, reqs, schedule)
+    assert on == off, (kind, mode)
+    # and the run actually recorded: one arrival + retirement per request
+    ev = obs.trace.events()
+    assert sum(e["kind"] == "arrival" for e in ev) == len(reqs)
+    assert sum(e["kind"] == "retirement" for e in ev) == len(reqs)
+    eng.export_metrics()
+    assert obs.registry.snapshot()["repro_requests_finished"] == len(reqs)
+
+
+def test_differential_fleet_observability_bit_identical():
+    """Same contract one level up: a traced, metered, decision-logged
+    fleet (prefix-sharing replicas, drift router) merges the same streams
+    as the untraced fleet AND the single-engine reference."""
+    from repro.obs import observability
+
+    cfg, params = _setup()
+    reqs, schedule = make_shared_workload(seed=37, n_reqs=12)
+    ref = drive(_mk_engine("dense", cfg, params), "fused", reqs, schedule)
+    runs = {}
+    for tag in ("off", "on"):
+        obs = observability() if tag == "on" else None
+        router = FleetRouter(kind="drift",
+                             decisions=obs.decisions if obs else None)
+        fleet = ReplicaFleet.build(
+            lambda: _mk_engine("shared", cfg, params, obs=obs), 2,
+            router=router, obs=obs)
+        runs[tag] = drive(fleet, "sync", reqs, schedule)
+        if obs is not None:
+            assert sum(e["kind"] == "route"
+                       for e in obs.trace.events()) == len(reqs)
+            assert len(obs.decisions.routes) == len(reqs)
+    assert runs["on"] == runs["off"]
+    assert runs["on"][0] == ref[0] and runs["on"][1] == ref[1]
 
 
 def test_chunked_dispatch_budget_and_no_hol_stall():
