@@ -787,6 +787,135 @@ def bench_observability(quick=False):
     return us, derived
 
 
+def bench_overload_slo(quick=False):
+    """Two-tier overload: does the reliability layer (DESIGN.md §12) keep
+    the high tier's TTFT deadline that admission-blind baselines miss?
+
+    The trace oversubscribes a 4-row dense engine for a burst window —
+    each slot brings several low-priority ``bulk`` requests plus one
+    ``gold`` request with a tight first-token deadline. All three
+    schedulers see the identical trace and engine geometry; the only
+    difference is the control plane. Static and LatencyAware admit FIFO
+    until the queue cap silently drops the overflow, so gold requests
+    either queue behind bulk past their deadline or are dropped outright.
+    ConformalSLO + SLOScheduler arm the degradation ladder instead: expired
+    bulk is dropped from the queue, the bulk tier of each overloaded slot's
+    arrivals is shed, and admissions are capped highest-tier-first — every
+    shed recorded, none silent.
+
+    Attainment is computed over every gold request the trace *created*
+    (shed or dropped = missed), not just the survivors — the honest
+    denominator. All TTFTs are in control slots, so the attainment numbers
+    are deterministic; the smoke gate fails (SLO_VIOLATION) if conformal
+    misses the target or stops beating both baselines, and the checked-in
+    ``attainment_gold`` gates regressions. us_per_call = conformal us per
+    control slot (wall-clock, reported not gated).
+    """
+    import copy
+
+    from repro.configs import get_config
+    from repro.control import LatencyAware
+    from repro.models import init_params
+    from repro.reliability import ConformalScheduler, TenantSLO
+    from repro.runtime import (Engine, EngineConfig, PolicyScheduler,
+                               StaticScheduler)
+    from repro.runtime.request import Request
+
+    cfg = get_config("granite-3-2b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    gold_deadline, bulk_deadline = 6, 10
+    burst_slots = 10 if quick else 16
+    bulk_per_slot = 4
+    max_slots = burst_slots + 120
+    capacity = 8
+
+    rng = np.random.default_rng(7)
+
+    def req(rid, t, tenant, priority, deadline):
+        return Request(rid=rid, arrival_slot=t,
+                       tokens=rng.integers(0, cfg.vocab_size, 12,
+                                           dtype=np.int32),
+                       max_new_tokens=4, tenant=tenant, priority=priority,
+                       deadline_slots=deadline)
+
+    trace, rid = {}, 0
+    for t in range(burst_slots):
+        batch = []
+        for _ in range(bulk_per_slot):
+            batch.append(req(rid, t, "bulk", 0, bulk_deadline))
+            rid += 1
+        batch.append(req(rid, t, "gold", 1, gold_deadline))
+        rid += 1
+        trace[t] = batch
+    n_gold = burst_slots
+
+    def mk_engine():
+        return Engine(cfg, params, EngineConfig(
+            batch_slots=4, prompt_len=16, cache_len=64))
+
+    def run(sched):
+        eng = mk_engine()
+        t0 = time.perf_counter()
+        t = 0
+        while t < max_slots:
+            # control() drives the policy's observation (TTFT calibration
+            # for conformal); its rate is not used to throttle the offer —
+            # the ladder/capacity is the admission control under test
+            sched.control(eng.queue_len())
+            arrivals = [copy.deepcopy(r) for r in trace.get(t, [])]
+            sched.admit(eng, arrivals, t)
+            eng.step_slot(t, n_steps=2)
+            t += 1
+            if (t > burst_slots and not eng.pending
+                    and all(r is None for r in eng.active)):
+                break
+        dt = time.perf_counter() - t0
+        ontime = {"gold": 0, "bulk": 0}
+        for r in eng.finished:
+            if (r.first_token_slot is not None
+                    and r.first_token_slot - r.arrival_slot
+                    <= r.deadline_slots):
+                ontime[r.tenant] += 1
+        return {"gold": ontime["gold"] / n_gold,
+                "bulk": ontime["bulk"] / (burst_slots * bulk_per_slot),
+                "slots": t, "dt": dt}
+
+    rates = tuple(float(f) for f in range(1, 7))
+    conf_sched = ConformalScheduler(
+        rates=rates, V=20.0,
+        tenants=(TenantSLO("gold", gold_deadline, quantile=0.99, priority=1),
+                 TenantSLO("bulk", bulk_deadline, quantile=0.5, weight=0.1)),
+        window=64, capacity=capacity,
+        # arm the ladder early: a 4-row engine is already overloaded when
+        # two slots' worth of arrivals are queued
+        overload_backlog_frac=0.25, cap_backlog_frac=0.75)
+    conf = run(conf_sched)
+    static = run(StaticScheduler(rate=6.0, capacity=capacity))
+    lat = run(PolicyScheduler(
+        policy=LatencyAware(rates=rates, V=20.0, cost_gain=1.0,
+                            cost_budget=4.0),
+        capacity=capacity))
+
+    target = 0.99
+    c = conf_sched.counters()
+    us = conf["dt"] / conf["slots"] * 1e6
+    derived = (
+        f"attainment_gold={conf['gold']:.3f};target={target}"
+        f";ontime_gold_static={static['gold']:.3f}"
+        f";ontime_gold_latency={lat['gold']:.3f}"
+        f";ontime_bulk_conformal={conf['bulk']:.3f}"
+        f";shed_expired={c['requests_shed_expired']}"
+        f";shed_priority={c['requests_shed_priority']}"
+        f";shed_capped={c['requests_shed_capped']}"
+        f";dropped_capacity={c['requests_dropped_capacity']}"
+        f";slots_conformal={conf['slots']};slots_static={static['slots']}"
+    )
+    if conf["gold"] < target or conf["gold"] <= max(static["gold"],
+                                                    lat["gold"]):
+        derived = "SLO_VIOLATION;" + derived
+    return us, derived
+
+
 def bench_flash_attention(quick=False):
     """XLA flash path per-call time + kernel/oracle agreement."""
     from repro.kernels import ops
@@ -850,7 +979,7 @@ def bench_roofline_table():
 # one-dispatch budget.
 SMOKE_BENCHES = ("controller_overhead", "paged_vs_dense_decode",
                  "serve_sync_free", "continuous_batching", "fleet_scaling",
-                 "prefix_sharing", "observability")
+                 "prefix_sharing", "observability", "overload_slo")
 
 # ------------------------------------------------- benchmark-regression gate
 # `--check-against baseline.json[,baseline2.json]` compares this run's rows
@@ -861,7 +990,7 @@ SMOKE_BENCHES = ("controller_overhead", "paged_vs_dense_decode",
 # lower-is-better. Absolute throughputs (tps/rps) and us_per_call are
 # machine-bound — comparing them across the baseline machine and a CI
 # runner would gate on hardware, not code — so they are never compared.
-_HIGHER_BETTER = ("speedup", "scaling")
+_HIGHER_BETTER = ("speedup", "scaling", "attainment")
 _LOWER_BETTER = ("disp_per_slot", "syncs_per_slot")
 
 
@@ -976,6 +1105,7 @@ def main() -> None:
         ("fleet_scaling", lambda: bench_fleet_scaling(args.quick)),
         ("prefix_sharing", lambda: bench_prefix_sharing(args.quick)),
         ("observability", lambda: bench_observability(args.quick)),
+        ("overload_slo", lambda: bench_overload_slo(args.quick)),
         ("flash_attention_xla", lambda: bench_flash_attention(args.quick)),
         ("ssd_scan_xla", lambda: bench_ssd_scan(args.quick)),
         ("roofline_table", bench_roofline_table),
@@ -1019,7 +1149,8 @@ def main() -> None:
     if args.smoke and any(r["us_per_call"] is None or
                           r["derived"].startswith(("TOKEN_MISMATCH",
                                                    "SYNC_VIOLATION",
-                                                   "DISPATCH_VIOLATION"))
+                                                   "DISPATCH_VIOLATION",
+                                                   "SLO_VIOLATION"))
                           for r in rows):
         failed = True
     if failed:

@@ -139,6 +139,14 @@ class _TablePolicy:
     trace would cache tracers.
     """
 
+    # Virtual-queue price per unit rate: the scheduler's shared table
+    # dispatch adds  carry.value * vq_cost_per_rate * f  to the penalty.
+    # Subclasses carrying a constraint override this (property or attr);
+    # 0.0 = unconstrained. Keeping the price ON the policy is what lets new
+    # constrained policies (e.g. repro.reliability's ConformalSLO) ride the
+    # same jitted dispatch without the scheduler enumerating policy types.
+    vq_cost_per_rate: float = 0.0
+
     def __post_init__(self):
         if self.utility is None:
             object.__setattr__(self, "utility", paper_utility(max(self.rates)))
@@ -216,6 +224,10 @@ class MemoryAware(_TablePolicy):
 
     observation = "occupancy"        # the engine signal ``observe`` consumes
 
+    @property
+    def vq_cost_per_rate(self) -> float:
+        return self.mem_gain * self.pages_per_request
+
     def init(self) -> VirtualQueue:
         return VirtualQueue.make(self.occupancy_budget)
 
@@ -263,6 +275,10 @@ class TokenBacklogAware(_TablePolicy):
 
     observation = "token_backlog"
 
+    @property
+    def vq_cost_per_rate(self) -> float:
+        return self.tok_gain * self.tokens_per_request
+
     def init(self) -> VirtualQueue:
         return VirtualQueue.make(self.token_budget)
 
@@ -292,6 +308,10 @@ class LatencyAware(_TablePolicy):
     arrival_gain: float = 1.0
     cost_gain: float = 1.0
     cost_budget: float = 4.0
+
+    @property
+    def vq_cost_per_rate(self) -> float:
+        return self.cost_gain
 
     def init(self) -> VirtualQueue:
         return VirtualQueue.make(self.cost_budget)

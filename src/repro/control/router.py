@@ -131,12 +131,16 @@ class FleetRouter:
     # ------------------------------------------------------------- route
     def route(self, loads: np.ndarray, routable: Sequence[bool],
               prefs: np.ndarray,
-              affinity: Optional[np.ndarray] = None) -> int:
+              affinity: Optional[np.ndarray] = None,
+              rid=None, tenant: Optional[str] = None) -> int:
         """Pick the target replica for one request.
 
         ``loads`` are drift loads (``drift_load`` per replica, updated by
         ``charge`` as a batch routes), ``routable`` masks failed/draining
         replicas, ``prefs`` are static capacity shares in [0, 1].
+        ``rid``/``tenant`` identify the routed request in the decision log
+        (reliability post-mortems join routes to sheds per tenant); both
+        are optional and never affect the decision.
         ``affinity`` (optional, drift routing only) is the per-replica
         prefix-cache hit in prompt tokens; it enters the argmax as a load
         discount — i* = argmax_i { V*S_i - (D_i - affinity_price*hit_i) } —
@@ -155,8 +159,9 @@ class FleetRouter:
                 if routable[i]:
                     self.routed.append(i)
                     if self.decisions is not None and self.decisions.enabled:
-                        self.decisions.record_route(rid=None, chosen=i,
-                                                    kind=self.kind)
+                        self.decisions.record_route(rid=rid, chosen=i,
+                                                    kind=self.kind,
+                                                    tenant=tenant)
                     return i
         # drift / least-loaded: the route target is an Algorithm-1 argmax
         # over the replica set — i* = argmax_i { V * S_i - D_i } — with
@@ -176,7 +181,7 @@ class FleetRouter:
         if self.decisions is not None and self.decisions.enabled:
             # per-replica score vector the argmax saw: T_i = V*S_i - D_i
             self.decisions.record_route(
-                rid=None, chosen=i, kind=self.kind, V=float(v),
+                rid=rid, chosen=i, kind=self.kind, V=float(v),
                 scores=np.float32(v) * s - q, loads=loads, prefs=s,
-                affinity=affinity)
+                affinity=affinity, tenant=tenant)
         return i

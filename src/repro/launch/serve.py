@@ -35,11 +35,45 @@ from repro.configs import get_config
 from repro.control import ROUTER_KINDS, FleetRouter, LatencyAware
 from repro.models import init_params
 from repro.obs import OBS_OFF, observability
+from repro.reliability import ConformalScheduler, TenantSLO
 from repro.runtime import (AdaptiveScheduler, Engine, EngineConfig,
                            MemoryAwareScheduler, PagedEngine,
                            PagedEngineConfig, PolicyScheduler, ReplicaFleet,
-                           RequestSource, StaticScheduler,
+                           RequestSource, StaticScheduler, TenantSpec,
                            TokenAwareScheduler, latency_stats, serve)
+
+
+def _parse_tenants(spec: str, quantile: float, error):
+    """``name:frac:priority:deadline,...`` -> (TenantSpec..., TenantSLO...).
+
+    Tenants with no deadline (empty or ``-``) join the traffic mix but carry
+    no SLO virtual queue.
+    """
+    sources, slos = [], []
+    for part in spec.split(","):
+        fields = part.strip().split(":")
+        if not (1 <= len(fields) <= 4) or not fields[0]:
+            error(f"--tenants: bad entry {part!r} "
+                  "(want name[:frac[:priority[:deadline]]])")
+        name = fields[0]
+        try:
+            frac = float(fields[1]) if len(fields) > 1 and fields[1] else 1.0
+            prio = int(fields[2]) if len(fields) > 2 and fields[2] else 0
+            dl = (int(fields[3])
+                  if len(fields) > 3 and fields[3] not in ("", "-") else None)
+        except ValueError:
+            error(f"--tenants: bad entry {part!r} "
+                  "(frac float, priority int, deadline int slots)")
+        if frac <= 0:
+            error(f"--tenants: {name}: frac must be > 0, got {frac}")
+        if dl is not None and dl <= 0:
+            error(f"--tenants: {name}: deadline must be > 0 slots, got {dl}")
+        sources.append(TenantSpec(name=name, frac=frac, priority=prio,
+                                  deadline_slots=dl))
+        if dl is not None:
+            slos.append(TenantSLO(name=name, deadline_slots=dl,
+                                  quantile=quantile, priority=prio))
+    return tuple(sources), tuple(slos)
 
 
 def main():
@@ -48,7 +82,7 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--policy",
                     choices=["adaptive", "static", "latency-aware",
-                             "memory-aware", "token-aware"],
+                             "memory-aware", "token-aware", "conformal-slo"],
                     default="adaptive")
     ap.add_argument("--cost-budget", type=float, default=4.0,
                     help="latency-aware: time-average rate budget")
@@ -81,6 +115,15 @@ def main():
                          "(0 = unlimited)")
     ap.add_argument("--token-budget", type=float, default=64.0,
                     help="token-aware: target time-average pending prompt tokens")
+    ap.add_argument("--tenants", type=str, default=None,
+                    help="multi-tenant mix: name:frac:priority:deadline,... "
+                         "(e.g. gold:0.3:1:6,bulk:0.7:0:24; deadline in "
+                         "slots, '-' = no SLO). Pairs with "
+                         "--policy conformal-slo")
+    ap.add_argument("--slo-quantile", type=float, default=0.9,
+                    help="conformal-slo: per-tenant attainment target q")
+    ap.add_argument("--slo-gain", type=float, default=1.0,
+                    help="conformal-slo: price scale on the SLO queues")
     ap.add_argument("--min-prompt-len", type=int, default=None,
                     help="ragged workload: prompt lengths uniform in "
                          "[min, prompt-len] (exercises bucketed prefill)")
@@ -128,6 +171,29 @@ def main():
     if args.replicas > 1 and args.legacy_loop:
         ap.error("--legacy-loop is a single-engine comparison path; "
                  "the fleet steps replicas through the fused protocols")
+    # geometry/rate arguments surface as deep JAX shape errors if they reach
+    # the engine invalid — reject them here with one-line messages instead
+    if args.chunk_size < 0:
+        ap.error(f"--chunk-size must be >= 0 (0 = auto prompt_len/4), "
+                 f"got {args.chunk_size}")
+    if args.chunk_budget < 0:
+        ap.error(f"--chunk-budget must be >= 0 (0 = unlimited), "
+                 f"got {args.chunk_budget}")
+    for name in ("slots", "prompt_len", "cache_len", "page_size",
+                 "num_pages", "max_active", "capacity", "horizon",
+                 "raw_rate"):
+        if getattr(args, name) < 1:
+            ap.error(f"--{name.replace('_', '-')} must be >= 1, "
+                     f"got {getattr(args, name)}")
+    if not 0.0 < args.slo_quantile < 1.0:
+        ap.error(f"--slo-quantile must be in (0, 1), got {args.slo_quantile}")
+    tenant_specs, tenant_slos = (), ()
+    if args.tenants:
+        tenant_specs, tenant_slos = _parse_tenants(
+            args.tenants, args.slo_quantile, ap.error)
+    if args.policy == "conformal-slo" and not tenant_slos:
+        ap.error("--policy conformal-slo needs at least one tenant with a "
+                 "deadline via --tenants (e.g. gold:0.3:1:6,bulk:0.7:0:24)")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -173,12 +239,18 @@ def main():
             rates=rates, V=args.V, token_budget=args.token_budget,
             tokens_per_request=float(args.prompt_len),
             capacity=args.capacity, obs=sched_obs)
+    elif args.policy == "conformal-slo":
+        sched = ConformalScheduler(rates=rates, V=args.V,
+                                   tenants=tenant_slos,
+                                   slo_gain=args.slo_gain,
+                                   capacity=args.capacity, obs=sched_obs)
     else:
         sched = StaticScheduler(rate=args.rate, capacity=args.capacity,
                                 obs=sched_obs)
     src = RequestSource(vocab_size=cfg.vocab_size, prompt_len=args.prompt_len,
                         raw_rate=args.raw_rate, max_new_tokens=4,
-                        min_prompt_len=args.min_prompt_len)
+                        min_prompt_len=args.min_prompt_len,
+                        tenants=tenant_specs or None)
     tr = serve(engine, sched, src, horizon=args.horizon, steps_per_slot=2,
                fused=not args.legacy_loop, sync_free=args.sync_free,
                chunked=args.chunked)
@@ -206,9 +278,21 @@ def main():
                   f"forks={sum(e.prefix_forks for e in engines)} "
                   f"indexed_pages={sum(len(e._prefix) for e in engines)} "
                   f"evicted={sum(e._prefix.evicted_pages for e in engines)}")
+    if args.policy == "conformal-slo":
+        c = sched.counters()
+        att = sched.attainment()
+        print(f"slo: degrade_level={c['degrade_level']} "
+              f"pressure={c['slo_pressure']:.2f} "
+              f"shed_expired={c['requests_shed_expired']} "
+              f"shed_priority={c['requests_shed_priority']} "
+              f"shed_capped={c['requests_shed_capped']} "
+              "attainment="
+              + ",".join(f"{k}:{v:.3f}" for k, v in sorted(att.items())))
     print("latency:", latency_stats(engine))
     if telemetry:
         engine.export_metrics()
+        if args.policy == "conformal-slo":
+            obs.export(sched.counters())
         if args.metrics:
             print(obs.registry.prometheus_text(), end="")
         if args.trace_out:

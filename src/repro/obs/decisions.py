@@ -38,6 +38,7 @@ class DecisionLog:
     def __init__(self, capacity: int = 8192):
         self.rates: deque = deque(maxlen=capacity)
         self.routes: deque = deque(maxlen=capacity)
+        self.sheds: deque = deque(maxlen=capacity)
 
     # ---------------------------------------------------------- recording
     def record_rate(self, *, t: int, backlog: float, vq: float, V: float,
@@ -60,15 +61,33 @@ class DecisionLog:
 
     def record_route(self, *, rid, chosen: int, scores=None, loads=None,
                      prefs=None, affinity=None, V: float = 0.0,
-                     kind: str = "drift") -> None:
+                     kind: str = "drift",
+                     tenant: Optional[str] = None) -> None:
         """One router decision with its per-replica score vector
-        (V*S_i - D_i; None for round-robin, which never scores)."""
+        (V*S_i - D_i; None for round-robin, which never scores);
+        ``tenant`` tags multi-tenant workloads so routes join to sheds."""
         as_tuple = (lambda x: None if x is None
                     else tuple(float(v) for v in np.asarray(x).ravel()))
         self.routes.append({
             "rid": rid, "chosen": int(chosen), "kind": kind, "V": float(V),
             "scores": as_tuple(scores), "loads": as_tuple(loads),
             "prefs": as_tuple(prefs), "affinity": as_tuple(affinity),
+            "tenant": tenant,
+        })
+
+    def record_shed(self, *, t: int, rid, tenant: str = "default",
+                    priority: int = 0, reason: str = "", level: int = 0,
+                    waited: Optional[int] = None) -> None:
+        """One degradation-ladder shed/drop (DESIGN.md §12): ``reason`` is
+        the ladder rung ("expired" / "priority" / "capped"), ``level`` the
+        overload level that armed it, ``waited`` the slots the request had
+        already queued. Every shed the scheduler takes is recorded here —
+        degradation is never silent."""
+        self.sheds.append({
+            "t": int(t), "rid": rid, "tenant": str(tenant),
+            "priority": int(priority), "reason": str(reason),
+            "level": int(level),
+            "waited": None if waited is None else int(waited),
         })
 
     # ------------------------------------------------------------- views
@@ -108,7 +127,8 @@ class DecisionLog:
 
     # ----------------------------------------------------------- exports
     def to_json(self) -> dict:
-        return {"rates": list(self.rates), "routes": list(self.routes)}
+        return {"rates": list(self.rates), "routes": list(self.routes),
+                "sheds": list(self.sheds)}
 
     def save(self, path: str) -> str:
         with open(path, "w") as f:
@@ -122,6 +142,7 @@ class DecisionLog:
         log = cls()
         log.rates.extend(data.get("rates", []))
         log.routes.extend(data.get("routes", []))
+        log.sheds.extend(data.get("sheds", []))
         return log
 
 
@@ -137,6 +158,9 @@ class NullDecisionLog(DecisionLog):
         return None
 
     def record_route(self, **kw) -> None:  # noqa: ARG002
+        return None
+
+    def record_shed(self, **kw) -> None:  # noqa: ARG002
         return None
 
 
@@ -184,16 +208,9 @@ def replay_rollout(policy, mus, capacity: float = np.inf,
     f_tab, s_tab, lam_tab = (np.asarray(a, np.float32)
                              for a in policy.tables())
     V = np.float32(getattr(policy, "V", 0.0))
-    # per-action virtual-queue price (mirrors PolicyScheduler.__post_init__)
-    cls = type(policy).__name__
-    if cls == "LatencyAware":
-        cost = np.float32(policy.cost_gain)
-    elif cls == "MemoryAware":
-        cost = np.float32(policy.mem_gain * policy.pages_per_request)
-    elif cls == "TokenBacklogAware":
-        cost = np.float32(policy.tok_gain * policy.tokens_per_request)
-    else:
-        cost = np.float32(0.0)
+    # per-action virtual-queue price (mirrors PolicyScheduler.__post_init__,
+    # which reads the same policy-owned attribute)
+    cost = np.float32(getattr(policy, "vq_cost_per_rate", 0.0))
     cost_tab = cost * f_tab
     gain = np.float32(getattr(policy, "arrival_gain", 1.0))
     static_rate = getattr(policy, "rate", None)
@@ -212,7 +229,10 @@ def replay_rollout(policy, mus, capacity: float = np.inf,
             ex = explain_tables(Q, f_tab, s_tab, lam_tab, float(V),
                                 vq=float(z), cost_tab=cost_tab)
             f_star = np.float32(ex["argmax"])
-        if cls == "LatencyAware":   # Z advances on the chosen action's cost
+        # self-driven virtual queues (LatencyAware) advance on the chosen
+        # action's cost inside the rollout scan; observation-driven ones
+        # (observation != None) only move on engine signals, absent here
+        if cost and getattr(policy, "observation", None) is None:
             z = np.maximum(z + cost * f_star - budget, np.float32(0.0))
         lam = gain * f_star
         after = np.maximum(Q - np.float32(mu), np.float32(0.0))

@@ -30,6 +30,9 @@ GAUGE_KEYS = frozenset({
     "pages_used", "pages_free", "pages_shared", "pages_pinned",
     "frag_tokens", "peak_active", "peak_pages",
     "replicas", "replicas_alive",
+    # reliability layer (DESIGN.md §12): current overload level and the
+    # aggregate conformal virtual-queue price are levels, not totals
+    "degrade_level", "slo_pressure",
 })
 
 DEFAULT_BUCKETS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, float("inf"))

@@ -3,9 +3,10 @@ from repro.runtime.engine import (
     EngineConfig,
     PagedEngine,
     PagedEngineConfig,
+    ReadbackTimeout,
 )
 from repro.runtime.fleet import ReplicaFleet
-from repro.runtime.request import Request, RequestSource
+from repro.runtime.request import Request, RequestSource, TenantSpec
 from repro.runtime.scheduler import (
     AdaptiveScheduler,
     MemoryAwareScheduler,
@@ -20,9 +21,11 @@ __all__ = [
     "EngineConfig",
     "PagedEngine",
     "PagedEngineConfig",
+    "ReadbackTimeout",
     "ReplicaFleet",
     "Request",
     "RequestSource",
+    "TenantSpec",
     "AdaptiveScheduler",
     "MemoryAwareScheduler",
     "PolicyScheduler",

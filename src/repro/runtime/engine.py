@@ -61,6 +61,7 @@ backs the no-retrace regression tests, mirroring the scheduler's).
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import NamedTuple, Optional
 
@@ -95,6 +96,22 @@ def trace_count() -> int:
     return _TRACE_COUNT["n"]
 
 
+class ReadbackTimeout(RuntimeError):
+    """A pending readback packet never became ready within the engine's
+    ``readback_timeout_s`` bound. Carries enough context to diagnose the
+    wedge: the control slot whose counters were in flight, the array that
+    stalled, and the rows whose retirement the packet was carrying."""
+
+    def __init__(self, slot: int, array: str, rows: list, timeout_s: float):
+        self.slot = slot
+        self.array = array
+        self.rows = list(rows)
+        self.timeout_s = timeout_s
+        super().__init__(
+            f"readback for slot {slot} not ready after {timeout_s:g}s "
+            f"(array {array!r}; rows awaiting retirement: {self.rows})")
+
+
 @dataclasses.dataclass
 class EngineConfig:
     batch_slots: int = 8
@@ -113,6 +130,11 @@ class EngineConfig:
     # the per-slot prefill token budget across rows (0 => unlimited).
     chunk_size: int = 0
     chunk_budget: int = 0
+    # readback watchdog (DESIGN.md §12): the bounded wait on a pending
+    # readback packet before the consumer raises ReadbackTimeout instead of
+    # hanging drain()/retirement forever on a wedged transfer. <= 0 disables
+    # the bound (the pre-watchdog blocking behavior).
+    readback_timeout_s: float = 30.0
 
 
 @dataclasses.dataclass
@@ -568,6 +590,7 @@ class Engine:
         self.blocking_syncs = 0       # dispatch-gating synchronous readbacks
         self.readback_waits = 0       # sync-free consume-side overlap misses
         self._pending_read = None     # sync-free: last slot's async readback
+        self._chaos = None            # fault-injection seam (reliability)
         # paged-only counters, carried at 0 by the dense engine so the
         # counters() key set never drifts between engine types (DESIGN.md
         # §11: `preemptions` is reported as 0, never missing)
@@ -929,8 +952,11 @@ class Engine:
         tr = self.obs.trace
         if tr.enabled:
             tr.emit("readback", slot=now, pid=self.obs_pid, what="initiate")
-        self._pending_read = {"slot": now, "arrays": arrays,
-                              "epoch": self._row_epoch.copy()}
+        packet = {"slot": now, "arrays": arrays,
+                  "epoch": self._row_epoch.copy()}
+        if self._chaos is not None:  # fault-injection seam (reliability)
+            packet = self._chaos.wrap_readback(packet)
+        self._pending_read = packet
 
     def _readback_ready(self, p: dict) -> bool:
         """Non-blocking: has the packet's device->host transfer completed?"""
@@ -938,6 +964,27 @@ class Engine:
             if hasattr(a, "is_ready") and not a.is_ready():
                 return False
         return True
+
+    def _await_readback(self, p: dict) -> None:
+        """Bounded-wait watchdog (DESIGN.md §12): poll the packet's arrays
+        until ready or ``readback_timeout_s`` elapses, then raise a
+        diagnosable ``ReadbackTimeout`` instead of letting ``np.asarray``
+        block forever on a wedged transfer. Disabled (<= 0) restores the
+        unbounded blocking read."""
+        timeout = getattr(self.ecfg, "readback_timeout_s", 0.0)
+        deadline = None
+        for name, a in p["arrays"].items():
+            while hasattr(a, "is_ready") and not a.is_ready():
+                if timeout <= 0:
+                    break  # unbounded: the asarray below blocks as before
+                now_s = time.monotonic()
+                if deadline is None:
+                    deadline = now_s + timeout
+                elif now_s > deadline:
+                    rows = [i for i, r in enumerate(self.active)
+                            if r is not None and i not in self._cursors]
+                    raise ReadbackTimeout(p["slot"], name, rows, timeout)
+                time.sleep(2e-4)
 
     def _consume_read(self, p: Optional[dict],
                       count_waits: bool = True) -> tuple[int, list]:
@@ -955,6 +1002,7 @@ class Engine:
                     self.readback_waits += 1
                     waited = True
                     break
+        self._await_readback(p)
         t0 = self.obs.trace.now() if self.obs.trace.enabled else 0.0
         done = np.asarray(p["arrays"]["done"])
         age = np.asarray(p["arrays"]["age"])
@@ -1306,6 +1354,7 @@ class PagedEngine(Engine):
         self.blocking_syncs = 0
         self.readback_waits = 0
         self._pending_read = None
+        self._chaos = None            # fault-injection seam (reliability)
         self._row_epoch = np.zeros(R, np.int64)
         self.alloc_failures = 0       # admissions deferred: pool exhausted
         self.preemptions = 0          # active requests bounced for pages

@@ -76,7 +76,7 @@ class ReplicaFleet:
     }
 
     def __init__(self, replicas: list, router: FleetRouter | None = None,
-                 modes: list | None = None, obs=None):
+                 modes: list | None = None, obs=None, chaos=None):
         if not replicas:
             raise ValueError("a fleet needs at least one replica")
         if modes is not None and len(modes) != len(replicas):
@@ -113,15 +113,22 @@ class ReplicaFleet:
         # them (serve() duck-types on hasattr(engine, "occupancy"))
         if all(hasattr(e, "occupancy") for e in self.replicas):
             self.occupancy = self._occupancy
+        # fault-injection seam (repro.reliability): an armed ChaosInjector
+        # fires its slot-scoped faults from _step, so chaos runs under the
+        # unmodified serve() loop
+        self.chaos = None
+        if chaos is not None:
+            chaos.arm(self)
 
     # ------------------------------------------------------------ builders
     @classmethod
     def build(cls, make_engine, n: int, router: FleetRouter | None = None,
-              modes: list | None = None, obs=None) -> "ReplicaFleet":
+              modes: list | None = None, obs=None,
+              chaos=None) -> "ReplicaFleet":
         """Fleet of ``n`` replicas from a zero-arg engine factory (equal
         geometry => the module-level jit cache gives them one compile)."""
         return cls([make_engine() for _ in range(n)], router=router,
-                   modes=modes, obs=obs)
+                   modes=modes, obs=obs, chaos=chaos)
 
     # ------------------------------------------------------- observations
     def queue_len(self) -> int:
@@ -251,7 +258,8 @@ class ReplicaFleet:
             if any(p is not None for p in probes):
                 aff = np.asarray([p(req.tokens) if p is not None else 0
                                   for p in probes], np.float32)
-            i = self.router.route(loads, mask, self._prefs, affinity=aff)
+            i = self.router.route(loads, mask, self._prefs, affinity=aff,
+                                  rid=req.rid, tenant=req.tenant)
             hit = int(aff[i]) if aff is not None else 0
             self.router.charge(loads, i, len(req.tokens), hit_tokens=hit)
             tr = self.obs.trace
@@ -262,6 +270,8 @@ class ReplicaFleet:
 
     # ------------------------------------------------------------ serving
     def _step(self, default_mode: str, now: int, n_steps: int) -> dict:
+        if self.chaos is not None:
+            self.chaos.before_slot(now)
         served = active = admitted = 0
         per_step = [0] * n_steps
         for i, eng in enumerate(self.replicas):

@@ -82,29 +82,22 @@ class PolicyScheduler:
                 rates=tuple(float(f) for f in range(1, 11)), V=50.0
             )
         self._static_rate = self.policy.rate if isinstance(self.policy, Static) else None
-        # The in-repo table policies go through one module-wide jitted action
-        # over device-resident tables (same table shapes => same compile, so
-        # sweeps over V never re-trace). Anything else that satisfies the
-        # Policy protocol runs its own act() via the shared static-arg jit.
-        self._table_path = type(self.policy) in (
-            DriftPlusPenalty, LatencyAware, MemoryAware, TokenBacklogAware)
+        # Any policy exposing device tables goes through one module-wide
+        # jitted action over them (same table shapes => same compile, so
+        # sweeps over V never re-trace); the virtual-queue price comes from
+        # the policy's own ``vq_cost_per_rate`` so new constrained policies
+        # (repro.reliability's ConformalSLO) plug in without this class
+        # enumerating them. Anything else that satisfies the Policy protocol
+        # runs its own act() via the shared static-arg jit.
+        self._table_path = (self._static_rate is None
+                            and hasattr(self.policy, "tables"))
         if self._table_path:
             f, s, lam = self.policy.tables()
             self._f_tab = jax.device_put(f)
             self._s_tab = jax.device_put(s)
             self._lam_tab = jax.device_put(lam)
             self._V = jax.device_put(jnp.float32(self.policy.V))
-            # virtual-queue price per unit rate: LatencyAware's action cost,
-            # MemoryAware's committed-page cost, or TokenBacklogAware's
-            # committed-prompt-token cost (zeros = unconstrained)
-            if isinstance(self.policy, LatencyAware):
-                cost = self.policy.cost_gain
-            elif isinstance(self.policy, MemoryAware):
-                cost = self.policy.mem_gain * self.policy.pages_per_request
-            elif isinstance(self.policy, TokenBacklogAware):
-                cost = self.policy.tok_gain * self.policy.tokens_per_request
-            else:
-                cost = 0.0
+            cost = float(getattr(self.policy, "vq_cost_per_rate", 0.0))
             self._cost_tab = jax.device_put(
                 jnp.float32(cost) * f if cost else jnp.zeros_like(f)
             )

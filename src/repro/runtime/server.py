@@ -127,4 +127,27 @@ def latency_stats(engine: Engine) -> dict:
     if ttfts:
         out["ttft_p50"] = float(np.percentile(ttfts, 50))
         out["ttft_p99"] = float(np.percentile(ttfts, 99))
+    # multi-tenant workloads (repro.reliability, DESIGN.md §12): per-tenant
+    # TTFT percentiles and deadline attainment — the samples ConformalSLO
+    # calibrates on, broken out the way the SLO is stated. Single-tenant
+    # runs keep the flat dict unchanged.
+    tenants = {r.tenant for r in engine.finished}
+    if tenants - {"default"}:
+        out["tenants"] = {}
+        for name in sorted(tenants):
+            rs = [r for r in engine.finished if r.tenant == name]
+            tt = [r.first_token_slot - r.arrival_slot for r in rs
+                  if r.first_token_slot is not None]
+            entry = {"n": len(rs)}
+            if tt:
+                entry["ttft_p50"] = float(np.percentile(tt, 50))
+                entry["ttft_p99"] = float(np.percentile(tt, 99))
+            with_deadline = [r for r in rs if r.deadline_slots is not None
+                             and r.first_token_slot is not None]
+            if with_deadline:
+                ontime = sum(
+                    r.first_token_slot - r.arrival_slot <= r.deadline_slots
+                    for r in with_deadline)
+                entry["attainment"] = ontime / len(with_deadline)
+            out["tenants"][name] = entry
     return out

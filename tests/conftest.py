@@ -16,3 +16,6 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "cache: paged-KV cache subsystem (allocator/prefix-index "
                    "property suite)")
+    config.addinivalue_line(
+        "markers", "chaos: fault-injection differential sweeps "
+                   "(CI chaos lane)")

@@ -49,6 +49,40 @@ def test_serve_launcher_fleet():
     assert "latency:" in f.stdout
 
 
+def test_serve_launcher_conformal_slo():
+    out = _run(["repro.launch.serve", "--arch", "granite-3-2b", "--smoke",
+                "--policy", "conformal-slo",
+                "--tenants", "gold:0.3:1:6,bulk:0.7:0:24",
+                "--horizon", "10", "--raw-rate", "5"])
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "policy=conformal-slo" in out.stdout
+    assert "slo: degrade_level=" in out.stdout and "attainment=" in out.stdout
+    assert "'tenants'" in out.stdout      # per-tenant latency breakdown
+
+
+def test_serve_launcher_rejects_bad_arguments():
+    # each bad value must die in argparse with a one-line error naming the
+    # constraint (or the valid choices) — not a deep JAX shape error
+    cases = [
+        (["--chunk-size", "-1"], "--chunk-size must be >= 0"),
+        (["--chunk-budget", "-2"], "--chunk-budget must be >= 0"),
+        (["--replicas", "0"], "--replicas must be >= 1"),
+        (["--num-pages", "0", "--paged"], "--num-pages must be >= 1"),
+        (["--policy", "nope"], "invalid choice"),
+        (["--router", "nope", "--replicas", "2"], "invalid choice"),
+        (["--policy", "conformal-slo"], "--tenants"),
+        (["--tenants", "gold:0:1:6"], "frac must be > 0"),
+        (["--tenants", "gold:0.5:1:-3"], "deadline must be > 0"),
+        (["--tenants", ":"], "bad entry"),
+    ]
+    for extra, msg in cases:
+        out = _run(["repro.launch.serve", "--arch", "granite-3-2b",
+                    "--smoke", *extra])
+        assert out.returncode != 0, f"{extra}: expected rejection"
+        assert msg in out.stderr, f"{extra}: missing {msg!r} in {out.stderr}"
+        assert "Traceback" not in out.stderr, f"{extra}: {out.stderr}"
+
+
 def test_examples_quickstart():
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
