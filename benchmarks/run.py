@@ -916,6 +916,131 @@ def bench_overload_slo(quick=False):
     return us, derived
 
 
+def bench_sampling_layer(quick=False):
+    """Per-request sampling (DESIGN.md §13): heterogeneous per-row params in
+    ONE dispatch vs the per-params-group serial baseline.
+
+    Before the sampling layer, temperature/top-k were *static jit keys* on
+    an engine-global sampler: requests with different knobs could not share
+    a decode dispatch, so a mixed trace had to be served group by group
+    (the serial baseline — each params-group on its own engine, summed
+    wall-clock). The per-row device tables make the knobs dispatch
+    *arguments*, so the heterogeneous trace runs as one batch.
+
+    Gates: (1) the chunked path still costs exactly 1.00 dispatches/slot
+    with the sampler fused in (DISPATCH_VIOLATION); (2) every token of the
+    heterogeneous run matches the per-group run bit for bit AND a
+    direct sweep of the fused sampler matches the host-side eager oracle
+    `sample_oracle` row by row — placement-dependent RNG or filter drift
+    surfaces as TOKEN_MISMATCH.
+    """
+    import copy
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.runtime import Engine, EngineConfig, Request, SamplingParams
+    from repro.runtime.sampling import row_tables, sample_oracle, sample_rows
+
+    cfg = get_config("granite-3-2b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    presets = [
+        SamplingParams(temperature=0.7, top_k=8, seed=101),
+        SamplingParams(temperature=1.2, top_p=0.85, seed=102),
+        SamplingParams(temperature=0.9, top_k=12, repetition_penalty=1.3,
+                       seed=103),
+        SamplingParams(temperature=0.8, presence_penalty=0.5,
+                       frequency_penalty=0.2, seed=104),
+    ]
+    n_reqs = 8 if quick else 16
+    max_new = 6 if quick else 8
+    reps = 2 if quick else 3
+
+    def mk_reqs():
+        rng = np.random.default_rng(9)
+        return [Request(rid=i, arrival_slot=0,
+                        tokens=rng.integers(0, cfg.vocab_size, 16,
+                                            dtype=np.int32),
+                        max_new_tokens=max_new,
+                        sampling=presets[i % len(presets)])
+                for i in range(n_reqs)]
+
+    def mk_eng(**kw):
+        base = dict(batch_slots=8, prompt_len=16, cache_len=64)
+        base.update(kw)
+        return Engine(cfg, params, EngineConfig(**base))
+
+    def drive(eng, reqs, chunked=False):
+        eng.submit([copy.deepcopy(r) for r in reqs])
+        step = eng.step_slot_chunked if chunked else eng.step_slot
+        t = 0
+        while len(eng.finished) < len(reqs) and t < 200:
+            step(t, n_steps=2)
+            t += 1
+        if chunked:
+            eng.drain()
+        return {r.rid: tuple(r.generated) for r in eng.finished}, t
+
+    reqs = mk_reqs()
+    groups = {}
+    for r in reqs:
+        groups.setdefault(r.sampling, []).append(r)
+
+    drive(mk_eng(), reqs)                      # warm the sampling jits
+    hetero_streams, serial_streams = {}, {}
+    best_h = best_s = float("inf")
+    slots_h = 1
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        hetero_streams, slots_h = drive(mk_eng(), reqs)
+        best_h = min(best_h, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        serial_streams = {}
+        for grp in groups.values():            # one engine per params-group
+            got, _ = drive(mk_eng(), grp)
+            serial_streams.update(got)
+        best_s = min(best_s, time.perf_counter() - t0)
+    toks = sum(len(g) for g in hetero_streams.values())
+    tps_h, tps_s = toks / best_h, toks / best_s
+    same = hetero_streams == serial_streams
+
+    # dispatch budget: the chunked path must absorb the fused sampler at
+    # exactly ONE mixed dispatch per slot
+    eng = mk_eng(chunk_size=4)
+    _, slots = drive(eng, reqs, chunked=True)
+    disp = (eng.prefill_dispatches + eng.decode_dispatches) / max(slots, 1)
+    metrics = {"disp_per_slot": disp}
+
+    # fused sampler vs the host-side eager oracle, heterogeneous rows with
+    # penalties and live histories
+    rng = np.random.default_rng(13)
+    B, V = (32, 64) if quick else (64, 128)
+    lg = rng.normal(size=(B, V)).astype(np.float32)
+    ages = rng.integers(0, 6, B).astype(np.int32)
+    gen = rng.integers(0, V, (B, 8)).astype(np.int32)
+    resolved = [(presets[i % len(presets)], 1000 + i) for i in range(B)]
+    out = np.asarray(sample_rows(
+        jnp.asarray(lg), row_tables(resolved, 0), jnp.asarray(ages),
+        jnp.asarray(gen), jnp.asarray(ages)))
+    oracle_ok = all(
+        int(out[i]) == sample_oracle(lg[i], presets[i % len(presets)],
+                                     1000 + i, 0, int(ages[i]),
+                                     history=gen[i, :ages[i]])
+        for i in range(B))
+
+    us = best_h / max(slots_h, 1) * 1e6
+    derived = (
+        f"hetero_tps={tps_h:.1f};serial_tps={tps_s:.1f}"
+        f";speedup={tps_h / tps_s:.2f}x"
+        f";groups={len(groups)};reqs={n_reqs}"
+        f";same_tokens={same};oracle_ok={oracle_ok}"
+    )
+    if not (same and oracle_ok):
+        derived = "TOKEN_MISMATCH;" + derived
+    if round(disp, 2) != 1.0:
+        derived = "DISPATCH_VIOLATION;" + derived
+    return us, derived, metrics
+
+
 def bench_flash_attention(quick=False):
     """XLA flash path per-call time + kernel/oracle agreement."""
     from repro.kernels import ops
@@ -979,7 +1104,8 @@ def bench_roofline_table():
 # one-dispatch budget.
 SMOKE_BENCHES = ("controller_overhead", "paged_vs_dense_decode",
                  "serve_sync_free", "continuous_batching", "fleet_scaling",
-                 "prefix_sharing", "observability", "overload_slo")
+                 "prefix_sharing", "observability", "overload_slo",
+                 "sampling_layer")
 
 # ------------------------------------------------- benchmark-regression gate
 # `--check-against baseline.json[,baseline2.json]` compares this run's rows
@@ -1106,6 +1232,7 @@ def main() -> None:
         ("prefix_sharing", lambda: bench_prefix_sharing(args.quick)),
         ("observability", lambda: bench_observability(args.quick)),
         ("overload_slo", lambda: bench_overload_slo(args.quick)),
+        ("sampling_layer", lambda: bench_sampling_layer(args.quick)),
         ("flash_attention_xla", lambda: bench_flash_attention(args.quick)),
         ("ssd_scan_xla", lambda: bench_ssd_scan(args.quick)),
         ("roofline_table", bench_roofline_table),

@@ -17,6 +17,14 @@ N equal engines (one compile, shared jit cache) with requests routed by
 the one Algorithm-1 argmax), ``round-robin``/``least-loaded`` are the
 classical baselines.
 
+``--temperature``/``--top-k``/``--top-p``/``--rep-penalty``/
+``--sampling-seed`` switch generation off pure greedy: they build the
+engine-default ``SamplingParams`` every admitted request inherits
+(DESIGN.md §13). The RNG is request-keyed — (seed, rid, token index) — so
+the sampled streams are identical at any ``--replicas`` count, batch
+packing, or preemption schedule. Omit them all and the engine serves the
+bit-identical greedy path (argmax, no sampling layer traced).
+
 ``--metrics`` prints the Prometheus text exposition of every engine counter
 at shutdown; ``--trace-out PATH`` records the full request lifecycle and
 writes a Chrome-trace JSON (open in Perfetto); ``--decisions-out PATH``
@@ -39,8 +47,9 @@ from repro.reliability import ConformalScheduler, TenantSLO
 from repro.runtime import (AdaptiveScheduler, Engine, EngineConfig,
                            MemoryAwareScheduler, PagedEngine,
                            PagedEngineConfig, PolicyScheduler, ReplicaFleet,
-                           RequestSource, StaticScheduler, TenantSpec,
-                           TokenAwareScheduler, latency_stats, serve)
+                           RequestSource, SamplingParams, StaticScheduler,
+                           TenantSpec, TokenAwareScheduler, latency_stats,
+                           serve)
 
 
 def _parse_tenants(spec: str, quantile: float, error):
@@ -124,6 +133,20 @@ def main():
                     help="conformal-slo: per-tenant attainment target q")
     ap.add_argument("--slo-gain", type=float, default=1.0,
                     help="conformal-slo: price scale on the SLO queues")
+    ap.add_argument("--temperature", type=float, default=None,
+                    help="softmax temperature, >= 0 (0 = greedy argmax; "
+                         "default: pure greedy engine, no sampling layer)")
+    ap.add_argument("--top-k", type=int, default=None,
+                    help="sample from the k highest logits, >= 0 "
+                         "(0 = full vocabulary; > vocab clamps)")
+    ap.add_argument("--top-p", type=float, default=None,
+                    help="nucleus mass in (0, 1] (1.0 = off)")
+    ap.add_argument("--rep-penalty", type=float, default=None,
+                    help="CTRL repetition penalty on generated tokens, > 0 "
+                         "(1.0 = off)")
+    ap.add_argument("--sampling-seed", type=int, default=None,
+                    help="base RNG seed; the per-token key is "
+                         "fold_in(fold_in(PRNGKey(seed), rid), token_index)")
     ap.add_argument("--min-prompt-len", type=int, default=None,
                     help="ragged workload: prompt lengths uniform in "
                          "[min, prompt-len] (exercises bucketed prefill)")
@@ -187,6 +210,30 @@ def main():
                      f"got {getattr(args, name)}")
     if not 0.0 < args.slo_quantile < 1.0:
         ap.error(f"--slo-quantile must be in (0, 1), got {args.slo_quantile}")
+    # sampling knobs: mirror SamplingParams' admission-time validation as
+    # one-line CLI errors naming the valid range
+    if args.temperature is not None and not args.temperature >= 0.0:
+        ap.error(f"--temperature must be >= 0 (0 = greedy), "
+                 f"got {args.temperature}")
+    if args.top_k is not None and args.top_k < 0:
+        ap.error(f"--top-k must be >= 0 (0 = full vocabulary), "
+                 f"got {args.top_k}")
+    if args.top_p is not None and not 0.0 < args.top_p <= 1.0:
+        ap.error(f"--top-p must be in (0, 1], got {args.top_p}")
+    if args.rep_penalty is not None and not args.rep_penalty > 0.0:
+        ap.error(f"--rep-penalty must be > 0 (1.0 = off), "
+                 f"got {args.rep_penalty}")
+    sampling = None
+    if any(v is not None for v in (args.temperature, args.top_k, args.top_p,
+                                   args.rep_penalty, args.sampling_seed)):
+        sampling = SamplingParams(
+            temperature=args.temperature if args.temperature is not None
+            else 1.0,
+            top_k=args.top_k or 0,
+            top_p=args.top_p if args.top_p is not None else 1.0,
+            repetition_penalty=args.rep_penalty if args.rep_penalty is not None
+            else 1.0,
+            seed=args.sampling_seed)
     tenant_specs, tenant_slos = (), ()
     if args.tenants:
         tenant_specs, tenant_slos = _parse_tenants(
@@ -205,14 +252,14 @@ def main():
             page_size=args.page_size, num_pages=args.num_pages,
             max_active=args.max_active, eos_id=args.eos_id,
             prefix_sharing=args.prefix_sharing,
-            chunk_size=args.chunk_size, chunk_budget=args.chunk_budget),
-            obs=obs)
+            chunk_size=args.chunk_size, chunk_budget=args.chunk_budget,
+            sampling=sampling), obs=obs)
     else:
         mk_engine = lambda: Engine(cfg, params, EngineConfig(
             batch_slots=args.slots, prompt_len=args.prompt_len,
             cache_len=args.cache_len, eos_id=args.eos_id,
-            chunk_size=args.chunk_size, chunk_budget=args.chunk_budget),
-            obs=obs)
+            chunk_size=args.chunk_size, chunk_budget=args.chunk_budget,
+            sampling=sampling), obs=obs)
     if args.replicas > 1:
         router = FleetRouter(kind=args.router,
                              decisions=obs.decisions if telemetry else None)
@@ -260,6 +307,13 @@ def main():
           f"mean_rate={float(np.mean(sched.rate_history)):.2f} "
           f"dispatches_per_slot={float(tr['dispatches'].mean()):.2f} "
           f"blocking_syncs_per_slot={float(tr['syncs'].mean()):.2f}")
+    if sampling is not None:
+        engines = engine.replicas if args.replicas > 1 else [engine]
+        print(f"sampling: temperature={sampling.temperature} "
+              f"top_k={sampling.top_k} top_p={sampling.top_p} "
+              f"rep_penalty={sampling.repetition_penalty} "
+              f"seed={sampling.seed if sampling.seed is not None else 0} "
+              f"requests_sampled={sum(e.requests_sampled for e in engines)}")
     if args.replicas > 1:
         per = [len(e.finished) for e in engine.replicas]
         print(f"fleet: replicas={args.replicas} router={args.router} "

@@ -7,6 +7,7 @@ from repro.runtime.engine import (
 )
 from repro.runtime.fleet import ReplicaFleet
 from repro.runtime.request import Request, RequestSource, TenantSpec
+from repro.runtime.sampling import SamplingParams
 from repro.runtime.scheduler import (
     AdaptiveScheduler,
     MemoryAwareScheduler,
@@ -25,6 +26,7 @@ __all__ = [
     "ReplicaFleet",
     "Request",
     "RequestSource",
+    "SamplingParams",
     "TenantSpec",
     "AdaptiveScheduler",
     "MemoryAwareScheduler",

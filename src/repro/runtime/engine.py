@@ -81,6 +81,7 @@ from repro.models.transformer import (
 )
 from repro.obs import OBS_OFF
 from repro.runtime.request import Request
+from repro.runtime.sampling import SamplingParams, row_tables, sample_rows
 
 # Sentinel for short-prompt padding. Padding used to cycle the prompt via
 # np.resize, which silently duplicated content; a constant sentinel keeps
@@ -121,6 +122,11 @@ class EngineConfig:
     temperature: float = 1.0
     top_k: int = 0                # 0 = full distribution
     seed: int = 0
+    # engine-wide default SamplingParams for requests that carry none
+    # (request.sampling always wins). None + greedy=False falls back to
+    # SamplingParams(temperature, top_k) so pre-sampling-layer configs
+    # keep serving; the RNG is request-keyed either way (DESIGN.md §13).
+    sampling: Optional[SamplingParams] = None
     shape_window: Optional[int] = None
     eos_id: Optional[int] = None  # stop token (None = length-only stopping)
     ragged_prefill: bool = True   # length-aware bucketed prefill (auto-gated)
@@ -162,18 +168,22 @@ class PagedEngineConfig(EngineConfig):
 @dataclasses.dataclass(frozen=True)
 class _DecodeSig:
     """The hashable slice of EngineConfig the jitted decode path closes
-    over — a static jit key, so equal-config engines share executables."""
+    over — a static jit key, so equal-config engines share executables.
 
-    greedy: bool = True
-    temperature: float = 1.0
-    top_k: int = 0
+    ``sampling`` is the only per-dispatch bit: False traces the pure-argmax
+    scan (byte-identical to the pre-sampling-layer executable — greedy
+    serving never pays for the sampling layer), True traces the per-row
+    heterogeneous sampler. The actual knobs (temperature/top-k/...) are
+    *runtime* per-row tables now, not static keys, so changing a request's
+    params never recompiles."""
+
+    sampling: bool = False
     shape_window: Optional[int] = None
     eos_id: Optional[int] = None
 
     @staticmethod
     def of(ecfg: EngineConfig) -> "_DecodeSig":
-        return _DecodeSig(ecfg.greedy, ecfg.temperature, ecfg.top_k,
-                          ecfg.shape_window, ecfg.eos_id)
+        return _DecodeSig(False, ecfg.shape_window, ecfg.eos_id)
 
 
 class SyncState(NamedTuple):
@@ -229,20 +239,10 @@ def _prompt_buckets(P: int, quantum: int = 1) -> list:
     return sorted(out) or [P]
 
 
-def _sample(sig: _DecodeSig, logits, key):
-    if sig.greedy:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    lg = logits.astype(jnp.float32) / max(sig.temperature, 1e-6)
-    if sig.top_k:
-        # O(V log k) threshold instead of a full O(V log V) sort
-        kth = jax.lax.top_k(lg, sig.top_k)[0][..., -1:]
-        lg = jnp.where(lg < kth, -1e30, lg)
-    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
-
-
-def _make_sampler(ecfg: EngineConfig):
-    sig = _DecodeSig.of(ecfg)
-    return lambda logits, key: _sample(sig, logits, key)
+# First-token sampling for the host-side admission paths (the sync paths
+# compute it inside _sync_admit/_sync_activate): one jitted call over the
+# prefill logits, age 0, empty history.
+_sample_first = jax.jit(sample_rows)
 
 
 # ------------------------------------------------------- module-level jits
@@ -260,41 +260,59 @@ def _prefill_ragged(params, batch, lens, cfg, cache_len, shape_window):
 
 
 @partial(jax.jit, static_argnames=("cfg", "sig"))
-def _decode_one(params, state, toks, key, *, cfg, sig):
+def _decode_one(params, state, toks, samp, ages, hist, *, cfg, sig):
     _TRACE_COUNT["n"] += 1
     logits, state = M.decode_step(params, state, toks, cfg,
                                   shape_window=sig.shape_window)
-    return _sample(sig, logits, key), state
+    if not sig.sampling:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), state
+    return sample_rows(logits, samp, ages, hist, ages), state
+
+
+def _scan_decode(decode_fn, state, toks, samp, ages, hist, n, sig):
+    """The shared fused-decode scan. sig.sampling=False traces the exact
+    pre-sampling-layer greedy body (two-element carry, no tables — greedy
+    executables stay byte-identical); True threads the host-built history
+    through the carry so mid-scan penalties see every token, including the
+    ones sampled earlier in the same dispatch."""
+    if not sig.sampling:
+        def body(carry, i):
+            toks, state = carry
+            logits, state = decode_fn(state, toks)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (nxt, state), nxt
+
+        (_, state), outs = jax.lax.scan(body, (toks, state), jnp.arange(n))
+        return outs, state
+
+    B, cap = hist.shape
+
+    def body(carry, i):
+        toks, state, hist, ages = carry
+        logits, state = decode_fn(state, toks)
+        nxt = sample_rows(logits, samp, ages, hist, ages)
+        hist = hist.at[jnp.arange(B), ages % cap].set(nxt)
+        return (nxt, state, hist, ages + 1), nxt
+
+    (_, state, _, _), outs = jax.lax.scan(
+        body, (toks, state, hist, ages), jnp.arange(n))
+    return outs, state
 
 
 @partial(jax.jit, static_argnames=("n", "cfg", "sig"))
-def _decode_n(params, state, toks, key, *, n, cfg, sig):
+def _decode_n(params, state, toks, samp, ages, hist, *, n, cfg, sig):
     """n fused decode steps; returns per-step tokens (n, B)."""
     _TRACE_COUNT["n"] += 1
-
-    def body(carry, i):
-        toks, state = carry
-        logits, state = M.decode_step(params, state, toks, cfg,
-                                      shape_window=sig.shape_window)
-        nxt = _sample(sig, logits, jax.random.fold_in(key, i))
-        return (nxt, state), nxt
-
-    (_, state), outs = jax.lax.scan(body, (toks, state), jnp.arange(n))
-    return outs, state
+    fn = lambda state, toks: M.decode_step(params, state, toks, cfg,
+                                           shape_window=sig.shape_window)
+    return _scan_decode(fn, state, toks, samp, ages, hist, n, sig)
 
 
 @partial(jax.jit, static_argnames=("n", "cfg", "sig"))
-def _decode_n_paged(params, state, toks, key, *, n, cfg, sig):
+def _decode_n_paged(params, state, toks, samp, ages, hist, *, n, cfg, sig):
     _TRACE_COUNT["n"] += 1
-
-    def body(carry, i):
-        toks, state = carry
-        logits, state = M.decode_step_paged(params, state, toks, cfg)
-        nxt = _sample(sig, logits, jax.random.fold_in(key, i))
-        return (nxt, state), nxt
-
-    (_, state), outs = jax.lax.scan(body, (toks, state), jnp.arange(n))
-    return outs, state
+    fn = lambda state, toks: M.decode_step_paged(params, state, toks, cfg)
+    return _scan_decode(fn, state, toks, samp, ages, hist, n, sig)
 
 
 def _sync_step(sync: SyncState, nxt, sig: _DecodeSig):
@@ -324,8 +342,17 @@ def _sync_step(sync: SyncState, nxt, sig: _DecodeSig):
 _DONATE = (1,) if jax.default_backend() != "cpu" else ()
 
 
+def _sync_next(sig: _DecodeSig, logits, samp, sync: SyncState):
+    """One sync-free step's token draw: greedy argmax, or the per-row
+    sampler reading the device ring buffer as history (sync.age tokens are
+    live in gen_buf; admission validates age never exceeds the ring)."""
+    if not sig.sampling:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return sample_rows(logits, samp, sync.age, sync.gen_buf, sync.age)
+
+
 @partial(jax.jit, static_argnames=("n", "cfg", "sig"), donate_argnums=_DONATE)
-def _decode_n_sync(params, state, sync, key, *, n, cfg, sig):
+def _decode_n_sync(params, state, sync, samp, *, n, cfg, sig):
     """Sync-free fused decode: sampling/EOS/ring buffer live in the scan.
 
     Rows whose stop mask latches keep computing (masked — the standard
@@ -340,7 +367,7 @@ def _decode_n_sync(params, state, sync, key, *, n, cfg, sig):
         state, sync = carry
         logits, state2 = M.decode_step(params, state, sync.cur_tok, cfg,
                                        shape_window=sig.shape_window)
-        nxt = _sample(sig, logits, jax.random.fold_in(key, i))
+        nxt = _sync_next(sig, logits, samp, sync)
         state2 = state2._replace(pos=jnp.where(sync.done, state.pos, state2.pos))
         sync2, served = _sync_step(sync, nxt, sig)
         return (state2, sync2), served
@@ -350,13 +377,13 @@ def _decode_n_sync(params, state, sync, key, *, n, cfg, sig):
 
 
 @partial(jax.jit, static_argnames=("n", "cfg", "sig"), donate_argnums=_DONATE)
-def _decode_n_sync_paged(params, state, sync, key, *, n, cfg, sig):
+def _decode_n_sync_paged(params, state, sync, samp, *, n, cfg, sig):
     _TRACE_COUNT["n"] += 1
 
     def body(carry, i):
         state, sync = carry
         logits, state2 = M.decode_step_paged(params, state, sync.cur_tok, cfg)
-        nxt = _sample(sig, logits, jax.random.fold_in(key, i))
+        nxt = _sync_next(sig, logits, samp, sync)
         state2 = state2._replace(pos=jnp.where(sync.done, state.pos, state2.pos))
         sync2, served = _sync_step(sync, nxt, sig)
         return (state2, sync2), served
@@ -394,12 +421,17 @@ class PrefillCursor:
         return len(self.toks) - self.off
 
 
-def _sync_activate(sync: SyncState, logits, final, budgets, *, sig: _DecodeSig):
+def _sync_activate(sync: SyncState, logits, final, budgets, samp, *,
+                   sig: _DecodeSig):
     """Device-side activation of rows finishing their prompt this dispatch:
-    greedy argmax of the final chunk's last-token logits becomes the first
-    generated token (matching every other admission path), masked into the
-    sync state. Runs inside the chunked dispatch — no logits readback."""
-    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    the first generated token — argmax, or the row's sampler at age 0 with
+    an empty history, matching every other admission path — comes from the
+    final chunk's last-token logits, masked into the sync state. Runs
+    inside the chunked dispatch — no logits readback."""
+    if sig.sampling:
+        first = sample_rows(logits, samp, jnp.zeros_like(sync.age))
+    else:
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     fin = budgets <= 1
     if sig.eos_id is not None:
         fin = fin | (first == sig.eos_id)
@@ -415,7 +447,7 @@ def _sync_activate(sync: SyncState, logits, final, budgets, *, sig: _DecodeSig):
 
 @partial(jax.jit, static_argnames=("n", "cfg", "sig"), donate_argnums=_DONATE)
 def _chunk_decode_sync(params, state, sync, toks, pos0, valid, reset, final,
-                       budgets, key, *, n, cfg, sig):
+                       budgets, samp, *, n, cfg, sig):
     """One continuous-batching control slot in ONE dispatch: per-row prompt
     chunks (K/V written at [pos0, pos0+valid)) + device-side activation of
     rows finishing their prompt + the n-step fused sync-free decode scan.
@@ -428,13 +460,13 @@ def _chunk_decode_sync(params, state, sync, toks, pos0, valid, reset, final,
     _TRACE_COUNT["n"] += 1
     logits, state = M.chunk_step(params, state, toks, pos0, valid, reset, cfg,
                                  shape_window=sig.shape_window)
-    sync = _sync_activate(sync, logits, final, budgets, sig=sig)
+    sync = _sync_activate(sync, logits, final, budgets, samp, sig=sig)
 
     def body(carry, i):
         state, sync = carry
         logits, state2 = M.decode_step(params, state, sync.cur_tok, cfg,
                                        shape_window=sig.shape_window)
-        nxt = _sample(sig, logits, jax.random.fold_in(key, i))
+        nxt = _sync_next(sig, logits, samp, sync)
         state2 = state2._replace(pos=jnp.where(sync.done, state.pos, state2.pos))
         sync2, served = _sync_step(sync, nxt, sig)
         return (state2, sync2), served
@@ -445,15 +477,15 @@ def _chunk_decode_sync(params, state, sync, toks, pos0, valid, reset, final,
 
 @partial(jax.jit, static_argnames=("n", "cfg", "sig"), donate_argnums=_DONATE)
 def _chunk_decode_sync_paged(params, state, sync, toks, pos0, valid, final,
-                             budgets, key, *, n, cfg, sig):
+                             budgets, samp, *, n, cfg, sig):
     _TRACE_COUNT["n"] += 1
     logits, state = M.chunk_step_paged(params, state, toks, pos0, valid, cfg)
-    sync = _sync_activate(sync, logits, final, budgets, sig=sig)
+    sync = _sync_activate(sync, logits, final, budgets, samp, sig=sig)
 
     def body(carry, i):
         state, sync = carry
         logits, state2 = M.decode_step_paged(params, state, sync.cur_tok, cfg)
-        nxt = _sample(sig, logits, jax.random.fold_in(key, i))
+        nxt = _sync_next(sig, logits, samp, sync)
         state2 = state2._replace(pos=jnp.where(sync.done, state.pos, state2.pos))
         sync2, served = _sync_step(sync, nxt, sig)
         return (state2, sync2), served
@@ -463,13 +495,18 @@ def _chunk_decode_sync_paged(params, state, sync, toks, pos0, valid, final,
 
 
 @partial(jax.jit, static_argnames=("sig",))
-def _sync_admit(sync: SyncState, logits, rows, budgets, *, sig):
-    """Device-side admission: first token (greedy argmax of the prefill
-    logits, matching the legacy paths) + per-row sync-state reset, all in
-    one scatter — no logits readback. Pad rows carry an out-of-range index
-    and are dropped."""
+def _sync_admit(sync: SyncState, logits, rows, budgets, samp, *, sig):
+    """Device-side admission: first token (argmax, or each admitted row's
+    sampler at age 0, matching the legacy paths) + per-row sync-state
+    reset, all in one scatter — no logits readback. ``samp`` is aligned
+    with the *prefill* batch rows (``rows`` maps them to engine rows). Pad
+    rows carry an out-of-range index and are dropped."""
     _TRACE_COUNT["n"] += 1
-    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if sig.sampling:
+        first = sample_rows(logits, samp,
+                            jnp.zeros(logits.shape[0], jnp.int32))
+    else:
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     fin = budgets <= 1
     if sig.eos_id is not None:
         fin = fin | (first == sig.eos_id)
@@ -560,17 +597,21 @@ class Engine:
         self._now = 0             # current control slot, for deep emit sites
         B, P = ecfg.batch_slots, ecfg.prompt_len
         self._sig = _DecodeSig.of(ecfg)
+        self._init_sampling(ecfg)
         self._ragged = ecfg.ragged_prefill and ragged_prefill_supported(cfg)
         self._buckets = _prompt_buckets(P)
         self._gen_cap = ecfg.gen_buf_len or ecfg.cache_len
 
         # back-compat instance handles over the shared module-level jits
+        # (greedy-only oracles: key is accepted and ignored — the RNG is
+        # request-keyed now, see DESIGN.md §13)
         self._prefill = lambda params, batch: _prefill_padded(
             params, batch, self.cfg, self.ecfg.cache_len, self.ecfg.shape_window)
-        self._decode = lambda params, state, toks, key: _decode_one(
-            params, state, toks, key, cfg=self.cfg, sig=self._sig)
+        self._decode = lambda params, state, toks, key=None: _decode_one(
+            params, state, toks, None, None, None, cfg=self.cfg, sig=self._sig)
         self._decode_n = lambda params, state, toks, key, n: _decode_n(
-            params, state, toks, key, n=n, cfg=self.cfg, sig=self._sig)
+            params, state, toks, None, None, None, n=n, cfg=self.cfg,
+            sig=self._sig)
         self._splice = _splice_one
         self._splice_many = _splice_many
 
@@ -578,7 +619,6 @@ class Engine:
         boot = {"tokens": jnp.zeros((B, P), jnp.int32), **self.extra}
         _, self.state = self._prefill(params, boot)
         self.sync = sync_state_init(B, self._gen_cap)
-        self._key = jax.random.PRNGKey(ecfg.seed)
         self.active: list = [None] * B
         self.pending: list = []
         self.finished: list = []
@@ -634,6 +674,88 @@ class Engine:
                         pid=self.obs_pid, prompt_len=len(r.tokens))
         self.pending.extend(reqs)
 
+    # ------------------------------------------------ per-request sampling
+    def _init_sampling(self, ecfg: EngineConfig) -> None:
+        """Resolve the engine-default SamplingParams once (DESIGN.md §13)."""
+        default = ecfg.sampling
+        if default is None and not ecfg.greedy:
+            # pre-sampling-layer configs: greedy=False + temperature/top_k
+            default = SamplingParams(temperature=ecfg.temperature,
+                                     top_k=ecfg.top_k)
+        if default is not None and default.is_pure_greedy:
+            default = None
+        self._default_samp = default
+        self._sig_sampling = dataclasses.replace(self._sig, sampling=True)
+        self.requests_sampled = 0   # admissions of sampling-path requests
+
+    def _effective(self, req: Request) -> Optional[SamplingParams]:
+        """The params actually governing a request — request-level wins,
+        then the engine default; None means the pure-argmax path (so greedy
+        traffic never pays for the sampling layer)."""
+        p = req.sampling if req.sampling is not None else self._default_samp
+        if p is None or p.is_pure_greedy:
+            return None
+        return p
+
+    def _resolve_rows(self, reqs) -> list:
+        """Per-row ``(params, rid)`` entries (None = greedy/empty row)."""
+        out = []
+        for r in reqs:
+            e = self._effective(r) if r is not None else None
+            out.append((e, r.rid) if e is not None else None)
+        return out
+
+    def _samp_args(self) -> tuple:
+        """(tables, sig) for a decode dispatch over the current active
+        rows. All-greedy batches get (None, base sig): the dispatch routes
+        to the sampling-free executable, bit-identical to the
+        pre-sampling-layer engine."""
+        resolved = self._resolve_rows(self.active)
+        if not any(e is not None for e in resolved):
+            return None, self._sig
+        return row_tables(resolved, self.ecfg.seed), self._sig_sampling
+
+    def _samp_decode_args(self) -> tuple:
+        """(tables, ages, hist, sig) for the host-side (non-sync) decode
+        paths: ages = each row's generated-token count, hist = the
+        generated history the penalties read (admission validates
+        max_new_tokens <= gen cap for sampled requests, so it never
+        wraps)."""
+        samp, sig = self._samp_args()
+        if not sig.sampling:
+            return None, None, None, sig
+        B, cap = len(self.active), self._gen_cap
+        ages = np.zeros(B, np.int32)
+        hist = np.zeros((B, cap), np.int32)
+        for row, r in enumerate(self.active):
+            if r is None or not r.generated:
+                continue
+            g = r.generated[-cap:]
+            hist[row, : len(g)] = g
+            ages[row] = len(r.generated)
+        return samp, jnp.asarray(ages), jnp.asarray(hist), sig
+
+    def _admit_samp_args(self, reqs, rows: int) -> tuple:
+        """(tables, sig) for an admission dispatch: entry j describes
+        prefill row j (the admitted request), padded to ``rows``."""
+        resolved = self._resolve_rows(reqs)
+        if not any(e is not None for e in resolved):
+            return None, self._sig
+        resolved += [None] * (rows - len(resolved))
+        return row_tables(resolved, self.ecfg.seed), self._sig_sampling
+
+    def _validate_sampled(self, req: Request) -> None:
+        """Sampled requests must fit the generated-token history buffer on
+        every path (the sync paths already demand this for the ring): the
+        penalties read it, so overflowing it would silently change
+        streams."""
+        if self._effective(req) is not None and \
+                req.max_new_tokens > self._gen_cap:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens {req.max_new_tokens} "
+                f"exceeds the sampled-request history capacity {self._gen_cap} "
+                "(gen_buf_len)")
+
     # ----------------------------------------------------- observability
     def counters(self) -> dict:
         """The one counter/gauge surface every engine type shares.
@@ -651,6 +773,7 @@ class Engine:
             "requests_active": sum(r is not None for r in self.active),
             "requests_pending": len(self.pending),
             "requests_prefilling": len(self._cursors),
+            "requests_sampled": self.requests_sampled,
             "prefill_dispatches": self.prefill_dispatches,
             "decode_dispatches": self.decode_dispatches,
             "fork_dispatches": self.fork_dispatches,
@@ -703,6 +826,8 @@ class Engine:
         and record the admission event. Preemption resets the stamp; the
         re-claim restamps it, like start_slot/first_token_slot."""
         req.admit_slot = now
+        if self._effective(req) is not None:
+            self.requests_sampled += 1
         tr = self.obs.trace
         if tr.enabled:
             tr.emit("admission", slot=now, rid=req.rid, row=row,
@@ -750,6 +875,7 @@ class Engine:
 
     def _admit_one(self, req: Request, slot: int, now: int) -> None:
         """Legacy batch-1 admission (the fused path's equivalence oracle)."""
+        self._validate_sampled(req)
         P = self.ecfg.prompt_len
         L = max(1, min(len(req.tokens), P))
         bucket = self._pick_bucket(L) if self._ragged else P
@@ -762,7 +888,13 @@ class Engine:
         self.blocking_syncs += 1
         req.start_slot = now
         req.first_token_slot = now   # first token came from this prefill
-        req.generated = [int(jnp.argmax(logits[0]))]
+        samp, sig = self._admit_samp_args([req], 1)
+        if sig.sampling:
+            first = int(_sample_first(logits[:1], samp,
+                                      jnp.zeros(1, jnp.int32))[0])
+        else:
+            first = int(jnp.argmax(logits[0]))
+        req.generated = [first]
         self.active[slot] = req
         self.slot_age[slot] = 1  # first token came from prefill
         self._emit_admission(req, slot, now)
@@ -782,12 +914,13 @@ class Engine:
         slots = self.free_slots()[: len(self.pending)]
         if not slots:
             return 0
-        if sync:  # validate BEFORE popping — a raise must not drop requests
-            for r in self.pending[: len(slots)]:
-                if r.max_new_tokens > self._gen_cap:
-                    raise ValueError(
-                        f"request {r.rid}: max_new_tokens {r.max_new_tokens} "
-                        f"exceeds gen_buf_len {self._gen_cap}")
+        for r in self.pending[: len(slots)]:
+            # validate BEFORE popping — a raise must not drop requests
+            if sync and r.max_new_tokens > self._gen_cap:
+                raise ValueError(
+                    f"request {r.rid}: max_new_tokens {r.max_new_tokens} "
+                    f"exceeds gen_buf_len {self._gen_cap}")
+            self._validate_sampled(r)
         reqs = [self.pending.pop(0) for _ in slots]
         k = len(reqs)
         lens = np.full(B, P, np.int32)
@@ -812,8 +945,9 @@ class Engine:
         if sync:
             budgets = np.zeros(B, np.int32)
             budgets[:k] = [r.max_new_tokens for r in reqs]
+            samp, sig = self._admit_samp_args(reqs, B)
             self.sync = _sync_admit(self.sync, logits, jnp.asarray(slot_idx),
-                                    jnp.asarray(budgets), sig=self._sig)
+                                    jnp.asarray(budgets), samp, sig=sig)
             for req, slot in zip(reqs, slots, strict=True):
                 req.start_slot = now
                 req.first_token_slot = now
@@ -824,7 +958,12 @@ class Engine:
                 self._emit_admission(req, slot, now)
             return k
         self.blocking_syncs += 1
-        first = np.asarray(jnp.argmax(logits[:k], axis=-1))
+        samp, sig = self._admit_samp_args(reqs, B)
+        if sig.sampling:
+            first = np.asarray(_sample_first(
+                logits, samp, jnp.zeros(B, jnp.int32)))[:k]
+        else:
+            first = np.asarray(jnp.argmax(logits[:k], axis=-1))
         for j, (req, slot) in enumerate(zip(reqs, slots, strict=True)):
             req.start_slot = now
             req.first_token_slot = now
@@ -858,10 +997,12 @@ class Engine:
             toks = jnp.asarray(
                 [r.generated[-1] if r else 0 for r in self.active], jnp.int32
             )
-            self._key, sub = jax.random.split(self._key)
+            samp, ages, hist, sig = self._samp_decode_args()
             tr = self.obs.trace
             t0 = tr.now() if tr.enabled else 0.0
-            nxt, self.state = self._decode(self.params, self.state, toks, sub)
+            nxt, self.state = _decode_one(self.params, self.state, toks,
+                                          samp, ages, hist,
+                                          cfg=self.cfg, sig=sig)
             self.decode_dispatches += 1
             self.blocking_syncs += 1
             if tr.enabled:
@@ -903,11 +1044,12 @@ class Engine:
             toks = jnp.asarray(
                 [r.generated[-1] if r else 0 for r in self.active], jnp.int32
             )
-            self._key, sub = jax.random.split(self._key)
+            samp, ages, hist, sig = self._samp_decode_args()
             tr = self.obs.trace
             t0 = tr.now() if tr.enabled else 0.0
-            all_toks, self.state = self._decode_n(
-                self.params, self.state, toks, sub, n=n_steps
+            all_toks, self.state = _decode_n(
+                self.params, self.state, toks, samp, ages, hist,
+                n=n_steps, cfg=self.cfg, sig=sig,
             )
             self.decode_dispatches += 1
             self.blocking_syncs += 1
@@ -1059,12 +1201,12 @@ class Engine:
         admitted = self.admit_pending(now, sync=True)
         n_active = sum(r is not None for r in self.active)
         if n_active:
-            self._key, sub = jax.random.split(self._key)
+            samp, sig = self._samp_args()
             tr = self.obs.trace
             t0 = tr.now() if tr.enabled else 0.0
             self.state, self.sync, served_steps = _decode_n_sync(
-                self.params, self.state, self.sync, sub,
-                n=n_steps, cfg=self.cfg, sig=self._sig,
+                self.params, self.state, self.sync, samp,
+                n=n_steps, cfg=self.cfg, sig=sig,
             )
             self.decode_dispatches += 1
             if tr.enabled:
@@ -1238,14 +1380,14 @@ class Engine:
         n_active = sum(r is not None for r in self.active)
         tr = self.obs.trace
         if plan is not None:
-            self._key, sub = jax.random.split(self._key)
+            samp, sig = self._samp_args()
             t0 = tr.now() if tr.enabled else 0.0
             self.state, self.sync, served_steps = _chunk_decode_sync(
                 self.params, self.state, self.sync,
                 jnp.asarray(plan["toks"]), jnp.asarray(plan["pos0"]),
                 jnp.asarray(plan["valid"]), jnp.asarray(plan["reset"]),
                 jnp.asarray(plan["final"]), jnp.asarray(plan["budgets"]),
-                sub, n=n_steps, cfg=self.cfg, sig=self._sig,
+                samp, n=n_steps, cfg=self.cfg, sig=sig,
             )
             self.decode_dispatches += 1
             if tr.enabled:
@@ -1255,11 +1397,11 @@ class Engine:
             self._finish_chunk_plan(plan, now)
             self._post_readback(now, served_steps)
         elif n_active:
-            self._key, sub = jax.random.split(self._key)
+            samp, sig = self._samp_args()
             t0 = tr.now() if tr.enabled else 0.0
             self.state, self.sync, served_steps = _decode_n_sync(
-                self.params, self.state, self.sync, sub,
-                n=n_steps, cfg=self.cfg, sig=self._sig,
+                self.params, self.state, self.sync, samp,
+                n=n_steps, cfg=self.cfg, sig=sig,
             )
             self.decode_dispatches += 1
             if tr.enabled:
@@ -1320,6 +1462,7 @@ class PagedEngine(Engine):
         self._now = 0
         self.MP = ecfg.max_pages_per_req or max(ecfg.cache_len // ps, P // ps + 1)
         self._sig = _DecodeSig.of(ecfg)
+        self._init_sampling(ecfg)
         self._ragged = ecfg.ragged_prefill and ragged_prefill_supported(cfg)
         self._buckets = _prompt_buckets(P, quantum=ps)
         self._gen_cap = ecfg.gen_buf_len or ecfg.cache_len
@@ -1342,7 +1485,6 @@ class PagedEngine(Engine):
         self.block_tables = np.full((R, self.MP), -1, np.int32)
         self.pos = np.zeros(R, np.int32)
         self.sync = sync_state_init(R, self._gen_cap)
-        self._key = jax.random.PRNGKey(ecfg.seed)
         self.active = [None] * R
         self.pending = []
         self.finished = []
@@ -1535,6 +1677,7 @@ class PagedEngine(Engine):
                 raise ValueError(
                     f"request {req.rid}: max_new_tokens {req.max_new_tokens} "
                     f"exceeds gen_buf_len {self._gen_cap}")
+            self._validate_sampled(req)
             L = max(1, min(len(req.tokens), P)) if self._ragged else P
             # prefix sharing: resident full pages cover the prompt head; cap
             # at (L-1)//ps so the final prompt token always recomputes (its
@@ -1585,18 +1728,25 @@ class PagedEngine(Engine):
         if tr.enabled:
             tr.emit("dispatch", slot=now, pid=self.obs_pid, ts=t0,
                     dur=tr.now() - t0, what="prefill", rows=len(take))
+        admit_reqs = [req for _row, req, _pages, _L, _ns in take]
         if sync:
             rows_arr = np.full(R, R, np.int32)
             budgets = np.zeros(R, np.int32)
             for j, (row, req, _pages, _L, _ns) in enumerate(take):
                 rows_arr[j] = row
                 budgets[j] = req.max_new_tokens
+            samp, sig = self._admit_samp_args(admit_reqs, R)
             self.sync = _sync_admit(self.sync, logits, jnp.asarray(rows_arr),
-                                    jnp.asarray(budgets), sig=self._sig)
+                                    jnp.asarray(budgets), samp, sig=sig)
             first = [None] * len(take)
         else:
             self.blocking_syncs += 1
-            first = np.asarray(jnp.argmax(logits[: len(take)], axis=-1))
+            samp, sig = self._admit_samp_args(admit_reqs, R)
+            if sig.sampling:
+                first = np.asarray(_sample_first(
+                    logits, samp, jnp.zeros(R, jnp.int32)))[: len(take)]
+            else:
+                first = np.asarray(jnp.argmax(logits[: len(take)], axis=-1))
         for j, (row, req, pages, L, _ns) in enumerate(take):
             req.start_slot = now
             req.first_token_slot = now
@@ -1665,10 +1815,10 @@ class PagedEngine(Engine):
                 pos=jnp.asarray(self.pos),
                 last_tok=toks,
             )
-            self._key, sub = jax.random.split(self._key)
+            samp, ages, hist, sig = self._samp_decode_args()
             all_toks, state = _decode_n_paged(
-                self.params, state, toks, sub, n=n_steps, cfg=self.cfg,
-                sig=self._sig,
+                self.params, state, toks, samp, ages, hist,
+                n=n_steps, cfg=self.cfg, sig=sig,
             )
             self.pools = state.pools
             self.decode_dispatches += 1
@@ -1729,10 +1879,10 @@ class PagedEngine(Engine):
                 pos=jnp.asarray(self.pos.copy()),
                 last_tok=jnp.zeros_like(self.sync.cur_tok),
             )
-            self._key, sub = jax.random.split(self._key)
+            samp, sig = self._samp_args()
             state, self.sync, served_steps = _decode_n_sync_paged(
-                self.params, state, self.sync, sub,
-                n=n_steps, cfg=self.cfg, sig=self._sig,
+                self.params, state, self.sync, samp,
+                n=n_steps, cfg=self.cfg, sig=sig,
             )
             self.pools = state.pools
             self.decode_dispatches += 1
@@ -1905,19 +2055,19 @@ class PagedEngine(Engine):
                 pos=jnp.asarray(self.pos.copy()),
                 last_tok=jnp.zeros_like(self.sync.cur_tok),
             )
-            self._key, sub = jax.random.split(self._key)
+            samp, sig = self._samp_args()
             if plan is not None:
                 state, self.sync, served_steps = _chunk_decode_sync_paged(
                     self.params, state, self.sync,
                     jnp.asarray(plan["toks"]), jnp.asarray(plan["pos0"]),
                     jnp.asarray(plan["valid"]), jnp.asarray(plan["final"]),
-                    jnp.asarray(plan["budgets"]), sub,
-                    n=n_steps, cfg=self.cfg, sig=self._sig,
+                    jnp.asarray(plan["budgets"]), samp,
+                    n=n_steps, cfg=self.cfg, sig=sig,
                 )
             else:
                 state, self.sync, served_steps = _decode_n_sync_paged(
-                    self.params, state, self.sync, sub,
-                    n=n_steps, cfg=self.cfg, sig=self._sig,
+                    self.params, state, self.sync, samp,
+                    n=n_steps, cfg=self.cfg, sig=sig,
                 )
             self.pools = state.pools
             self.decode_dispatches += 1

@@ -37,8 +37,12 @@ dropped (its completions can never land, so nothing is double-served), its
 paged pages are freed back to that replica's pool (leak-checked in tests),
 and every request it had not finished — queued, mid-chunked-prefill, or
 mid-decode — is reset (``generated``/``start_slot`` cleared, exactly the
-engine's preemption protocol) and re-routed to the survivors, where greedy
-decoding reproduces the identical tokens. ``drain_replica(i)`` is the
+engine's preemption protocol) and re-routed to the survivors, where
+decoding reproduces the identical tokens — greedy trivially, and sampled
+requests because the sampling RNG is request-keyed (seed, rid, token
+index; DESIGN.md §13): a requeued request re-derives the same draws on
+any replica, at any row, whatever the survivor already has in flight.
+``drain_replica(i)`` is the
 graceful version: stop routing to the replica and move its *queued* work
 away while its in-flight rows finish normally; ``resume_replica`` undoes
 it. ``drain()`` flushes every live replica's readback tail and is

@@ -18,6 +18,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.runtime.sampling import SamplingParams
+
 
 @dataclasses.dataclass
 class Request:
@@ -29,6 +31,11 @@ class Request:
     tenant: str = "default"
     priority: int = 0             # higher = shed later under overload
     deadline_slots: Optional[int] = None  # TTFT deadline (slots after arrival)
+    # per-request sampling knobs (DESIGN.md §13). None = the engine default
+    # (pure greedy unless the engine config says otherwise). The RNG is
+    # keyed on (seed, rid, token index), so the stream survives preemption,
+    # fleet requeue, and any batch composition bit-identically.
+    sampling: Optional[SamplingParams] = None
     # filled by the engine:
     admit_slot: Optional[int] = None
     start_slot: Optional[int] = None

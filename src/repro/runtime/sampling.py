@@ -1,0 +1,230 @@
+"""Per-request device-resident sampling layer (DESIGN.md §13).
+
+``SamplingParams`` rides on a ``Request``; the engine batches the active
+rows' params into per-row device tables (``RowSampling``) that enter the
+fused decode dispatch as arguments — exactly how the paged engine ships
+block tables — so heterogeneous per-row temperature/top-k/top-p and
+repetition/presence/frequency penalties are applied *inside* the one
+jitted scan, with no extra dispatches.
+
+RNG contract (the determinism the differential harness enforces): the key
+for a request's token at index ``age`` (0 = the first generated token,
+sampled from the prefill logits) is
+
+    fold_in(fold_in(PRNGKey(seed), rid), age)
+
+with ``seed = params.seed if params.seed is not None else engine seed``.
+No per-dispatch key, no batch-row fold: a request's stream is a pure
+function of (params, prompt, seed, age), invariant under row placement,
+batch composition, preemption/recompute, and fleet requeue.
+
+Penalty semantics (applied to raw fp32 logits, before temperature):
+  * history = the request's *generated* tokens so far (the sync paths read
+    the device ``gen_buf`` ring; the legacy/fused paths carry a host-built
+    history through the scan). Prompt tokens are not penalized, and the
+    first generated token sees an empty history.
+  * repetition (CTRL-style, multiplicative): for tokens already generated,
+    ``logit/r`` if positive else ``logit*r``.
+  * presence (flat): ``- presence_penalty`` for any token generated >= 1
+    time; frequency (per-occurrence): ``- frequency_penalty * count``.
+Then temperature, then the top-k/top-p filter (one stable descending sort
+serves both: exact k-cutoff with ties broken to the lowest token id,
+smallest nucleus whose mass reaches top_p, always >= 1 candidate), then a
+categorical draw with the request-keyed PRNG. ``temperature <= 1e-6``
+short-circuits to the argmax of the *penalized* logits — never a divide —
+so temperature 0.0 (and 1e-9) is exact greedy, not an fp32 overflow.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Temperatures at or below this threshold route to exact argmax instead of
+# a divide (the old sampler's max(T, 1e-6) sent temperature=0 to logits*1e6
+# — fp32 overflow → inf/nan draws).
+GREEDY_TEMP = 1e-6
+
+_NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs (all defaults = engine-greedy behavior
+    except ``temperature``, whose default 1.0 means "sample the raw
+    distribution"). Validation raises at construction — i.e. at admission,
+    before the request can reach a device dispatch."""
+
+    temperature: float = 1.0      # <= 1e-6 => greedy argmax (0 is valid)
+    top_k: int = 0                # 0 = full vocabulary; > vocab clamps to vocab
+    top_p: float = 1.0            # nucleus mass in (0, 1]; 1.0 = off
+    repetition_penalty: float = 1.0   # CTRL-style multiplicative; 1.0 = off
+    presence_penalty: float = 0.0     # flat once-seen penalty; 0.0 = off
+    frequency_penalty: float = 0.0    # per-occurrence penalty; 0.0 = off
+    seed: Optional[int] = None    # None => the engine's seed
+
+    def __post_init__(self):
+        if not self.temperature >= 0.0:
+            raise ValueError(
+                f"temperature must be >= 0 (0 = greedy), got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(
+                f"top_k must be >= 0 (0 = full vocabulary), got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if not self.repetition_penalty > 0.0:
+            raise ValueError(
+                "repetition_penalty must be > 0 (1 = off), "
+                f"got {self.repetition_penalty}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= GREEDY_TEMP
+
+    @property
+    def is_pure_greedy(self) -> bool:
+        """Greedy with every penalty off — indistinguishable from the
+        engine's built-in argmax path, so rows carrying it stay on the
+        sampling-free executable."""
+        return (self.greedy
+                and self.repetition_penalty == 1.0
+                and self.presence_penalty == 0.0
+                and self.frequency_penalty == 0.0)
+
+
+class RowSampling(NamedTuple):
+    """Per-row parameter tables for one decode dispatch (row-aligned with
+    the batch axis). Host-built from the active requests each slot — like
+    block tables, they are arguments, not persistent device state."""
+
+    seed: jax.Array    # (B,) uint32 — resolved per-request base seed
+    rid: jax.Array     # (B,) int32  — folded into the key after the seed
+    temp: jax.Array    # (B,) f32
+    top_k: jax.Array   # (B,) i32    — 0 = off
+    top_p: jax.Array   # (B,) f32    — 1.0 = off
+    rep: jax.Array     # (B,) f32
+    pres: jax.Array    # (B,) f32
+    freq: jax.Array    # (B,) f32
+    greedy: jax.Array  # (B,) bool   — argmax rows (penalties still apply)
+
+
+def row_tables(resolved: Sequence[Optional[tuple]],
+               default_seed: int) -> RowSampling:
+    """Build the device tables from per-row ``(params, rid)`` tuples
+    (``None`` = inactive or pure-greedy row). Row order must match the
+    dispatch's batch axis."""
+    B = len(resolved)
+    seed = np.full(B, np.uint32(default_seed) & np.uint32(0xFFFFFFFF))
+    rid = np.zeros(B, np.int32)
+    temp = np.ones(B, np.float32)
+    top_k = np.zeros(B, np.int32)
+    top_p = np.ones(B, np.float32)
+    rep = np.ones(B, np.float32)
+    pres = np.zeros(B, np.float32)
+    freq = np.zeros(B, np.float32)
+    greedy = np.ones(B, bool)
+    for row, entry in enumerate(resolved):
+        if entry is None:
+            continue
+        p, r = entry
+        if p.seed is not None:
+            seed[row] = np.uint32(p.seed & 0xFFFFFFFF)
+        rid[row] = np.int32(r & 0x7FFFFFFF)
+        temp[row] = p.temperature
+        top_k[row] = p.top_k
+        top_p[row] = p.top_p
+        rep[row] = p.repetition_penalty
+        pres[row] = p.presence_penalty
+        freq[row] = p.frequency_penalty
+        greedy[row] = p.greedy
+    return RowSampling(jnp.asarray(seed), jnp.asarray(rid), jnp.asarray(temp),
+                       jnp.asarray(top_k), jnp.asarray(top_p),
+                       jnp.asarray(rep), jnp.asarray(pres), jnp.asarray(freq),
+                       jnp.asarray(greedy))
+
+
+def _penalize(lg, samp: RowSampling, gen, gen_len):
+    """Apply repetition/presence/frequency penalties over the generated
+    history ``gen[:, :gen_len]`` (a ring buffer in the sync paths — callers
+    guarantee gen_len <= cap, so no live token has been overwritten)."""
+    B, V = lg.shape
+    cap = gen.shape[1]
+    live = jnp.arange(cap)[None, :] < jnp.minimum(gen_len, cap)[:, None]
+    rows = jnp.broadcast_to(jnp.arange(B)[:, None], (B, cap))
+    # integer scatter-add: exact and order-independent, so counts are
+    # bit-stable across batch shapes and backends
+    counts = jnp.zeros((B, V), jnp.int32).at[rows, gen].add(
+        live.astype(jnp.int32), mode="drop").astype(jnp.float32)
+    seen = counts > 0
+    rep = samp.rep[:, None]
+    lg = jnp.where(seen, jnp.where(lg > 0, lg / rep, lg * rep), lg)
+    return lg - samp.freq[:, None] * counts - samp.pres[:, None] * seen
+
+
+def sample_rows(logits, samp: RowSampling, ages, gen=None, gen_len=None):
+    """Sample one token per row with heterogeneous per-row params.
+
+    ``ages`` is each row's generated-token index (0 = first token, from
+    prefill logits); ``gen``/``gen_len`` the per-row generated history for
+    penalties (None = empty history: the first-token case). Greedy rows
+    (temperature <= GREEDY_TEMP) take the argmax of the penalized logits.
+    Works traced (inside the decode scans) and eagerly (the host-side
+    oracle the tests and the sampling bench compare against).
+    """
+    B, V = logits.shape
+    lg = logits.astype(jnp.float32)
+    if gen is not None:
+        lg = _penalize(lg, samp, gen, gen_len)
+    greedy_pick = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+    # temperature (greedy rows never reach the categorical — the clamp only
+    # keeps their lanes finite inside the masked computation)
+    lg = lg / jnp.maximum(samp.temp, GREEDY_TEMP)[:, None]
+
+    # One stable descending sort serves both filters. Ties rank by token id
+    # (stable sort), so the k-cutoff is exact: exactly min(k, V) survivors,
+    # lowest ids winning ties — not "everything tied with the k-th".
+    order = jnp.argsort(lg, axis=-1, descending=True, stable=True)
+    ranks = jnp.argsort(order, axis=-1)          # rank of token v in its row
+    k_eff = jnp.where(samp.top_k > 0,
+                      jnp.minimum(samp.top_k, V), V)      # clamp top_k > V
+    sorted_lg = jnp.take_along_axis(lg, order, axis=-1)
+    probs = jax.nn.softmax(sorted_lg, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # smallest prefix whose mass reaches top_p (the token that crosses the
+    # threshold is kept); top_p = 1.0 is exactly "off"
+    p_cnt = jnp.sum((cum - probs) < samp.top_p[:, None], axis=-1)
+    p_cnt = jnp.where(samp.top_p >= 1.0, V, p_cnt)
+    n_keep = jnp.maximum(jnp.minimum(k_eff, p_cnt), 1).astype(jnp.int32)
+    lg = jnp.where(ranks < n_keep[:, None], lg, _NEG_INF)
+
+    def draw(seed, rid, age, row_lg):
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(seed), rid), age)
+        return jax.random.categorical(key, row_lg)
+
+    sampled = jax.vmap(draw)(samp.seed, samp.rid,
+                             ages.astype(jnp.int32), lg).astype(jnp.int32)
+    return jnp.where(samp.greedy, greedy_pick, sampled)
+
+
+def sample_oracle(logits_row, params: SamplingParams, rid: int,
+                  default_seed: int, age: int,
+                  history=()) -> int:
+    """Eager single-row reference: the token ``sample_rows`` must produce
+    for this (params, rid, seed, age, history) regardless of batch shape or
+    row placement — the host-side oracle the bench's TOKEN_MISMATCH gate
+    and the unit tests compare against."""
+    samp = row_tables([(params, rid)], default_seed)
+    hist = np.asarray(list(history), np.int32).reshape(1, -1)
+    if hist.shape[1]:
+        gen = jnp.asarray(hist)
+        gen_len = jnp.asarray([hist.shape[1]], np.int32)
+    else:
+        gen = gen_len = None
+    out = sample_rows(jnp.asarray(logits_row)[None, :], samp,
+                      jnp.asarray([age], np.int32), gen, gen_len)
+    return int(out[0])

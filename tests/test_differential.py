@@ -8,9 +8,10 @@ mixes, preemption pressure) drives every engine x serving-mode combination —
 
 — and asserts the repo's equivalence contract on each run:
 
-  * identical greedy token streams per request (generation is a pure
-    function of the prompt under greedy decoding, whatever the dispatch
-    schedule),
+  * identical token streams per request — greedy generation is a pure
+    function of the prompt, and a *sampled* request's stream is a pure
+    function of (prompt, params, seed, rid) under the request-keyed RNG,
+    whatever the dispatch schedule,
   * identical retirement sets (every submitted request finishes exactly
     once),
   * conservation of served counts (the per-slot served history plus the
@@ -46,6 +47,7 @@ from repro.runtime import (
     ReplicaFleet,
 )
 from repro.runtime.request import Request
+from repro.runtime.sampling import SamplingParams
 
 KEY = jax.random.PRNGKey(0)
 _CACHE = {}
@@ -59,11 +61,27 @@ def _setup():
 
 
 # --------------------------------------------------------------- workloads
+# Heterogeneous per-request sampling presets, cycled by rid: temperature /
+# top-k / top-p / penalty mixes, a temperature-0 row (greedy via the
+# sampler), and engine-default greedy rows (None) all share each batch.
+SAMPLING_PRESETS = (
+    SamplingParams(temperature=0.7, top_k=8, seed=101),
+    SamplingParams(temperature=1.2, top_p=0.85, seed=102),
+    SamplingParams(temperature=0.9, top_k=12, top_p=0.95,
+                   repetition_penalty=1.3, seed=103),
+    SamplingParams(temperature=0.8, presence_penalty=0.5,
+                   frequency_penalty=0.2, seed=104),
+    SamplingParams(temperature=0.0),
+    None,
+)
+
+
 def make_workload(seed: int, n_reqs: int = 10, prompt_len: int = 16,
                   min_prompt: int = 1, max_new_lo: int = 1,
-                  max_new_hi: int = 8, burst: int = 4):
+                  max_new_hi: int = 8, burst: int = 4, sampling: bool = False):
     """Seeded random workload: ragged prompts, mixed budgets, bursty
-    arrivals (a schedule of (slot, [requests]) pairs)."""
+    arrivals (a schedule of (slot, [requests]) pairs). ``sampling`` attaches
+    the heterogeneous SAMPLING_PRESETS cycle by rid."""
     rng = np.random.default_rng(seed)
     vocab = 256
     reqs, schedule, slot = [], [], 0
@@ -77,6 +95,8 @@ def make_workload(seed: int, n_reqs: int = 10, prompt_len: int = 16,
                 rid=rid, arrival_slot=slot,
                 tokens=rng.integers(0, vocab, plen, dtype=np.int32),
                 max_new_tokens=int(rng.integers(max_new_lo, max_new_hi + 1)),
+                sampling=(SAMPLING_PRESETS[rid % len(SAMPLING_PRESETS)]
+                          if sampling else None),
             ))
             rid += 1
         schedule.append((slot, batch))
@@ -223,6 +243,55 @@ def test_differential_instant_finish():
                        chunk_kw={"chunk_size": 4})
 
 
+def test_differential_sampling_fixed_seed():
+    """Seeded-sampling matrix, fast cell: heterogeneous per-row params
+    (SAMPLING_PRESETS) across the full engine x mode matrix — bit-identical
+    streams and served-count conservation, same contract as greedy."""
+    cfg, params = _setup()
+    reqs, schedule = make_workload(seed=41, sampling=True)
+    _assert_equivalent(cfg, params, reqs, schedule,
+                       chunk_kw={"chunk_size": 4})
+
+
+def test_differential_sampling_preemption_pressure():
+    """Sampled requests preempted-and-recomputed under pool pressure must
+    replay their exact streams — the request-keyed RNG re-derives every
+    token from (seed, rid, age) on the second pass."""
+    cfg, params = _setup()
+    reqs, schedule = make_workload(seed=43, n_reqs=8, max_new_lo=4,
+                                   max_new_hi=10, sampling=True)
+    dense = _mk_engine("dense", cfg, params)
+    ref_streams, ref_retired, _ = drive(dense, "fused", reqs, schedule)
+    for mode, kw in [("sync", {}), ("chunked", {"chunk_size": 8})]:
+        eng = _mk_engine("paged", cfg, params, tight=True, **kw)
+        streams, retired, (served, finished) = drive(eng, mode, reqs, schedule)
+        assert streams == ref_streams and retired == ref_retired, mode
+        assert served == finished == len(reqs)
+
+
+@pytest.mark.slow
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6),
+       chunk_size=st.sampled_from([3, 4, 8, 16]),
+       n_steps=st.integers(min_value=1, max_value=3))
+def test_differential_sampling_fuzz(seed, chunk_size, n_steps):
+    """Slow-lane sweep: random seeds x chunk geometry x scan depth over
+    sampled workloads — the dispatch schedule must never leak into a
+    sampled stream."""
+    cfg, params = _setup()
+    reqs, schedule = make_workload(seed=seed % 997, n_reqs=8, sampling=True)
+    ref_eng = _mk_engine("dense", cfg, params)
+    ref_streams, ref_retired, _ = drive(ref_eng, "fused", reqs, schedule,
+                                        n_steps=n_steps)
+    for kind in ("dense", "paged"):
+        eng = _mk_engine(kind, cfg, params, chunk_size=chunk_size)
+        streams, retired, (served, finished) = drive(
+            eng, "chunked", reqs, schedule, n_steps=n_steps)
+        assert streams == ref_streams, (kind, seed)
+        assert retired == ref_retired
+        assert served == finished == len(reqs)
+
+
 @pytest.mark.slow
 @settings(max_examples=8, deadline=None)
 @given(seed=st.integers(min_value=0, max_value=10**6),
@@ -290,6 +359,47 @@ def test_differential_fleet(kind, n_replicas):
         reqs, schedule = make_shared_workload(seed=17, n_reqs=12)
     else:
         reqs, schedule = make_workload(seed=17, n_reqs=12)
+    ref_eng = _mk_engine("dense", cfg, params)
+    ref_streams, ref_retired, _ = drive(ref_eng, "fused", reqs, schedule)
+    fleet = ReplicaFleet.build(lambda: _mk_engine(kind, cfg, params),
+                               n_replicas, router=FleetRouter(kind="drift"))
+    streams, retired, (served, finished) = drive(fleet, "sync", reqs,
+                                                 schedule)
+    assert streams == ref_streams, (kind, n_replicas)
+    assert retired == ref_retired, (kind, n_replicas)
+    assert served == finished == len(reqs), (kind, n_replicas)
+
+
+def test_differential_fleet_sampled_fast():
+    """Seeded-sampling fleet, fast cell: a 2-replica paged fleet routing a
+    heterogeneous sampled workload merges the single-engine streams — the
+    row a request lands in (which replica, which slot) never reaches the
+    RNG."""
+    cfg, params = _setup()
+    reqs, schedule = make_workload(seed=47, n_reqs=12, sampling=True)
+    ref_eng = _mk_engine("dense", cfg, params)
+    ref_streams, ref_retired, _ = drive(ref_eng, "fused", reqs, schedule)
+    fleet = ReplicaFleet.build(lambda: _mk_engine("paged", cfg, params), 2,
+                               router=FleetRouter(kind="drift"))
+    streams, retired, (served, finished) = drive(fleet, "sync", reqs,
+                                                 schedule)
+    assert streams == ref_streams and retired == ref_retired
+    assert served == finished == len(reqs)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["dense", "paged", "shared"])
+@pytest.mark.parametrize("n_replicas", [1, 2, 4])
+def test_differential_fleet_sampled_sweep(kind, n_replicas):
+    """Slow-lane sweep: {dense, paged, shared} x {1, 2, 4} replicas on
+    sampled workloads (shared adds the common-prefix shape so
+    prefix-affinity routing is in the loop)."""
+    cfg, params = _setup()
+    if kind == "shared":
+        reqs, schedule = make_shared_workload(seed=53, n_reqs=12,
+                                              sampling=True)
+    else:
+        reqs, schedule = make_workload(seed=53, n_reqs=12, sampling=True)
     ref_eng = _mk_engine("dense", cfg, params)
     ref_streams, ref_retired, _ = drive(ref_eng, "fused", reqs, schedule)
     fleet = ReplicaFleet.build(lambda: _mk_engine(kind, cfg, params),

@@ -1,0 +1,320 @@
+"""Per-request sampling layer: unit semantics + disruption invariance.
+
+Unit half (no model): ``SamplingParams`` validation rejects bad knobs at
+construction (= admission), temperature 0.0 and 1e-9 route to exact greedy
+argmax instead of an fp32-overflowing divide, the top-k cutoff keeps
+exactly min(k, V) survivors with ties broken to the lowest token id,
+top_k > vocab_size clamps to full-vocabulary sampling, penalties read the
+generated history only, and a row's draw is invariant to where in the
+batch it sits (the single-row oracle agrees at every placement).
+
+Engine half (the headline ISSUE-9 regression): one seeded sampled request
+must produce the identical token stream when served solo at row 0, packed
+at a different row among greedy neighbors, preempted-and-recomputed on a
+page-starved paged engine, and requeued across replicas by a fleet
+failure — the request-keyed RNG (seed, rid, age) makes the stream a pure
+function of the request, not of its placement history.
+"""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.control import FleetRouter
+from repro.models import init_params
+from repro.runtime import (
+    Engine,
+    EngineConfig,
+    PagedEngine,
+    PagedEngineConfig,
+    ReplicaFleet,
+    Request,
+    SamplingParams,
+)
+from repro.runtime.sampling import row_tables, sample_oracle, sample_rows
+
+KEY = jax.random.PRNGKey(0)
+_CACHE = {}
+
+
+def _setup():
+    if "m" not in _CACHE:
+        cfg = get_config("granite-3-2b", smoke=True)
+        _CACHE["m"] = (cfg, init_params(KEY, cfg))
+    return _CACHE["m"]
+
+
+# ---------------------------------------------------------------- validation
+@pytest.mark.parametrize("kw,msg", [
+    (dict(temperature=-0.5), "temperature must be >= 0"),
+    (dict(temperature=float("nan")), "temperature must be >= 0"),
+    (dict(top_k=-1), "top_k must be >= 0"),
+    (dict(top_p=0.0), "top_p must be in"),
+    (dict(top_p=1.5), "top_p must be in"),
+    (dict(repetition_penalty=0.0), "repetition_penalty must be > 0"),
+])
+def test_bad_params_rejected_at_construction(kw, msg):
+    """Admission-time validation: a request can never carry invalid knobs
+    to a device dispatch."""
+    with pytest.raises(ValueError, match=msg):
+        SamplingParams(**kw)
+
+
+# ------------------------------------------------------------- greedy routing
+@pytest.mark.parametrize("temp", [0.0, 1e-9])
+def test_temperature_zero_is_exact_greedy(temp):
+    """temperature <= 1e-6 must take the argmax branch — the old sampler's
+    max(T, 1e-6) divide sent temperature=0 through logits * 1e6 (fp32
+    overflow -> inf/nan draws). Large-magnitude logits make the overflow
+    observable if the divide ever comes back."""
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(3, 97)) * 1e4, jnp.float32)
+    p = SamplingParams(temperature=temp, seed=1)
+    samp = row_tables([(p, r) for r in (5, 6, 7)], 0)
+    out = sample_rows(logits, samp, jnp.zeros(3, jnp.int32))
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(jnp.argmax(logits, axis=-1)))
+
+
+# ------------------------------------------------------------------- top-k
+def _draw_support(logits_row, p, rid=9, n=300):
+    """The set of tokens the sampler actually emits for one row across n
+    ages (each age is an independent request-keyed draw)."""
+    B = n
+    samp = row_tables([(p, rid)] * B, 0)
+    lg = jnp.broadcast_to(jnp.asarray(logits_row, jnp.float32), (B, len(logits_row)))
+    out = sample_rows(lg, samp, jnp.arange(B, dtype=jnp.int32))
+    return set(np.asarray(out).tolist())
+
+
+def test_topk_tied_logits_keeps_exactly_k():
+    """Tied logits at the cutoff: the old ``lg < kth`` mask kept every token
+    tied with the k-th (k=2 on four tied maxima sampled from 4 tokens).
+    The stable-sort cutoff keeps exactly min(k, V) survivors, lowest token
+    ids winning ties."""
+    row = np.array([1, 1, 1, 1, 0, 0, 0, 0], np.float32)
+    assert _draw_support(row, SamplingParams(temperature=1.0, top_k=2,
+                                             seed=3)) == {0, 1}
+    # cutoff inside the tied-zeros group: 4 ones + the lowest-id zero
+    assert _draw_support(row, SamplingParams(temperature=1.0, top_k=5,
+                                             seed=3)) == {0, 1, 2, 3, 4}
+
+
+def test_topk_tied_logits_batch():
+    """Heterogeneous k over a batch of tied rows in ONE dispatch: each row's
+    survivor set is its own exact cutoff."""
+    row = np.array([2, 2, 2, 0, 0, 0], np.float32)
+    ks = [1, 2, 4, 6]
+    B, reps = len(ks), 200
+    samp = row_tables(
+        [(SamplingParams(temperature=1.0, top_k=k, seed=7), 50 + i)
+         for i, k in enumerate(ks) for _ in range(reps)], 0)
+    lg = jnp.broadcast_to(jnp.asarray(row), (B * reps, len(row)))
+    ages = jnp.tile(jnp.arange(reps, dtype=jnp.int32), B)
+    out = np.asarray(sample_rows(lg, samp, ages)).reshape(B, reps)
+    support = [set(r.tolist()) for r in out]
+    assert support[0] == {0}                   # k=1: lowest-id tied max
+    assert support[1] == {0, 1}
+    assert support[2] == {0, 1, 2, 3}          # crosses into the 0-ties
+    assert support[3] == {0, 1, 2, 3, 4, 5}    # k = V keeps everything
+
+
+def test_topk_beyond_vocab_clamps_to_full_vocab():
+    """top_k > vocab_size must behave exactly like top_k=0 (full vocab):
+    same seed/rid/age => bit-identical draws."""
+    rng = np.random.default_rng(1)
+    row = rng.normal(size=32).astype(np.float32)
+    big = _draw_support(row, SamplingParams(temperature=0.8, top_k=10**6,
+                                            seed=11), n=64)
+    off = _draw_support(row, SamplingParams(temperature=0.8, top_k=0,
+                                            seed=11), n=64)
+    assert big == off
+    # and elementwise, not just as sets
+    samp_big = row_tables([(SamplingParams(temperature=0.8, top_k=10**6,
+                                           seed=11), 9)] * 64, 0)
+    samp_off = row_tables([(SamplingParams(temperature=0.8, top_k=0,
+                                           seed=11), 9)] * 64, 0)
+    lg = jnp.broadcast_to(jnp.asarray(row), (64, 32))
+    ages = jnp.arange(64, dtype=jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(sample_rows(lg, samp_big, ages)),
+        np.asarray(sample_rows(lg, samp_off, ages)))
+
+
+# ---------------------------------------------------------------- penalties
+def test_penalties_read_generated_history():
+    """Presence/frequency/repetition act on generated tokens only, shifting
+    the (greedy) argmax off a repeated token."""
+    logits = np.zeros(16, np.float32)
+    logits[5], logits[6] = 3.0, 2.5
+    greedy = dict(temperature=0.0)
+    # no history: plain argmax
+    assert sample_oracle(logits, SamplingParams(**greedy), 1, 0, 0) == 5
+    # presence: one prior occurrence of 5 knocks it below 6
+    p = SamplingParams(presence_penalty=1.0, **greedy)
+    assert sample_oracle(logits, p, 1, 0, 1, history=[5]) == 6
+    assert sample_oracle(logits, p, 1, 0, 1, history=[4]) == 5  # 5 unseen
+    # frequency: scales with the count (one hit is not enough here)
+    f = SamplingParams(frequency_penalty=0.3, **greedy)
+    assert sample_oracle(logits, f, 1, 0, 2, history=[5]) == 5
+    assert sample_oracle(logits, f, 1, 0, 3, history=[5, 5]) == 6
+    # repetition (CTRL): positive logit divided by r
+    r = SamplingParams(repetition_penalty=4.0, **greedy)
+    assert sample_oracle(logits, r, 1, 0, 1, history=[5]) == 6
+
+
+# -------------------------------------------------- row-placement invariance
+def test_draw_invariant_to_row_placement():
+    """The same (params, rid, age, logits) must draw the same token at any
+    batch row, surrounded by any neighbors — the core ISSUE-9 property."""
+    rng = np.random.default_rng(2)
+    row = rng.normal(size=64).astype(np.float32)
+    p = SamplingParams(temperature=0.7, top_k=12, top_p=0.9, seed=13)
+    want = sample_oracle(row, p, rid=42, default_seed=0, age=3)
+    neighbors = [
+        (SamplingParams(temperature=1.3, seed=1), 7),
+        None,                                    # greedy row
+        (SamplingParams(temperature=0.0), 8),
+    ]
+    for pos in range(4):
+        resolved = neighbors[:pos] + [(p, 42)] + neighbors[pos:]
+        lg = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+        lg = lg.at[pos].set(jnp.asarray(row))
+        ages = jnp.full(4, 3, jnp.int32)
+        out = sample_rows(lg, row_tables(resolved, 0), ages)
+        assert int(out[pos]) == want
+
+
+# ------------------------------------------------------------- engine paths
+def _sampled_req(rid, toks, max_new, **kw):
+    return Request(rid=rid, arrival_slot=0, tokens=np.asarray(toks, np.int32),
+                   max_new_tokens=max_new, sampling=SamplingParams(**kw))
+
+
+def _greedy_req(rid, toks, max_new=8):
+    return Request(rid=rid, arrival_slot=0, tokens=np.asarray(toks, np.int32),
+                   max_new_tokens=max_new)
+
+
+def _dense(cfg, params, **kw):
+    base = dict(batch_slots=4, prompt_len=16, cache_len=64)
+    base.update(kw)
+    return Engine(cfg, params, EngineConfig(**base))
+
+
+def _run(eng, reqs, mode="sync", max_slots=80):
+    eng.submit([copy.deepcopy(r) for r in reqs])
+    step = {"sync": eng.step_slot_sync, "fused": eng.step_slot,
+            "chunked": eng.step_slot_chunked}[mode]
+    t = 0
+    while len(eng.finished) < len(reqs) and t < max_slots:
+        step(t, n_steps=2)
+        t += 1
+    if mode in ("sync", "chunked"):
+        eng.drain()
+    assert len(eng.finished) == len(reqs)
+    return {r.rid: tuple(r.generated) for r in eng.finished}
+
+
+def test_sampled_max_new_exceeds_history_cap_rejected():
+    """A sampled request whose max_new_tokens would wrap the gen_buf ring
+    (penalty history) is rejected at admission with a one-line error, on
+    dense and paged engines alike."""
+    cfg, params = _setup()
+    toks = np.arange(16, dtype=np.int32) % cfg.vocab_size
+    req = _sampled_req(900, toks, max_new=9, temperature=0.8, seed=1)
+    eng = _dense(cfg, params, gen_buf_len=8)
+    eng.submit([copy.deepcopy(req)])
+    with pytest.raises(ValueError, match="history capacity"):
+        eng.step_slot(0)
+    paged = PagedEngine(cfg, params, PagedEngineConfig(
+        prompt_len=16, cache_len=64, page_size=16, num_pages=16,
+        max_active=4, gen_buf_len=8))
+    paged.submit([copy.deepcopy(req)])
+    with pytest.raises(ValueError, match="history capacity"):
+        paged.step_slot(0)
+
+
+def test_requests_sampled_counter():
+    cfg, params = _setup()
+    rng = np.random.default_rng(3)
+    toks = lambda: rng.integers(0, cfg.vocab_size, 16, dtype=np.int32)
+    reqs = [_sampled_req(1, toks(), 4, temperature=0.8, seed=1),
+            _greedy_req(2, toks(), 4),
+            _sampled_req(3, toks(), 4, temperature=0.0)]  # temp-0 = greedy
+    eng = _dense(cfg, params)
+    _run(eng, reqs, mode="fused")
+    # temp-0-with-no-penalties collapses to the pure-greedy path, so only
+    # rid 1 counts as sampled
+    assert eng.counters()["requests_sampled"] == 1
+
+
+def test_sampled_stream_survives_disruption():
+    """THE ISSUE-9 regression: one seeded sampled request, identical token
+    stream under (a) solo at row 0, (b) a different row index among greedy
+    neighbors, (c) paged preempt-and-recompute, (d) fleet failure requeue
+    to another replica."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab_size, 16, dtype=np.int32)
+    skw = dict(temperature=0.9, top_k=8, seed=21)
+    target = lambda max_new=12: _sampled_req(777, prompt, max_new, **skw)
+    filler = lambda rid: _greedy_req(
+        rid, rng.integers(0, cfg.vocab_size, 16, dtype=np.int32), 12)
+
+    # (a) solo reference, row 0
+    ref = _run(_dense(cfg, params), [target()], mode="sync")[777]
+    assert len(ref) == 12
+
+    # (b) admitted at a different row among greedy neighbors
+    eng = _dense(cfg, params)
+    eng.submit([filler(1), filler(2), copy.deepcopy(target())])
+    eng.step_slot_sync(0, n_steps=1)
+    rows = [r.rid if r is not None else None for r in eng.active]
+    assert rows.index(777) == 2             # the placement actually differs
+    t = 1
+    while len(eng.finished) < 3 and t < 80:
+        eng.step_slot_sync(t, n_steps=2)
+        t += 1
+    eng.drain()
+    packed = {r.rid: tuple(r.generated) for r in eng.finished}
+    assert packed[777] == ref
+
+    # (c) paged preempt-and-recompute (page-starved pool forces a preempt);
+    # the longer run's stream must extend the solo stream (prefix property
+    # of the request-keyed RNG) and match its own solo reference exactly.
+    ref20 = _run(_dense(cfg, params, batch_slots=2), [target(20)],
+                 mode="fused")[777]
+    assert ref20[:12] == ref
+    paged = PagedEngine(cfg, params, PagedEngineConfig(
+        prompt_len=16, cache_len=64, page_size=16, num_pages=5,
+        max_active=2, max_pages_per_req=3))
+    comp = _sampled_req(778, rng.integers(0, cfg.vocab_size, 16,
+                                          dtype=np.int32), 20,
+                        temperature=1.1, top_p=0.8, seed=4)
+    got = _run(paged, [target(20), comp], mode="fused", max_slots=120)
+    assert paged.preemptions > 0
+    assert got[777] == ref20
+
+    # (d) fleet failure: requeue to the surviving replica mid-stream
+    fleet = ReplicaFleet.build(lambda: _dense(cfg, params), 2,
+                               router=FleetRouter())
+    reqs = [copy.deepcopy(target())] + [filler(i) for i in range(1, 6)]
+    fleet.submit([copy.deepcopy(r) for r in reqs])
+    for t in range(2):
+        fleet.step_slot_sync(t, n_steps=2)
+    victim = next(i for i, e in enumerate(fleet.replicas)
+                  if any(r is not None and r.rid == 777 for r in e.active)
+                  or any(r.rid == 777 for r in e.pending))
+    requeued = fleet.fail_replica(victim)
+    assert 777 in [r.rid for r in requeued]
+    t = 2
+    while len(fleet.finished) < len(reqs) and t < 80:
+        fleet.step_slot_sync(t, n_steps=2)
+        t += 1
+    fleet.drain()
+    streams = {r.rid: tuple(r.generated) for r in fleet.finished}
+    assert streams[777] == ref

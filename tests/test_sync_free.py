@@ -10,7 +10,7 @@ Covers the PR's contract:
     step_slot_sync,
   * the module-level engine jits compile once across engine instances
     (no-retrace, mirroring the PR-1 scheduler test),
-  * the lax.top_k sampler is distribution-identical to the sort-based one,
+  * the per-row sampler's exact top-k cutoff agrees with a sort oracle,
   * the scheduler's pipelined control_async is the one-slot-lagged control.
 """
 import copy
@@ -34,7 +34,7 @@ from repro.runtime import (
     serve,
 )
 from repro.runtime import engine as eng_mod
-from repro.runtime.engine import _DecodeSig, _sample
+from repro.runtime.sampling import SamplingParams, row_tables, sample_rows
 
 KEY = jax.random.PRNGKey(0)
 RATES = tuple(float(f) for f in range(1, 9))
@@ -224,22 +224,27 @@ def test_no_retrace_across_engine_instances(setup):
 
 
 def test_topk_sampler_equivalent_to_sort_oracle():
-    """jax.lax.top_k thresholding == the old jnp.sort-based top-k: identical
-    masked logits (hence identical categorical draws for any key)."""
-    key = jax.random.PRNGKey(7)
-    logits = jax.random.normal(key, (5, 97), jnp.float32)
+    """The per-row sampler's top-k cutoff is exact: for distinct logits the
+    survivor set equals the sort oracle's top k, and the draw matches a
+    hand-masked categorical under the same request-keyed PRNG."""
+    logits = jax.random.normal(jax.random.PRNGKey(7), (5, 97), jnp.float32)
+    B, V = logits.shape
+    rids = list(range(10, 10 + B))
     for k in (1, 5, 96, 97):
-        sig = _DecodeSig(greedy=False, temperature=0.7, top_k=k)
-        lg = logits / 0.7
+        p = SamplingParams(temperature=0.7, top_k=k, seed=5)
+        samp = row_tables([(p, r) for r in rids], 0)
+        lg = logits / jnp.float32(0.7)
         kth = jnp.sort(lg, axis=-1)[:, -k][:, None]          # the old oracle
         ref = jnp.where(lg < kth, -1e30, lg)
-        kth_new = jax.lax.top_k(lg, k)[0][..., -1:]
-        new = jnp.where(lg < kth_new, -1e30, lg)
-        np.testing.assert_array_equal(np.asarray(ref), np.asarray(new))
-        a = _sample(sig, logits, key)
-        b = jax.random.categorical(key, ref, axis=-1).astype(jnp.int32)
+        keys = [jax.random.fold_in(jax.random.fold_in(
+            jax.random.PRNGKey(5), r), 0) for r in rids]
+        b = jnp.stack([jax.random.categorical(keys[i], ref[i])
+                       for i in range(B)]).astype(jnp.int32)
+        a = sample_rows(logits, samp, jnp.zeros(B, jnp.int32))
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    greedy = _sample(_DecodeSig(greedy=True), logits, key)
+    g = SamplingParams(temperature=0.0)
+    greedy = sample_rows(logits, row_tables([(g, r) for r in rids], 0),
+                         jnp.zeros(B, jnp.int32))
     np.testing.assert_array_equal(np.asarray(greedy),
                                   np.asarray(jnp.argmax(logits, -1)))
 
