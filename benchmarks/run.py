@@ -1041,6 +1041,99 @@ def bench_sampling_layer(quick=False):
     return us, derived, metrics
 
 
+def bench_kv_precision(quick=False):
+    """Quantized KV-cache pages at EQUAL pool bytes (DESIGN.md §14).
+
+    The same KV byte budget buys a native-f32 pool or ~3.7x as many int8
+    pages (1 byte/element + one f32 per-token-per-head scale), so the int8
+    engine runs the identical burst at higher peak concurrency —
+    ``capacity_speedup`` (gated >= 1.5x in --smoke via DIVERGENCE_VIOLATION
+    and as higher-is-better by --check-against).
+
+    Correctness rides in the same row: (1) int8 paged streams must be
+    byte-for-byte the int8 *dense* engine's (deterministic quantize-on-
+    write + in-kernel dequant are mode-invariant); (2) against the native
+    oracle, no stream may diverge before its first generated token —
+    prefill attends over the native staging buffer, so token 0 is exact
+    and only decode reads pay quantization error. Either failure prefixes
+    DIVERGENCE_VIOLATION."""
+    import copy
+
+    from repro.cache.precision import parse_kv_precision
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.runtime import (Engine, EngineConfig, PagedEngine,
+                               PagedEngineConfig, RequestSource)
+
+    cfg = get_config("granite-3-2b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ps = 16
+    ratio = (parse_kv_precision("native").page_bytes(ps, cfg.n_kv_heads,
+                                                     cfg.head_dim_)
+             / parse_kv_precision("int8").page_bytes(ps, cfg.n_kv_heads,
+                                                     cfg.head_dim_))
+    n_native = 8 if quick else 12
+    n_int8 = int(n_native * ratio)
+    n_req = 12 if quick else 24
+    src = RequestSource(vocab_size=cfg.vocab_size, prompt_len=16,
+                        raw_rate=n_req, max_new_tokens=8, seed=5)
+    reqs = src.poll(0, float(n_req))
+
+    def drive(eng):
+        eng.submit([copy.deepcopy(r) for r in reqs])
+        eng.step_slot(0, n_steps=2)   # warm the jits before timing
+        slots, t0 = 1, time.perf_counter()
+        while len(eng.finished) < len(reqs) and slots < 200:
+            eng.step_slot(slots, n_steps=2)
+            slots += 1
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.generated) for r in eng.finished)
+        return toks / dt, slots, {r.rid: r.generated for r in eng.finished}
+
+    def paged(prec, pages):
+        return PagedEngine(cfg, params, PagedEngineConfig(
+            prompt_len=16, cache_len=64, page_size=ps, num_pages=pages,
+            max_active=n_req, kv_precision=prec))
+
+    eng_n = paged("", n_native)
+    tps_n, slots_n, gen_n = drive(eng_n)
+    eng_q = paged("int8", n_int8)
+    t0 = time.perf_counter()
+    tps_q, slots_q, gen_q = drive(eng_q)
+    dt_q = time.perf_counter() - t0
+    # mode-invariance oracle: the int8 dense engine, same workload
+    dense_q = Engine(cfg, params, EngineConfig(
+        batch_slots=4, prompt_len=16, cache_len=64, kv_precision="int8"))
+    _, _, gen_dq = drive(dense_q)
+    modes_exact = gen_q == gen_dq
+    # divergence stats vs the native oracle: first differing token index
+    firsts = []
+    for rid, ref in gen_n.items():
+        got = gen_q.get(rid, [])
+        d = next((i for i, (a, b) in enumerate(zip(got, ref)) if a != b),
+                 None if len(got) == len(ref) else min(len(got), len(ref)))
+        firsts.append(d)
+    diverged = [d for d in firsts if d is not None]
+    min_first = min(diverged) if diverged else -1
+    cap = eng_q.peak_active / max(eng_n.peak_active, 1)
+    us = dt_q / max(slots_q - 1, 1) * 1e6
+    derived = (
+        f"capacity_speedup={cap:.2f}x"
+        f";peak_concurrency_int8={eng_q.peak_active}"
+        f";peak_concurrency_native={eng_n.peak_active}"
+        f";pages_int8={n_int8};pages_native={n_native}"
+        f";bytes_ratio={ratio:.2f}"
+        f";int8_tps={tps_q:.1f};native_tps={tps_n:.1f}"
+        f";slots_int8={slots_q};slots_native={slots_n}"
+        f";streams={len(firsts)};identical={firsts.count(None)}"
+        f";min_first_divergence={min_first}"
+        f";modes_exact={modes_exact}"
+    )
+    if not modes_exact or min_first == 0 or cap < 1.5:
+        derived = "DIVERGENCE_VIOLATION;" + derived
+    return us, derived
+
+
 def bench_flash_attention(quick=False):
     """XLA flash path per-call time + kernel/oracle agreement."""
     from repro.kernels import ops
@@ -1105,7 +1198,7 @@ def bench_roofline_table():
 SMOKE_BENCHES = ("controller_overhead", "paged_vs_dense_decode",
                  "serve_sync_free", "continuous_batching", "fleet_scaling",
                  "prefix_sharing", "observability", "overload_slo",
-                 "sampling_layer")
+                 "sampling_layer", "kv_precision")
 
 # ------------------------------------------------- benchmark-regression gate
 # `--check-against baseline.json[,baseline2.json]` compares this run's rows
@@ -1233,6 +1326,7 @@ def main() -> None:
         ("observability", lambda: bench_observability(args.quick)),
         ("overload_slo", lambda: bench_overload_slo(args.quick)),
         ("sampling_layer", lambda: bench_sampling_layer(args.quick)),
+        ("kv_precision", lambda: bench_kv_precision(args.quick)),
         ("flash_attention_xla", lambda: bench_flash_attention(args.quick)),
         ("ssd_scan_xla", lambda: bench_ssd_scan(args.quick)),
         ("roofline_table", bench_roofline_table),
@@ -1277,7 +1371,8 @@ def main() -> None:
                           r["derived"].startswith(("TOKEN_MISMATCH",
                                                    "SYNC_VIOLATION",
                                                    "DISPATCH_VIOLATION",
-                                                   "SLO_VIOLATION"))
+                                                   "SLO_VIOLATION",
+                                                   "DIVERGENCE_VIOLATION"))
                           for r in rows):
         failed = True
     if failed:

@@ -85,32 +85,74 @@ class AllocStats:
     shared_pages: int = 0       # pages referenced more than once
     pinned_pages: int = 0       # pages held by the prefix index
     evictable_pages: int = 0    # pin-only pages (reclaimable on demand)
+    quant_pages: int = 0        # size of the quantized region
+    quant_used_pages: int = 0   # in-use pages of the quantized region
+    quant_occupancy: float = 0.0
 
 
 class PageAllocator:
-    """Free-list page allocator with refcounted per-request block tables."""
+    """Free-list page allocator with refcounted per-request block tables.
 
-    def __init__(self, num_pages: int, page_size: int):
+    Physical ids are split into two fixed regions (DESIGN.md §14): ids
+    [0, native_pages) store K/V at the native dtype; ids
+    [native_pages, num_pages) store them quantized (``quant_precision``).
+    Every page's region is permanent — ``PageEntry.precision`` is stamped
+    at construction and asserted by ``check()`` — so a block table mixes
+    precisions only page-by-page, never within a page, and forks/extends
+    stay inside the holder's region. Either region may be empty; the
+    default (``quant_pages=0``) is the pre-quantization single-region
+    allocator, bit-for-bit.
+    """
+
+    def __init__(self, num_pages: int, page_size: int,
+                 quant_pages: int = 0, quant_precision: str = "int8"):
         if num_pages <= 0 or page_size <= 0:
             raise ValueError((num_pages, page_size))
+        if not 0 <= quant_pages <= num_pages:
+            raise ValueError(f"quant_pages {quant_pages} not in [0, {num_pages}]")
         self.num_pages = num_pages
         self.page_size = page_size
-        # LIFO free list: recently-freed pages are re-used first (their
-        # contents are already junk; keeps the hot working set small).
-        self._free: list[int] = list(range(num_pages - 1, -1, -1))
+        self.native_pages = num_pages - quant_pages
+        self.quant_pages = quant_pages
+        self.quant_precision = quant_precision
+        # LIFO free lists (one per region): recently-freed pages are re-used
+        # first (their contents are already junk; keeps the hot set small).
+        self._free: dict[str, list[int]] = {
+            "native": list(range(self.native_pages - 1, -1, -1)),
+        }
+        if quant_pages:
+            self._free[quant_precision] = list(
+                range(num_pages - 1, self.native_pages - 1, -1))
         self._tables: dict[int, list[int]] = {}   # rid -> physical page ids
         self._tokens: dict[int, int] = {}         # rid -> written KV rows
-        self.pages: list[PageEntry] = [PageEntry() for _ in range(num_pages)]
+        self._prec: dict[int, str] = {}           # rid -> precision of new pages
+        self.pages: list[PageEntry] = [
+            PageEntry(precision=self.region_of(p)) for p in range(num_pages)]
         self.peak_used_pages = 0
 
     # ------------------------------------------------------------ queries
+    def region_of(self, page: int) -> str:
+        """The permanent precision tag of a physical page id."""
+        return "native" if page < self.native_pages else self.quant_precision
+
+    def _free_list(self, precision: str) -> list[int]:
+        try:
+            return self._free[precision]
+        except KeyError:
+            raise ValueError(
+                f"no {precision!r} page region (have {sorted(self._free)})"
+            ) from None
+
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        return sum(len(f) for f in self._free.values())
+
+    def free_pages_for(self, precision: str) -> int:
+        return len(self._free_list(precision))
 
     @property
     def used_pages(self) -> int:
-        return self.num_pages - len(self._free)
+        return self.num_pages - self.free_pages
 
     def occupancy(self) -> float:
         return self.used_pages / self.num_pages
@@ -128,8 +170,17 @@ class PageAllocator:
         prefix page is reclaimed the moment a real allocation needs it."""
         return (self.used_pages - self.evictable_pages()) / self.num_pages
 
-    def can_alloc(self, tokens: int) -> bool:
-        return pages_for(tokens, self.page_size) <= len(self._free)
+    def quant_occupancy(self) -> float:
+        """In-use fraction of the quantized region — the signal the
+        ``PrecisionAware`` policy prices (0.0 when there is no region)."""
+        if not self.quant_pages:
+            return 0.0
+        used = self.quant_pages - self.free_pages_for(self.quant_precision)
+        return used / self.quant_pages
+
+    def can_alloc(self, tokens: int, precision: str = "native") -> bool:
+        return (pages_for(tokens, self.page_size)
+                <= self.free_pages_for(precision))
 
     def block_table(self, rid: int) -> list[int]:
         return list(self._tables[rid])
@@ -153,6 +204,11 @@ class PageAllocator:
             shared_pages=sum(1 for e in self.pages if e.refcount > 1),
             pinned_pages=sum(1 for e in self.pages if e.pinned),
             evictable_pages=self.evictable_pages(),
+            quant_pages=self.quant_pages,
+            quant_used_pages=(self.quant_pages
+                              - self.free_pages_for(self.quant_precision)
+                              if self.quant_pages else 0),
+            quant_occupancy=self.quant_occupancy(),
         )
 
     # ------------------------------------------------------------ refcounts
@@ -170,12 +226,12 @@ class PageAllocator:
         if e.refcount == 0:
             assert not e.pinned, f"page {page} freed while pinned"
             e.prefix_key = None
-            self._free.append(page)
+            self._free[self.region_of(page)].append(page)
             return True
         return False
 
-    def _claim_free(self) -> int:
-        page = self._free.pop()
+    def _claim_free(self, precision: str = "native") -> int:
+        page = self._free_list(precision).pop()
         e = self.pages[page]
         assert e.refcount == 0 and not e.pinned
         e.refcount = 1
@@ -183,19 +239,23 @@ class PageAllocator:
         return page
 
     # ------------------------------------------------------------ mutation
-    def alloc(self, rid: int, tokens: int,
-              shared: Sequence[int] = ()) -> list[int] | None:
+    def alloc(self, rid: int, tokens: int, shared: Sequence[int] = (),
+              precision: str = "native") -> list[int] | None:
         """Claim pages for a new request holding ``tokens`` KV rows.
 
         ``shared`` names already-resident pages covering the request's first
         ``len(shared)`` logical pages (a prefix-cache hit): each gains a
         reference instead of costing a free page, and only the novel tail is
-        drawn from the free list. Returns the block table (physical page ids
-        in logical order), or None — *atomically*, claiming nothing and
-        leaving every refcount untouched — if the free list cannot cover the
-        novel pages. The shared references taken before the shortfall is
-        discovered are rolled back, so a failed multi-page alloc never leaks
-        a reference or leaves pages partially owned.
+        drawn from the free list. ``precision`` selects the region novel
+        pages come from and is remembered for later ``extend``s; shared
+        pages must already live in that region (the precision-keyed prefix
+        index guarantees it — a quantized page never satisfies a native
+        request). Returns the block table (physical page ids in logical
+        order), or None — *atomically*, claiming nothing and leaving every
+        refcount untouched — if the free list cannot cover the novel pages.
+        The shared references taken before the shortfall is discovered are
+        rolled back, so a failed multi-page alloc never leaks a reference or
+        leaves pages partially owned.
         """
         if rid in self._tables:
             raise KeyError(f"rid {rid} already holds pages")
@@ -211,12 +271,16 @@ class PageAllocator:
             for p in shared:
                 if not 0 <= p < self.num_pages:
                     raise ValueError(f"shared page {p} out of range")
+                if self.region_of(p) != precision:
+                    raise ValueError(
+                        f"shared page {p} is {self.region_of(p)}, request "
+                        f"wants {precision}")
                 self._incref(p)       # raises on a non-resident page
                 taken.append(p)
-            if n - len(shared) > len(self._free):
+            if n - len(shared) > self.free_pages_for(precision):
                 raise _Exhausted
             for _ in range(n - len(shared)):
-                novel.append(self._claim_free())
+                novel.append(self._claim_free(precision))
         except (_Exhausted, ValueError) as err:
             for p in reversed(novel):
                 self._decref(p)
@@ -228,11 +292,17 @@ class PageAllocator:
         pages = shared + novel
         self._tables[rid] = list(pages)
         self._tokens[rid] = tokens
+        self._prec[rid] = precision
         self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
         return list(pages)
 
+    def precision_of(self, rid: int) -> str:
+        """The region ``rid``'s novel/appended pages come from."""
+        return self._prec[rid]
+
     def extend(self, rid: int, tokens: int) -> list[int] | None:
-        """Grow ``rid`` to cover ``tokens`` total rows, appending pages.
+        """Grow ``rid`` to cover ``tokens`` total rows, appending pages
+        from the request's own precision region.
 
         Returns the (possibly longer) block table, or None — without
         claiming anything — if the free list cannot cover the growth. This
@@ -241,11 +311,12 @@ class PageAllocator:
         (refcount 1); only ``alloc``'s shared prefix ever multi-references.
         """
         pages = self._tables[rid]
+        prec = self._prec[rid]
         need = pages_for(tokens, self.page_size) - len(pages)
-        if need > len(self._free):
+        if need > self.free_pages_for(prec):
             return None
         for _ in range(max(need, 0)):
-            pages.append(self._claim_free())
+            pages.append(self._claim_free(prec))
         self._tokens[rid] = max(self._tokens[rid], tokens)
         self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
         return list(pages)
@@ -255,15 +326,19 @@ class PageAllocator:
 
         Swaps a fresh exclusive page in place of the shared one (the shared
         page keeps its other holders) and returns ``(src, dst)`` so the
-        caller can copy the device contents. Returns None — changing
-        nothing — when the free list is empty. Forking an already-exclusive
-        page is legal (it just copies), so callers need no refcount probe.
+        caller can copy the device contents. The replacement comes from the
+        *source page's* region — a fork never crosses the precision
+        boundary, so the device copy moves quantized bytes + scales or
+        native bytes, never converts. Returns None — changing nothing —
+        when that region's free list is empty. Forking an
+        already-exclusive page is legal (it just copies), so callers need
+        no refcount probe.
         """
         pages = self._tables[rid]
         src = pages[idx]
-        if not self._free:
+        if not self._free_list(self.region_of(src)):
             return None
-        dst = self._claim_free()
+        dst = self._claim_free(self.region_of(src))
         pages[idx] = dst
         self._decref(src)
         self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
@@ -275,6 +350,7 @@ class PageAllocator:
         shared prefix page outlives any single holder)."""
         pages = self._tables.pop(rid)
         self._tokens.pop(rid)
+        self._prec.pop(rid, None)
         return sum(self._decref(p) for p in reversed(pages))
 
     # ------------------------------------------------------------ pinning
@@ -306,8 +382,11 @@ class PageAllocator:
     def check(self) -> None:
         """Assert the ownership invariant (used by the property tests):
         every page's refcount equals its block-table occurrences plus its
-        pin, free-listed pages have refcount 0, and the pool neither leaks
-        nor double-counts a page."""
+        pin, free-listed pages have refcount 0, the pool neither leaks nor
+        double-counts a page, and every page's ``precision`` tag matches
+        its permanent region (free-list membership included) — the
+        scale/precision consistency the fork/evict/requeue property sweeps
+        interleave against."""
         refs = [0] * self.num_pages
         for pages in self._tables.values():
             for p in pages:
@@ -318,11 +397,22 @@ class PageAllocator:
                 refs[p] += 1
             assert e.refcount == refs[p], (
                 f"page {p}: refcount {e.refcount} != {refs[p]} references")
-        free = set(self._free)
-        assert len(free) == len(self._free), "free list duplicates"
+            assert e.precision == self.region_of(p), (
+                f"page {p}: precision {e.precision!r} != region "
+                f"{self.region_of(p)!r}")
+        all_free = [p for f in self._free.values() for p in f]
+        free = set(all_free)
+        assert len(free) == len(all_free), "free list duplicates"
+        for prec, flist in self._free.items():
+            for p in flist:
+                assert self.region_of(p) == prec, (
+                    f"page {p} on the {prec!r} free list, region "
+                    f"{self.region_of(p)!r}")
         for p in free:
             assert self.pages[p].refcount == 0, f"free page {p} referenced"
             assert not self.pages[p].pinned, f"free page {p} pinned"
         used = {p for p, e in enumerate(self.pages) if e.refcount > 0}
         assert used.isdisjoint(free)
         assert len(used) + len(free) == self.num_pages, "page leaked"
+        for rid in self._tables:
+            assert rid in self._prec, f"rid {rid} missing a precision record"

@@ -66,7 +66,12 @@ class PrefixIndex:
     def __init__(self, allocator: PageAllocator):
         self.allocator = allocator
         self.page_size = allocator.page_size
-        self._root = _Node(key=(), page=-1, parent=None)
+        # one radix root per KV precision (DESIGN.md §14): a block cached on
+        # an int8 page holds *rounded* K/V, so it must never satisfy a
+        # native-precision request (and vice versa) — precision-keyed trees
+        # make cross-precision hits structurally impossible rather than
+        # filtered.
+        self._roots: dict[str, _Node] = {}
         self._by_page: dict[int, _Node] = {}
         self._clock = 0
         self.hit_tokens = 0          # prompt tokens served from cache
@@ -76,11 +81,17 @@ class PrefixIndex:
     def __len__(self) -> int:
         return len(self._by_page)
 
+    def _root_for(self, precision: str) -> _Node:
+        if precision not in self._roots:
+            self._roots[precision] = _Node(key=(), page=-1, parent=None)
+        return self._roots[precision]
+
     # ------------------------------------------------------------- lookup
-    def _walk(self, tokens: np.ndarray, touch: bool) -> PrefixHit:
+    def _walk(self, tokens: np.ndarray, touch: bool,
+              precision: str) -> PrefixHit:
         ps = self.page_size
         toks = [int(t) for t in tokens]
-        node, pages = self._root, []
+        node, pages = self._root_for(precision), []
         i = 0
         while i + ps <= len(toks):
             child = node.children.get(tuple(toks[i:i + ps]))
@@ -114,25 +125,29 @@ class PrefixIndex:
             hit.matched += best_len
         return hit
 
-    def lookup(self, tokens: np.ndarray) -> PrefixHit:
-        """Resident prefix of ``tokens`` (touches the LRU clock)."""
-        return self._walk(tokens, touch=True)
+    def lookup(self, tokens: np.ndarray,
+               precision: str = "native") -> PrefixHit:
+        """Resident same-precision prefix of ``tokens`` (touches LRU)."""
+        return self._walk(tokens, touch=True, precision=precision)
 
-    def peek_tokens(self, tokens: np.ndarray) -> int:
+    def peek_tokens(self, tokens: np.ndarray,
+                    precision: str = "native") -> int:
         """Matched-token count without touching LRU state — the router's
         prefix-affinity probe (a rejected route must not refresh pages)."""
-        return self._walk(tokens, touch=False).matched
+        return self._walk(tokens, touch=False, precision=precision).matched
 
     # ------------------------------------------------------------- insert
-    def insert(self, tokens: np.ndarray, pages: list) -> int:
-        """Index a prompt's fully-written full pages; returns pages newly
-        pinned. ``pages`` is the holder's block-table prefix — one physical
-        page per full ``page_size`` block of ``tokens``. Blocks already
-        indexed keep their incumbent page (first writer wins; the duplicate
-        copy stays exclusive to its holder and dies with it)."""
+    def insert(self, tokens: np.ndarray, pages: list,
+               precision: str = "native") -> int:
+        """Index a prompt's fully-written full pages under its precision;
+        returns pages newly pinned. ``pages`` is the holder's block-table
+        prefix — one physical page per full ``page_size`` block of
+        ``tokens``. Blocks already indexed keep their incumbent page (first
+        writer wins; the duplicate copy stays exclusive to its holder and
+        dies with it)."""
         ps = self.page_size
         toks = [int(t) for t in tokens]
-        node, added = self._root, 0
+        node, added = self._root_for(precision), 0
         for j in range(min(len(toks) // ps, len(pages))):
             key = tuple(toks[j * ps:(j + 1) * ps])
             child = node.children.get(key)
@@ -184,6 +199,6 @@ class PrefixIndex:
         freed = 0
         for node in list(self._by_page.values()):
             freed += self.allocator.unpin(node.page)
-        self._root = _Node(key=(), page=-1, parent=None)
+        self._roots.clear()
         self._by_page.clear()
         return freed

@@ -64,8 +64,16 @@ class ModelConfig:
     # a §Perf knob for compute-bound training.
     remat_policy: str = "full"
     # KV-cache storage dtype; "float8_e4m3fn" halves decode memory traffic
-    # (§Perf knob for memory-bound decode).
+    # (§Perf knob for memory-bound decode). DEPRECATED: an unscaled cast,
+    # subsumed by kv_precision (resolve_kv_precision warns when only this
+    # is set).
     cache_dtype: str = ""  # "" => same as dtype
+    # KV-cache precision spec (DESIGN.md §14): "" / "native" (store the
+    # compute dtype), "int8" / "fp8" (scaled per-token-per-head storage,
+    # dequantized on read), or any raw dtype string (legacy cast). Parsed
+    # by repro.cache.precision.parse_kv_precision; kept a plain string so
+    # the config stays hashable and jax-free.
+    kv_precision: str = ""
     # >0: vocab-blocked flash cross-entropy (never materialize (T,V) logits);
     # the actual block is the largest divisor of vocab_size <= this value.
     loss_vocab_block: int = 0

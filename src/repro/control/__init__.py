@@ -12,6 +12,7 @@ from repro.control.policy import (
     LatencyAware,
     MemoryAware,
     Policy,
+    PrecisionAware,
     Static,
     TokenBacklogAware,
     VirtualQueue,
@@ -27,6 +28,7 @@ __all__ = [
     "LyapunovController",
     "MemoryAware",
     "Policy",
+    "PrecisionAware",
     "ROUTER_KINDS",
     "ReplicaLoad",
     "Static",

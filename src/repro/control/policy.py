@@ -292,6 +292,105 @@ class TokenBacklogAware(_TablePolicy):
         return f_star, carry
 
 
+class PrecisionCarry(NamedTuple):
+    """``PrecisionAware`` state: the quantized-occupancy virtual queue
+    (``value``/``budget``, the usual Neely pair) plus the admission-precision
+    hysteresis latch (``lossy`` — True while new admissions land on
+    quantized pages)."""
+
+    value: jax.Array
+    budget: jax.Array
+    lossy: jax.Array
+
+    def step(self, y: jax.Array) -> "PrecisionCarry":
+        return self._replace(
+            value=jnp.maximum(self.value + y - self.budget, 0.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionAware(_TablePolicy):
+    """Algorithm 1 plus a virtual queue over *quantized* page occupancy,
+    and a precision choice for new admissions (DESIGN.md §14).
+
+    A mixed page pool (native + int8/fp8 regions, ``PagedEngineConfig.
+    quant_pages``) gives the controller a second lever besides rate: when
+    the native region fills, new requests can be admitted onto quantized
+    pages — ~4x the tokens per byte at bounded output divergence — instead
+    of being throttled. Two mechanisms, same drift argument:
+
+    * ``admit_precision(carry, occupancy)`` — a host-side hysteresis latch
+      on the engine's (committed) occupancy: admissions downgrade to
+      ``quant_precision`` when occupancy crosses ``downgrade_at`` and
+      return to native only after it falls below ``upgrade_at``. The dead
+      band keeps the latch from chattering page regions on every slot's
+      occupancy noise. Every flip is recorded in the DecisionLog
+      (``record_precision``) — degradation is never silent.
+
+    * the virtual queue — once the overflow valve itself fills, admission
+      rate must yield too.  Z advances on the engine's *quantized*-region
+      occupancy (``engine.quant_occupancy()``, fed through ``observe``):
+
+          Z(t+1) = max(Z(t) + qocc(t) - quant_budget, 0)
+
+      and ``act`` prices candidate rates by the pages they commit,
+      Z(t) * quant_gain * pages_per_request * f — the exact ``MemoryAware``
+      construction, pointed at the lossy region. Time-average quantized
+      fill stays <= ``quant_budget`` (Neely).
+    """
+
+    rates: tuple[float, ...]
+    V: float
+    utility: Utility = None  # type: ignore[assignment]
+    arrival_gain: float = 1.0
+    pages_per_request: float = 2.0   # expected pages one admission commits
+    quant_budget: float = 0.6        # target time-average quantized fill
+    quant_gain: float = 1.0          # price scale on the quantized queue
+    downgrade_at: float = 0.75       # occupancy that flips admissions lossy
+    upgrade_at: float = 0.5          # occupancy that flips them back native
+    quant_precision: str = "int8"    # region tag admissions downgrade onto
+
+    observation = "quant_occupancy"  # the engine signal ``observe`` consumes
+
+    def __post_init__(self):
+        super().__post_init__()
+        if not 0.0 <= self.upgrade_at <= self.downgrade_at:
+            raise ValueError(
+                "hysteresis needs 0 <= upgrade_at <= downgrade_at, got "
+                f"{self.upgrade_at} / {self.downgrade_at}")
+
+    @property
+    def vq_cost_per_rate(self) -> float:
+        return self.quant_gain * self.pages_per_request
+
+    def init(self) -> PrecisionCarry:
+        return PrecisionCarry(jnp.zeros((), jnp.float32),
+                              jnp.asarray(self.quant_budget, jnp.float32),
+                              jnp.zeros((), jnp.bool_))
+
+    def observe(self, carry: PrecisionCarry,
+                quant_occupancy: jax.Array) -> PrecisionCarry:
+        return carry.step(jnp.asarray(quant_occupancy, jnp.float32))
+
+    def act(self, carry: PrecisionCarry,
+            backlog: jax.Array) -> tuple[jax.Array, PrecisionCarry]:
+        f, s, lam = self.tables()
+        extra = carry.value[..., None] * (
+            self.quant_gain * self.pages_per_request * f)
+        f_star, _ = drift_plus_penalty_action(backlog, f, s, lam, self.V, extra)
+        return f_star, carry
+
+    def admit_precision(self, carry: PrecisionCarry,
+                        occupancy: float) -> tuple[str, PrecisionCarry]:
+        """Hysteresis choice for the NEXT admissions' page region. Host-side
+        (returns a precision tag the allocator consumes); the latch lives in
+        the carry so replaying a decision log replays the choices."""
+        occ = float(occupancy)
+        lossy = bool(carry.lossy)
+        lossy = (occ > self.upgrade_at) if lossy else (occ >= self.downgrade_at)
+        return (self.quant_precision if lossy else "native",
+                carry._replace(lossy=jnp.asarray(lossy)))
+
+
 @dataclasses.dataclass(frozen=True)
 class LatencyAware(_TablePolicy):
     """Algorithm 1 plus a virtual queue pricing a time-average cost budget.

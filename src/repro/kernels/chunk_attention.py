@@ -27,6 +27,11 @@ from the length-aware prefill kernel:
 Query rows at or beyond ``valid`` are zeroed in the output (they are
 padding; the engine discards them). The pure-jnp oracle is
 ``repro.kernels.ref.chunk_attention_ref``.
+
+Quantized K/V (DESIGN.md §14): ``k_scale``/``v_scale`` (B, L, KVH) f32
+stream as their own (1, block_l, 1) tiles and each K/V tile is dequantized
+in-kernel right after its DMA — same f32-multiply-then-cast as
+``repro.kernels.quant.dequantize_kv``, so XLA fallback and kernel agree.
 """
 from __future__ import annotations
 
@@ -40,8 +45,12 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _chunk_kernel(pos0_ref, valid_ref, q_ref, k_ref, v_ref, sp_ref, o_ref,
-                  m_ref, l_ref, acc_ref, *, scale, C, block_l, nk):
+def _chunk_kernel(pos0_ref, valid_ref, q_ref, k_ref, v_ref, sp_ref, *rest,
+                  scale, C, block_l, nk, quantized=False):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     b = pl.program_id(0)
     ki = pl.program_id(2)
     p0 = pos0_ref[b]
@@ -63,6 +72,11 @@ def _chunk_kernel(pos0_ref, valid_ref, q_ref, k_ref, v_ref, sp_ref, o_ref,
         q = q_ref[0, :, 0, :]                        # (C, hd)
         k = k_ref[0, :, 0, :]                        # (bl, hd)
         v = v_ref[0, :, 0, :]
+        if quantized:
+            k = (k.astype(jnp.float32)
+                 * ks_ref[0, :, 0][:, None]).astype(q.dtype)
+            v = (v.astype(jnp.float32)
+                 * vs_ref[0, :, 0][:, None]).astype(q.dtype)
         sp = sp_ref[0, :]                            # (bl,) slot_pos
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
@@ -98,6 +112,8 @@ def chunk_attention(
     pos0: jax.Array,       # (B,) int32 absolute position of the chunk's first token
     valid: jax.Array,      # (B,) int32 real tokens in the chunk (0 = inactive row)
     *,
+    k_scale: jax.Array | None = None,   # (B, L, KVH) f32: k/v are int8/fp8
+    v_scale: jax.Array | None = None,
     block_l: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
@@ -108,21 +124,35 @@ def chunk_attention(
     assert L % block_l == 0, (L, block_l)
     nk = L // block_l
     scale = hd ** -0.5
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None), "k_scale/v_scale come in pairs"
 
     kernel = functools.partial(
-        _chunk_kernel, scale=scale, C=C, block_l=block_l, nk=nk
+        _chunk_kernel, scale=scale, C=C, block_l=block_l, nk=nk,
+        quantized=quantized,
     )
+    in_specs = [
+        pl.BlockSpec((1, C, 1, hd), lambda b, h, ki, p0, nv: (b, 0, h, 0)),
+        pl.BlockSpec((1, block_l, 1, hd),
+                     lambda b, h, ki, p0, nv: (b, ki, h // G, 0)),
+        pl.BlockSpec((1, block_l, 1, hd),
+                     lambda b, h, ki, p0, nv: (b, ki, h // G, 0)),
+        pl.BlockSpec((1, block_l), lambda b, h, ki, p0, nv: (b, ki)),
+    ]
+    operands = [pos0.astype(jnp.int32), valid.astype(jnp.int32), q, k, v,
+                slot_pos]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, block_l, 1),
+                         lambda b, h, ki, p0, nv: (b, ki, h // G)),
+            pl.BlockSpec((1, block_l, 1),
+                         lambda b, h, ki, p0, nv: (b, ki, h // G)),
+        ]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, H, nk),
-        in_specs=[
-            pl.BlockSpec((1, C, 1, hd), lambda b, h, ki, p0, nv: (b, 0, h, 0)),
-            pl.BlockSpec((1, block_l, 1, hd),
-                         lambda b, h, ki, p0, nv: (b, ki, h // G, 0)),
-            pl.BlockSpec((1, block_l, 1, hd),
-                         lambda b, h, ki, p0, nv: (b, ki, h // G, 0)),
-            pl.BlockSpec((1, block_l), lambda b, h, ki, p0, nv: (b, ki)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, C, 1, hd),
                                lambda b, h, ki, p0, nv: (b, 0, h, 0)),
         scratch_shapes=[
@@ -136,4 +166,4 @@ def chunk_attention(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, C, H, hd), q.dtype),
         interpret=interpret,
-    )(pos0.astype(jnp.int32), valid.astype(jnp.int32), q, k, v, slot_pos)
+    )(*operands)

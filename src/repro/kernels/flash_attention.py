@@ -25,6 +25,15 @@ the row's length are zeroed in the output (their values are padding and
 must not be consumed).
 
 Numerics: scores/softmax in f32 (preferred_element_type), inputs bf16/f32.
+
+Quantized K/V (DESIGN.md §14): pass ``k_scale``/``v_scale`` (B, Sk, KVH)
+f32 alongside int8/fp8 ``k``/``v`` and the kernel dequantizes each tile
+*after* the HBM->VMEM DMA — the bandwidth win is the point; scale tiles ride
+their own (1, block_k, 1) BlockSpecs. Dequant matches
+``repro.kernels.quant.dequantize_kv`` exactly (f32 multiply, cast to the
+query dtype) so the XLA fallback and the kernel agree bit-for-float. Note
+the TPU int8 minimum tile is (32, 128): block_k stays >= 32 on hardware;
+interpret mode has no such floor.
 """
 from __future__ import annotations
 
@@ -39,8 +48,18 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-                 *, scale, block_q, block_k, nk, causal, window):
+def _dequant_tile(x, s_ref, dtype):
+    """Per-token-per-head dequant of one (bk, hd) K/V tile; ``s_ref`` holds
+    the tile's (1, bk, 1) scale block."""
+    return (x.astype(jnp.float32) * s_ref[0, :, 0][:, None]).astype(dtype)
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, *rest, scale, block_q, block_k, nk,
+                 causal, window, quantized=False):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -65,6 +84,9 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         q = q_ref[0, :, 0, :]                       # (bq, hd)
         k = k_ref[0, :, 0, :]                       # (bk, hd)
         v = v_ref[0, :, 0, :]
+        if quantized:
+            k = _dequant_tile(k, ks_ref, q.dtype)
+            v = _dequant_tile(v, vs_ref, q.dtype)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale                                    # (bq, bk)
@@ -93,8 +115,12 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         o_ref[0, :, 0, :] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
-def _attn_kernel_ragged(lens_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-                        acc_ref, *, scale, block_q, block_k, nk, causal, window):
+def _attn_kernel_ragged(lens_ref, q_ref, k_ref, v_ref, *rest, scale, block_q,
+                        block_k, nk, causal, window, quantized=False):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     b = pl.program_id(0)
     qi = pl.program_id(2)
     ki = pl.program_id(3)
@@ -122,6 +148,9 @@ def _attn_kernel_ragged(lens_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         q = q_ref[0, :, 0, :]
         k = k_ref[0, :, 0, :]
         v = v_ref[0, :, 0, :]
+        if quantized:
+            k = _dequant_tile(k, ks_ref, q.dtype)
+            v = _dequant_tile(v, vs_ref, q.dtype)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale
@@ -154,12 +183,14 @@ def _attn_kernel_ragged(lens_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 
 def flash_attention(
     q: jax.Array,                 # (B, S, H, hd)
-    k: jax.Array,                 # (B, S, KVH, hd)
+    k: jax.Array,                 # (B, S, KVH, hd) — int8/fp8 when scales given
     v: jax.Array,
     *,
     causal: bool = True,
     window: int | None = None,
     seq_lens: jax.Array | None = None,   # (B,) int32 per-row real lengths
+    k_scale: jax.Array | None = None,    # (B, S, KVH) f32 per-token-per-head
+    v_scale: jax.Array | None = None,
     block_q: int = 512,
     block_k: int = 512,
     interpret: bool = False,
@@ -172,23 +203,36 @@ def flash_attention(
     assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, block_q, Sk, block_k)
     nq, nk = Sq // block_q, Sk // block_k
     scale = hd ** -0.5
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None), "k_scale/v_scale come in pairs"
 
     if seq_lens is not None:
         kernel = functools.partial(
             _attn_kernel_ragged, scale=scale, block_q=block_q,
             block_k=block_k, nk=nk, causal=causal, window=window,
+            quantized=quantized,
         )
+        in_specs = [
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda b, h, qi, ki, lens: (b, qi, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, qi, ki, lens: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, qi, ki, lens: (b, ki, h // G, 0)),
+        ]
+        operands = [seq_lens.astype(jnp.int32), q, k, v]
+        if quantized:
+            in_specs += [
+                pl.BlockSpec((1, block_k, 1),
+                             lambda b, h, qi, ki, lens: (b, ki, h // G)),
+                pl.BlockSpec((1, block_k, 1),
+                             lambda b, h, qi, ki, lens: (b, ki, h // G)),
+            ]
+            operands += [k_scale, v_scale]
         grid_spec = pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(B, H, nq, nk),
-            in_specs=[
-                pl.BlockSpec((1, block_q, 1, hd),
-                             lambda b, h, qi, ki, lens: (b, qi, h, 0)),
-                pl.BlockSpec((1, block_k, 1, hd),
-                             lambda b, h, qi, ki, lens: (b, ki, h // G, 0)),
-                pl.BlockSpec((1, block_k, 1, hd),
-                             lambda b, h, qi, ki, lens: (b, ki, h // G, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, block_q, 1, hd),
                                    lambda b, h, qi, ki, lens: (b, qi, h, 0)),
             scratch_shapes=[
@@ -202,20 +246,28 @@ def flash_attention(
             grid_spec=grid_spec,
             out_shape=jax.ShapeDtypeStruct((B, Sq, H, hd), q.dtype),
             interpret=interpret,
-        )(seq_lens.astype(jnp.int32), q, k, v)
+        )(*operands)
 
     kernel = functools.partial(
         _attn_kernel, scale=scale, block_q=block_q, block_k=block_k,
-        nk=nk, causal=causal, window=window,
+        nk=nk, causal=causal, window=window, quantized=quantized,
     )
+    in_specs = [
+        pl.BlockSpec((1, block_q, 1, hd), lambda b, h, qi, ki: (b, qi, h, 0)),
+        pl.BlockSpec((1, block_k, 1, hd), lambda b, h, qi, ki: (b, ki, h // G, 0)),
+        pl.BlockSpec((1, block_k, 1, hd), lambda b, h, qi, ki: (b, ki, h // G, 0)),
+    ]
+    operands = [q, k, v]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, block_k, 1), lambda b, h, qi, ki: (b, ki, h // G)),
+            pl.BlockSpec((1, block_k, 1), lambda b, h, qi, ki: (b, ki, h // G)),
+        ]
+        operands += [k_scale, v_scale]
     return pl.pallas_call(
         kernel,
         grid=(B, H, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, block_q, 1, hd), lambda b, h, qi, ki: (b, qi, h, 0)),
-            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, qi, ki: (b, ki, h // G, 0)),
-            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, qi, ki: (b, ki, h // G, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_q, 1, hd), lambda b, h, qi, ki: (b, qi, h, 0)),
         out_shape=jax.ShapeDtypeStruct((B, Sq, H, hd), q.dtype),
         scratch_shapes=[
@@ -224,4 +276,4 @@ def flash_attention(
             pltpu.VMEM((block_q, hd), jnp.float32),     # acc
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(*operands)

@@ -35,8 +35,12 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_ref, l_ref, acc_ref, *, scale, page_size, num_pages_per_req):
+def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, *rest,
+                  scale, page_size, num_pages_per_req, quantized=False):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     b = pl.program_id(0)
     p = pl.program_id(2)
 
@@ -49,6 +53,11 @@ def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
     q = q_ref[0, 0, :, :]                               # (G, hd)
     k = k_ref[0, :, 0, :]                               # (ps, hd)
     v = v_ref[0, :, 0, :]
+    if quantized:
+        # per-token-per-head dequant of the gathered page, right after its
+        # DMA — matches repro.kernels.quant.dequantize_kv (f32 mul, cast)
+        k = (k.astype(jnp.float32) * ks_ref[0, :, 0][:, None]).astype(q.dtype)
+        v = (v.astype(jnp.float32) * vs_ref[0, :, 0][:, None]).astype(q.dtype)
     pos = pos_ref[b]                                    # scalar int32
     allocated = bt_ref[b, p] >= 0
 
@@ -83,6 +92,8 @@ def paged_decode_attention(
     block_tables: jax.Array,  # (B, MP) int32 physical page ids; -1 = unallocated
     pos: jax.Array,           # (B,) int32 absolute position just written
     *,
+    k_scale: jax.Array | None = None,  # (N, ps, KVH) f32: pools are int8/fp8
+    v_scale: jax.Array | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     B, H, hd = q.shape
@@ -91,23 +102,39 @@ def paged_decode_attention(
     G = H // KVH
     scale = hd ** -0.5
     qg = q.reshape(B, KVH, G, hd)
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None), "k_scale/v_scale come in pairs"
 
     kernel = functools.partial(
-        _paged_kernel, scale=scale, page_size=page_size, num_pages_per_req=MP
+        _paged_kernel, scale=scale, page_size=page_size,
+        num_pages_per_req=MP, quantized=quantized,
     )
 
     def page_map(b, kv, p, bt_ref, pos_ref):
         # clamp -1 (unallocated) to 0: the tile is DMA'd but masked in-kernel
         return (jnp.maximum(bt_ref[b, p], 0), 0, kv, 0)
 
+    def scale_map(b, kv, p, bt_ref, pos_ref):
+        return (jnp.maximum(bt_ref[b, p], 0), 0, kv)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, G, hd), lambda b, kv, p, bt, ps_: (b, kv, 0, 0)),
+        pl.BlockSpec((1, page_size, 1, hd), page_map),
+        pl.BlockSpec((1, page_size, 1, hd), page_map),
+    ]
+    operands = [block_tables, pos, qg, k_pages, v_pages]
+    if quantized:
+        # scale pools (N, ps, KVH) gather by the same block-table indirection
+        in_specs += [
+            pl.BlockSpec((1, page_size, 1), scale_map),
+            pl.BlockSpec((1, page_size, 1), scale_map),
+        ]
+        operands += [k_scale, v_scale]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, KVH, MP),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd), lambda b, kv, p, bt, ps_: (b, kv, 0, 0)),
-            pl.BlockSpec((1, page_size, 1, hd), page_map),
-            pl.BlockSpec((1, page_size, 1, hd), page_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, kv, p, bt, ps_: (b, kv, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((G, 1), jnp.float32),
@@ -120,5 +147,5 @@ def paged_decode_attention(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KVH, G, hd), q.dtype),
         interpret=interpret,
-    )(block_tables, pos, qg, k_pages, v_pages)
+    )(*operands)
     return out.reshape(B, H, hd)

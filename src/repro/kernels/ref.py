@@ -109,6 +109,41 @@ def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, pos):
     return decode_attention_ref(q, kk, vv, slot_pos, pos)
 
 
+def dequant_ref(q_vals, scale, dtype):
+    """Per-token-per-head dequant (the oracle-side mirror of
+    ``repro.kernels.quant.dequantize_kv``): q_vals (..., hd) int8/fp8,
+    scale (...) f32 broadcast over the head dim."""
+    return (q_vals.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def attention_quant_ref(q, k, v, k_scale, v_scale, *, causal=True,
+                        window=None, seq_lens=None):
+    """Quantized-cache oracle for ``flash_attention``: dequantize eagerly
+    (the dumb, memory-hungry way the kernel exists to avoid), then run the
+    dense reference."""
+    kk = dequant_ref(k, k_scale, q.dtype)
+    vv = dequant_ref(v, v_scale, q.dtype)
+    return attention_ref(q, kk, vv, causal=causal, window=window,
+                         seq_lens=seq_lens)
+
+
+def chunk_attention_quant_ref(q, k, v, k_scale, v_scale, slot_pos, pos0,
+                              valid):
+    """Quantized-cache oracle for ``chunk_attention``."""
+    kk = dequant_ref(k, k_scale, q.dtype)
+    vv = dequant_ref(v, v_scale, q.dtype)
+    return chunk_attention_ref(q, kk, vv, slot_pos, pos0, valid)
+
+
+def paged_decode_attention_quant_ref(q, k_pages, v_pages, k_scale, v_scale,
+                                     block_tables, pos):
+    """Quantized-pool oracle for ``paged_decode_attention``: dequantize the
+    whole pool (scales (N, ps, KVH)), then run the paged reference."""
+    kk = dequant_ref(k_pages, k_scale, q.dtype)
+    vv = dequant_ref(v_pages, v_scale, q.dtype)
+    return paged_decode_attention_ref(q, kk, vv, block_tables, pos)
+
+
 def ssd_ref(x, dt, A, Bm, Cm):
     """Sequential SSD recurrence, one step at a time (the literal SSM).
 

@@ -46,7 +46,8 @@ from repro.obs import OBS_OFF, observability
 from repro.reliability import ConformalScheduler, TenantSLO
 from repro.runtime import (AdaptiveScheduler, Engine, EngineConfig,
                            MemoryAwareScheduler, PagedEngine,
-                           PagedEngineConfig, PolicyScheduler, ReplicaFleet,
+                           PagedEngineConfig, PolicyScheduler,
+                           PrecisionAwareScheduler, ReplicaFleet,
                            RequestSource, SamplingParams, StaticScheduler,
                            TenantSpec, TokenAwareScheduler, latency_stats,
                            serve)
@@ -91,8 +92,28 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--policy",
                     choices=["adaptive", "static", "latency-aware",
-                             "memory-aware", "token-aware", "conformal-slo"],
+                             "memory-aware", "token-aware", "conformal-slo",
+                             "precision-aware"],
                     default="adaptive")
+    ap.add_argument("--kv-precision", choices=["native", "int8", "fp8"],
+                    default="",
+                    help="KV-cache storage precision (DESIGN.md §14): int8/"
+                         "fp8 store pages quantized with per-token-per-head "
+                         "scales and dequantize inside the attention "
+                         "kernels; default inherits the model config")
+    ap.add_argument("--quant-pages", type=int, default=-1,
+                    help="paged + quantized: size of the quantized page "
+                         "region (-1 = every page; 0 < n < num-pages builds "
+                         "a mixed pool for --policy precision-aware)")
+    ap.add_argument("--quant-budget", type=float, default=0.6,
+                    help="precision-aware: target time-average quantized-"
+                         "region occupancy (virtual-queue budget)")
+    ap.add_argument("--downgrade-at", type=float, default=0.75,
+                    help="precision-aware: pool occupancy at which new "
+                         "admissions flip onto quantized pages")
+    ap.add_argument("--upgrade-at", type=float, default=0.5,
+                    help="precision-aware: occupancy below which admissions "
+                         "return to native pages (hysteresis dead band)")
     ap.add_argument("--cost-budget", type=float, default=4.0,
                     help="latency-aware: time-average rate budget")
     ap.add_argument("--paged", action="store_true",
@@ -188,6 +209,25 @@ def main():
     if args.policy == "memory-aware" and not args.paged:
         ap.error("--policy memory-aware prices page-pool occupancy; "
                  "it requires --paged (the dense engine reports none)")
+    if args.policy == "precision-aware":
+        if not args.paged:
+            ap.error("--policy precision-aware picks the page region per "
+                     "admission; it requires --paged")
+        if args.kv_precision not in ("int8", "fp8"):
+            ap.error("--policy precision-aware needs a quantized page "
+                     "region: pass --kv-precision int8 (or fp8)")
+        if not 0 < args.quant_pages < args.num_pages:
+            ap.error("--policy precision-aware admits between regions of a "
+                     "mixed pool: pass --quant-pages in (0, num-pages), "
+                     f"got {args.quant_pages}/{args.num_pages}")
+    if args.quant_pages != -1 and args.kv_precision not in ("int8", "fp8"):
+        ap.error("--quant-pages sizes the quantized page region; it needs "
+                 "--kv-precision int8 (or fp8)")
+    if args.quant_pages != -1 and not args.paged:
+        ap.error("--quant-pages is paged-pool geometry; it requires --paged")
+    if not 0.0 <= args.upgrade_at <= args.downgrade_at:
+        ap.error("hysteresis needs 0 <= --upgrade-at <= --downgrade-at, got "
+                 f"{args.upgrade_at} / {args.downgrade_at}")
 
     if args.replicas < 1:
         ap.error("--replicas must be >= 1")
@@ -253,12 +293,14 @@ def main():
             max_active=args.max_active, eos_id=args.eos_id,
             prefix_sharing=args.prefix_sharing,
             chunk_size=args.chunk_size, chunk_budget=args.chunk_budget,
+            kv_precision=args.kv_precision, quant_pages=args.quant_pages,
             sampling=sampling), obs=obs)
     else:
         mk_engine = lambda: Engine(cfg, params, EngineConfig(
             batch_slots=args.slots, prompt_len=args.prompt_len,
             cache_len=args.cache_len, eos_id=args.eos_id,
             chunk_size=args.chunk_size, chunk_budget=args.chunk_budget,
+            kv_precision=args.kv_precision,
             sampling=sampling), obs=obs)
     if args.replicas > 1:
         router = FleetRouter(kind=args.router,
@@ -291,6 +333,12 @@ def main():
                                    tenants=tenant_slos,
                                    slo_gain=args.slo_gain,
                                    capacity=args.capacity, obs=sched_obs)
+    elif args.policy == "precision-aware":
+        sched = PrecisionAwareScheduler(
+            rates=rates, V=args.V, quant_budget=args.quant_budget,
+            downgrade_at=args.downgrade_at, upgrade_at=args.upgrade_at,
+            quant_precision=args.kv_precision,
+            capacity=args.capacity, obs=sched_obs)
     else:
         sched = StaticScheduler(rate=args.rate, capacity=args.capacity,
                                 obs=sched_obs)
@@ -327,6 +375,18 @@ def main():
               f"peak_active={max(e.peak_active for e in engines)} "
               f"alloc_failures={sum(e.alloc_failures for e in engines)} "
               f"preemptions={sum(e.preemptions for e in engines)}")
+        if args.kv_precision in ("int8", "fp8"):
+            c = [e.counters() for e in engines]
+            flips = (len(obs.decisions.precisions) if telemetry else
+                     len(sched.rate_history) * 0)
+            print(f"quant: precision={args.kv_precision} "
+                  f"pages_quant={c[0]['pages_quant']}"
+                  f"/{st[0].num_pages} "
+                  f"quant_occupancy="
+                  + ",".join(f"{x['quant_occupancy']:.2f}" for x in c)
+                  + (f" admit={getattr(engines[0], 'admit_precision', '-')}"
+                     f" precision_flips={flips}"
+                     if args.policy == "precision-aware" else ""))
         if args.prefix_sharing:
             print(f"prefix: hit_tokens={sum(e.prefix_hits for e in engines)} "
                   f"forks={sum(e.prefix_forks for e in engines)} "

@@ -25,10 +25,36 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.cache.precision import KVPrecision, parse_kv_precision
 from repro.configs.base import ModelConfig
+from repro.kernels.quant import dequantize_kv, qdtype_of, quantize_kv
 from repro.models.layers import apply_rope, cdtype, dense_init, headwise_rmsnorm
 
 NEG_INF = -1e30
+
+
+# ------------------------------------------------------------- KV precision
+@functools.lru_cache(maxsize=None)
+def _prec_of(kv_precision: str, legacy_cache_dtype: str) -> KVPrecision:
+    if kv_precision:
+        return parse_kv_precision(kv_precision)
+    if legacy_cache_dtype:  # deprecated cast — engines warn once at init
+        return KVPrecision(dtype=legacy_cache_dtype, granularity="none")
+    return KVPrecision()
+
+
+def kv_precision_of(cfg: ModelConfig) -> KVPrecision:
+    """The config's resolved KVPrecision (DESIGN.md §14). Warning-free —
+    this runs inside traced code; ``resolve_kv_precision`` (which flags the
+    deprecated ``cache_dtype``) is called once by the engine constructors."""
+    return _prec_of(cfg.kv_precision, cfg.cache_dtype)
+
+
+def _staged(prec: KVPrecision) -> bool:
+    """Does chunked prefill need a native staging buffer? Exactly when the
+    cache storage is lossy: chunk N re-reads chunk N-1's K/V, and reading
+    rounded values would break the one-shot-prefill equivalence contract."""
+    return prec.lossy and prec.staging == "auto"
 
 
 # ------------------------------------------------------------------- params
@@ -49,9 +75,20 @@ def attn_init(key, cfg: ModelConfig, cross: bool = False):
 
 
 class KVCache(NamedTuple):
+    """Dense ring cache. Under a quantized KVPrecision, k/v hold the
+    storage dtype (int8/fp8) and k_scale/v_scale the per-token-per-head
+    f32 scales; under a lossy precision stage_k/stage_v additionally carry
+    the chunked-prefill native staging buffer (DESIGN.md §14). All
+    optional leaves are None at native precision, so native pytrees (and
+    jaxprs) carry exactly the pre-quantization three leaves."""
+
     k: jax.Array          # (B, L, KVH, hd) — RoPE already applied
     v: jax.Array          # (B, L, KVH, hd)
     slot_pos: jax.Array   # (B, L) int32, absolute position held; -1 empty
+    k_scale: Optional[jax.Array] = None   # (B, L, KVH) f32 — quantized only
+    v_scale: Optional[jax.Array] = None
+    stage_k: Optional[jax.Array] = None   # (B, L, KVH, hd) native — chunked
+    stage_v: Optional[jax.Array] = None
 
     @property
     def cache_len(self) -> int:
@@ -59,17 +96,29 @@ class KVCache(NamedTuple):
 
 
 def cache_dtype(cfg: ModelConfig):
-    """KV-cache storage dtype (e.g. float8_e4m3fn for the §Perf memory knob)."""
-    return jnp.dtype(cfg.cache_dtype) if cfg.cache_dtype else cdtype(cfg)
+    """KV-cache storage dtype (cast dtype, quantized dtype, or native)."""
+    prec = kv_precision_of(cfg)
+    if prec.is_quantized:
+        return qdtype_of(prec)
+    if prec.is_cast:
+        return jnp.dtype(prec.dtype)
+    return cdtype(cfg)
 
 
 def kv_cache_init(batch: int, cache_len: int, cfg: ModelConfig) -> KVCache:
     KVH, hd = cfg.n_kv_heads, cfg.head_dim_
+    prec = kv_precision_of(cfg)
     dt = cache_dtype(cfg)
+    scale = [jnp.zeros((batch, cache_len, KVH), jnp.float32)
+             for _ in range(2)] if prec.is_quantized else (None, None)
+    staged = [jnp.zeros((batch, cache_len, KVH, hd), cdtype(cfg))
+              for _ in range(2)] if _staged(prec) else (None, None)
     return KVCache(
         k=jnp.zeros((batch, cache_len, KVH, hd), dt),
         v=jnp.zeros((batch, cache_len, KVH, hd), dt),
         slot_pos=jnp.full((batch, cache_len), -1, jnp.int32),
+        k_scale=scale[0], v_scale=scale[1],
+        stage_k=staged[0], stage_v=staged[1],
     )
 
 
@@ -77,25 +126,129 @@ class PagedKVPool(NamedTuple):
     """Shared-pool paged KV storage for ONE layer (stacked on a leading
     layer axis inside a segment, like every other cache leaf).
 
-    k/v: (num_pages, page_size, KVH, hd). Rows are owned via
+    k/v: (native_pages, page_size, KVH, hd). Rows are owned via
     ``repro.cache.PageAllocator`` block tables; logical slot j of a request
     lives at (table[j // page_size], j % page_size) and holds absolute
     position j — paged caches never wrap, they grow by appending pages.
     Recycled pages are not zeroed: the validity mask (j <= pos on allocated
     pages) hides stale rows before they can influence the softmax.
+
+    Physical page ids are split into two regions (DESIGN.md §14): ids
+    [0, native_pages) live in k/v at the native (or legacy cast) dtype;
+    ids [native_pages, num_pages) live in qk/qv quantized with
+    k_scale/v_scale per-token-per-head f32 scales. Either region may be
+    empty (leaves None) — an all-native pool has exactly the
+    pre-quantization two leaves. stage_k/stage_v is the chunked-prefill
+    native staging buffer (rows, stage_len, KVH, hd), present only under a
+    lossy precision.
     """
 
-    k: jax.Array
-    v: jax.Array
+    k: Optional[jax.Array]
+    v: Optional[jax.Array]
+    qk: Optional[jax.Array] = None        # (quant_pages, ps, KVH, hd)
+    qv: Optional[jax.Array] = None
+    k_scale: Optional[jax.Array] = None   # (quant_pages, ps, KVH) f32
+    v_scale: Optional[jax.Array] = None
+    stage_k: Optional[jax.Array] = None   # (rows, stage_len, KVH, hd)
+    stage_v: Optional[jax.Array] = None
+
+    @property
+    def native_pages(self) -> int:
+        return self.k.shape[0] if self.k is not None else 0
+
+    @property
+    def quant_pages(self) -> int:
+        return self.qk.shape[0] if self.qk is not None else 0
+
+    @property
+    def num_pages(self) -> int:
+        return self.native_pages + self.quant_pages
+
+    @property
+    def page_size(self) -> int:
+        return (self.k if self.k is not None else self.qk).shape[1]
 
 
-def paged_pool_init(num_pages: int, page_size: int, cfg: ModelConfig) -> PagedKVPool:
+def paged_pool_init(num_pages: int, page_size: int, cfg: ModelConfig,
+                    native_pages: Optional[int] = None, stage_rows: int = 0,
+                    stage_len: int = 0) -> PagedKVPool:
     KVH, hd = cfg.n_kv_heads, cfg.head_dim_
-    dt = cache_dtype(cfg)
-    return PagedKVPool(
-        k=jnp.zeros((num_pages, page_size, KVH, hd), dt),
-        v=jnp.zeros((num_pages, page_size, KVH, hd), dt),
-    )
+    prec = kv_precision_of(cfg)
+    if native_pages is None:
+        native_pages = 0 if prec.is_quantized else num_pages
+    nq = num_pages - native_pages
+    if nq and not prec.is_quantized:
+        raise ValueError("a quantized page region needs a quantized kv_precision")
+    ndt = cdtype(cfg) if prec.is_quantized else cache_dtype(cfg)
+    kw = {}
+    if native_pages:
+        shape = (native_pages, page_size, KVH, hd)
+        kw.update(k=jnp.zeros(shape, ndt), v=jnp.zeros(shape, ndt))
+    else:
+        kw.update(k=None, v=None)
+    if nq:
+        qshape = (nq, page_size, KVH, hd)
+        kw.update(qk=jnp.zeros(qshape, qdtype_of(prec)),
+                  qv=jnp.zeros(qshape, qdtype_of(prec)),
+                  k_scale=jnp.zeros((nq, page_size, KVH), jnp.float32),
+                  v_scale=jnp.zeros((nq, page_size, KVH), jnp.float32))
+    if stage_rows and _staged(prec):
+        sshape = (stage_rows, stage_len, KVH, hd)
+        kw.update(stage_k=jnp.zeros(sshape, cdtype(cfg)),
+                  stage_v=jnp.zeros(sshape, cdtype(cfg)))
+    return PagedKVPool(**kw)
+
+
+def _pool_read(pool: PagedKVPool, block_table: jax.Array, dtype):
+    """Gather the logical K/V of every row through its block table ->
+    (B, MP*ps, KVH, hd). Quantized pages are dequantized to ``dtype``;
+    native/cast pages are returned in their storage dtype when the pool has
+    no quantized region (the callers' downstream casts are unchanged from
+    the pre-quantization code, keeping those paths bit-identical)."""
+    B, MP = block_table.shape
+    ps = pool.page_size
+    nn, nq = pool.native_pages, pool.quant_pages
+    if pool.qk is None:
+        gather = jnp.clip(block_table, 0, nn - 1)
+        kk = pool.k[gather]
+        vv = pool.v[gather]
+    else:
+        qidx = jnp.clip(block_table - nn, 0, nq - 1)
+        kk = dequantize_kv(pool.qk[qidx], pool.k_scale[qidx], dtype)
+        vv = dequantize_kv(pool.qv[qidx], pool.v_scale[qidx], dtype)
+        if pool.k is not None:   # mixed pool: per-page precision select
+            nidx = jnp.clip(block_table, 0, nn - 1)
+            is_native = ((block_table >= 0) & (block_table < nn))[:, :, None, None, None]
+            kk = jnp.where(is_native, pool.k[nidx].astype(dtype), kk)
+            vv = jnp.where(is_native, pool.v[nidx].astype(dtype), vv)
+    KVH, hd = kk.shape[-2], kk.shape[-1]
+    return kk.reshape(B, MP * ps, KVH, hd), vv.reshape(B, MP * ps, KVH, hd)
+
+
+def _pool_write(pool: PagedKVPool, phys: jax.Array, off: jax.Array,
+                k: jax.Array, v: jax.Array, prec: KVPrecision) -> PagedKVPool:
+    """Scatter native-dtype K/V rows into the pool at (phys, off). ``phys``
+    must already carry the drop sentinel (num_pages) for invalid entries;
+    each region's scatter drops writes aimed at the other region."""
+    nn, nq = pool.native_pages, pool.quant_pages
+    new = pool
+    if pool.k is not None:
+        nidx = jnp.minimum(phys, nn)              # quant region / pads -> drop
+        new = new._replace(
+            k=new.k.at[nidx, off].set(k.astype(new.k.dtype), mode="drop"),
+            v=new.v.at[nidx, off].set(v.astype(new.v.dtype), mode="drop"),
+        )
+    if pool.qk is not None:
+        qidx = jnp.where(phys >= nn, phys - nn, nq)   # native region -> drop
+        qk_, ks_ = quantize_kv(k, prec)
+        qv_, vs_ = quantize_kv(v, prec)
+        new = new._replace(
+            qk=new.qk.at[qidx, off].set(qk_, mode="drop"),
+            qv=new.qv.at[qidx, off].set(qv_, mode="drop"),
+            k_scale=new.k_scale.at[qidx, off].set(ks_, mode="drop"),
+            v_scale=new.v_scale.at[qidx, off].set(vs_, mode="drop"),
+        )
+    return new
 
 
 # ------------------------------------------------- chunked online-softmax
@@ -358,19 +511,45 @@ def attn_prefill(
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
 
     cache = kv_cache_init(B, cache_len, cfg)
+    prec = kv_precision_of(cfg)
     cdt = cache_dtype(cfg)
     n = min(S, cache_len)
     tail = jnp.arange(S - n, S)                       # absolute positions kept
     slots = tail % cache_len                          # ring placement
-    kw = k[:, S - n :].astype(cdt)
-    vw = v[:, S - n :].astype(cdt)
+    keep = tail[None, :] < seq_lens[:, None] if seq_lens is not None else None
+    if prec.is_quantized:
+        # per-token symmetric quantization: pad rows are zeroed AFTER the
+        # quantize, so real rows' scales never depend on the bucket size
+        kw, ksw = quantize_kv(k[:, S - n:], prec)
+        vw, vsw = quantize_kv(v[:, S - n:], prec)
+        if keep is not None:
+            kw = jnp.where(keep[..., None, None], kw, 0)
+            vw = jnp.where(keep[..., None, None], vw, 0)
+            ksw = jnp.where(keep[..., None], ksw, 0)
+            vsw = jnp.where(keep[..., None], vsw, 0)
+        cache = cache._replace(
+            k_scale=cache.k_scale.at[:, slots].set(ksw),
+            v_scale=cache.v_scale.at[:, slots].set(vsw),
+        )
+    else:
+        kw = k[:, S - n :].astype(cdt)
+        vw = v[:, S - n :].astype(cdt)
+        if keep is not None:
+            kw = jnp.where(keep[..., None, None], kw, 0)
+            vw = jnp.where(keep[..., None, None], vw, 0)
     spw = jnp.broadcast_to(tail[None, :], (B, n)).astype(jnp.int32)
-    if seq_lens is not None:
-        keep = tail[None, :] < seq_lens[:, None]      # (B, n)
-        kw = jnp.where(keep[..., None, None], kw, 0)
-        vw = jnp.where(keep[..., None, None], vw, 0)
+    if keep is not None:
         spw = jnp.where(keep, spw, -1)
-    cache = KVCache(
+    if cache.stage_k is not None:
+        skw, svw = k[:, S - n:], v[:, S - n:]
+        if keep is not None:
+            skw = jnp.where(keep[..., None, None], skw, 0)
+            svw = jnp.where(keep[..., None, None], svw, 0)
+        cache = cache._replace(
+            stage_k=cache.stage_k.at[:, slots].set(skw.astype(cache.stage_k.dtype)),
+            stage_v=cache.stage_v.at[:, slots].set(svw.astype(cache.stage_v.dtype)),
+        )
+    cache = cache._replace(
         k=cache.k.at[:, slots].set(kw),
         v=cache.v.at[:, slots].set(vw),
         slot_pos=cache.slot_pos.at[:, slots].set(spw),
@@ -402,17 +581,32 @@ def attn_decode(
     slot = (pos % L).astype(jnp.int32)                # (B,)
     b_idx = jnp.arange(B)
     cdt = cache.k.dtype
-    cache = KVCache(
-        k=cache.k.at[b_idx, slot].set(k.astype(cdt)),
-        v=cache.v.at[b_idx, slot].set(v.astype(cdt)),
-        slot_pos=cache.slot_pos.at[b_idx, slot].set(pos.astype(jnp.int32)),
-    )
+    if cache.k_scale is not None:
+        prec = kv_precision_of(cfg)
+        qk_, ks_ = quantize_kv(k, prec)
+        qv_, vs_ = quantize_kv(v, prec)
+        cache = cache._replace(
+            k=cache.k.at[b_idx, slot].set(qk_),
+            v=cache.v.at[b_idx, slot].set(qv_),
+            k_scale=cache.k_scale.at[b_idx, slot].set(ks_),
+            v_scale=cache.v_scale.at[b_idx, slot].set(vs_),
+            slot_pos=cache.slot_pos.at[b_idx, slot].set(pos.astype(jnp.int32)),
+        )
+        ck = dequantize_kv(cache.k, cache.k_scale, q.dtype)
+        cv = dequantize_kv(cache.v, cache.v_scale, q.dtype)
+    else:
+        cache = cache._replace(
+            k=cache.k.at[b_idx, slot].set(k.astype(cdt)),
+            v=cache.v.at[b_idx, slot].set(v.astype(cdt)),
+            slot_pos=cache.slot_pos.at[b_idx, slot].set(pos.astype(jnp.int32)),
+        )
+        ck, cv = cache.k, cache.v
 
     H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
     G = H // KVH
     qg = q.reshape(B, KVH, G, hd)
     s = jnp.einsum(
-        "bkgh,blkh->bkgl", qg, cache.k.astype(q.dtype),
+        "bkgh,blkh->bkgl", qg, ck.astype(q.dtype),
         preferred_element_type=jnp.float32,
     ) * (hd ** -0.5)
     valid = (cache.slot_pos >= 0) & (cache.slot_pos <= pos[:, None])
@@ -420,7 +614,7 @@ def attn_decode(
         valid &= cache.slot_pos > (pos[:, None] - window)
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgl,blkh->bkgh", p.astype(q.dtype), cache.v.astype(q.dtype))
+    out = jnp.einsum("bkgl,blkh->bkgh", p.astype(q.dtype), cv.astype(q.dtype))
     out = out.reshape(B, H, hd)
     y = jnp.einsum("bhk,hkd->bd", out, params["wo"])
     return y, cache
@@ -476,28 +670,58 @@ def attn_chunk(
     slots = jnp.where(keep, pos % L, L)                   # L = out of range -> drop
     cdt = cache.k.dtype
     b_idx = jnp.arange(B)[:, None]
-    cache = KVCache(
-        k=cache.k.at[b_idx, slots].set(k.astype(cdt), mode="drop"),
-        v=cache.v.at[b_idx, slots].set(v.astype(cdt), mode="drop"),
-        slot_pos=slot_pos.at[b_idx, slots].set(pos.astype(jnp.int32), mode="drop"),
-    )
+    if cache.k_scale is not None:
+        prec = kv_precision_of(cfg)
+        qk_, ks_ = quantize_kv(k, prec)
+        qv_, vs_ = quantize_kv(v, prec)
+        cache = cache._replace(
+            k=cache.k.at[b_idx, slots].set(qk_, mode="drop"),
+            v=cache.v.at[b_idx, slots].set(qv_, mode="drop"),
+            k_scale=cache.k_scale.at[b_idx, slots].set(ks_, mode="drop"),
+            v_scale=cache.v_scale.at[b_idx, slots].set(vs_, mode="drop"),
+            slot_pos=slot_pos.at[b_idx, slots].set(pos.astype(jnp.int32),
+                                                   mode="drop"),
+        )
+    else:
+        cache = cache._replace(
+            k=cache.k.at[b_idx, slots].set(k.astype(cdt), mode="drop"),
+            v=cache.v.at[b_idx, slots].set(v.astype(cdt), mode="drop"),
+            slot_pos=slot_pos.at[b_idx, slots].set(pos.astype(jnp.int32),
+                                                   mode="drop"),
+        )
 
     H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
     G = H // KVH
     qg = q.reshape(B, C, KVH, G, hd)
+    if cache.stage_k is not None:
+        # lossy storage: the prompt phase attends the NATIVE staging copy
+        # (chunk N re-reads chunk N-1 exactly; the rounded cache is read
+        # only by post-activation decode). During the prompt every position
+        # <= qpos was written by the row's current tenant — chunks are
+        # contiguous from 0 — so validity is purely causal.
+        cache = cache._replace(
+            stage_k=cache.stage_k.at[b_idx, slots].set(
+                k.astype(cache.stage_k.dtype), mode="drop"),
+            stage_v=cache.stage_v.at[b_idx, slots].set(
+                v.astype(cache.stage_v.dtype), mode="drop"),
+        )
+        src_k, src_v = cache.stage_k, cache.stage_v
+        ok = jnp.arange(L)[None, None, :] <= pos[:, :, None]   # (B, C, L)
+    else:
+        src_k, src_v = cache.k, cache.v
+        sp = cache.slot_pos[:, None, :]                   # (B, 1, L)
+        ok = (sp >= 0) & (sp <= pos[:, :, None])          # (B, C, L)
+        if window is not None:
+            ok &= sp > (pos[:, :, None] - window)
     s = jnp.einsum(
-        "bqkgh,bskh->bkgqs", qg, cache.k.astype(q.dtype),
+        "bqkgh,bskh->bkgqs", qg, src_k.astype(q.dtype),
         preferred_element_type=jnp.float32,
     ) * (hd ** -0.5)                                      # (B, KVH, G, C, L)
-    sp = cache.slot_pos[:, None, :]                       # (B, 1, L)
-    ok = (sp >= 0) & (sp <= pos[:, :, None])              # (B, C, L)
-    if window is not None:
-        ok &= sp > (pos[:, :, None] - window)
     s = jnp.where(ok[:, None, None], s, NEG_INF)
     m = jnp.max(s, axis=-1)
     p = jnp.exp(s - m[..., None])
     l = jnp.sum(p, axis=-1)
-    pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(cache.v.dtype), cache.v)
+    pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(src_v.dtype), src_v)
     out = pv.astype(jnp.float32) / jnp.maximum(l, 1e-30)[..., None]
     out = out.transpose(0, 3, 1, 2, 4).reshape(B, C, H, hd).astype(q.dtype)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
@@ -512,6 +736,7 @@ def attn_chunk_paged(
     pos0: jax.Array,         # (B,)
     valid: jax.Array,        # (B,)
     cfg: ModelConfig,
+    base: Optional[jax.Array] = None,   # (B,) prefix-cache hit tokens per row
 ) -> tuple[jax.Array, PagedKVPool]:
     """``attn_chunk`` over the shared page pool: the chunk's K/V rows land in
     block-table pages (logical slot j at (table[j // ps], j % ps)), then the
@@ -519,9 +744,18 @@ def attn_chunk_paged(
     mask ``allocated & (j <= qpos)``. Same single-tile flash numerics as the
     dense variant; no slot_pos reset is needed — a previous tenant's rows
     survive only at logical slots this request has not yet written, all of
-    which sit at j > qpos and are masked."""
+    which sit at j > qpos and are masked.
+
+    Under a lossy KVPrecision the pool write is rounded but the row's own
+    chunks additionally land in the native staging buffer
+    (``pool.stage_k/v``), and prompt-phase attention reads pool pages only
+    for the prefix-cache hit ``base`` (positions written by an earlier,
+    already-rounded tenant) while positions >= base come from staging —
+    chunk N re-reads chunk N-1 exactly, restoring the one-shot-prefill
+    equivalence contract for quantized/cast storage.
+    """
     B, C, D = x.shape
-    N, ps = pool.k.shape[0], pool.k.shape[1]
+    N, ps = pool.num_pages, pool.page_size
     MP = block_table.shape[1]
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
@@ -538,26 +772,51 @@ def attn_chunk_paged(
     phys = jnp.take_along_axis(block_table, lp, axis=1)   # (B, C)
     phys = jnp.where(keep & (phys >= 0), phys, N)         # N = out of range -> drop
     off = pos % ps
-    cdt = pool.k.dtype
-    pool = PagedKVPool(
-        k=pool.k.at[phys, off].set(k.astype(cdt), mode="drop"),
-        v=pool.v.at[phys, off].set(v.astype(cdt), mode="drop"),
-    )
-
-    gather = jnp.clip(block_table, 0, N - 1)
-    kk = pool.k[gather].reshape(B, MP * ps, cfg.n_kv_heads, cfg.head_dim_)
-    vv = pool.v[gather].reshape(B, MP * ps, cfg.n_kv_heads, cfg.head_dim_)
+    if pool.qk is None:
+        cdt = pool.k.dtype
+        pool = pool._replace(
+            k=pool.k.at[phys, off].set(k.astype(cdt), mode="drop"),
+            v=pool.v.at[phys, off].set(v.astype(cdt), mode="drop"),
+        )
+    else:
+        pool = _pool_write(pool, phys, off, k, v, kv_precision_of(cfg))
 
     H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
     G = H // KVH
     qg = q.reshape(B, C, KVH, G, hd)
+    j = jnp.arange(MP * ps)[None, None, :]
+    allocated = jnp.repeat(block_table >= 0, ps, axis=1)[:, None, :]
+    if pool.stage_k is not None:
+        # native staging for the in-flight prompt: pool pages serve only the
+        # prefix-cache hit [0, base); staging serves [base, qpos]
+        SL = pool.stage_k.shape[1]
+        b_idx = jnp.arange(B)[:, None]
+        spos = jnp.where(keep, jnp.minimum(pos, SL), SL)  # SL = drop
+        pool = pool._replace(
+            stage_k=pool.stage_k.at[b_idx, spos].set(
+                k.astype(pool.stage_k.dtype), mode="drop"),
+            stage_v=pool.stage_v.at[b_idx, spos].set(
+                v.astype(pool.stage_v.dtype), mode="drop"),
+        )
+        if base is None:
+            base = jnp.zeros((B,), jnp.int32)
+        kk, vv = _pool_read(pool, block_table, q.dtype)
+        kk = kk.astype(q.dtype)
+        vv = vv.astype(q.dtype)
+        ok_pool = allocated & (j < base[:, None, None]) & (j <= pos[:, :, None])
+        js = jnp.arange(SL)[None, None, :]
+        ok_stage = (js >= base[:, None, None]) & (js <= pos[:, :, None])
+        kk = jnp.concatenate([kk, pool.stage_k.astype(q.dtype)], axis=1)
+        vv = jnp.concatenate([vv, pool.stage_v.astype(q.dtype)], axis=1)
+        ok = jnp.concatenate([ok_pool, jnp.broadcast_to(
+            ok_stage, (B, C, SL))], axis=-1)
+    else:
+        kk, vv = _pool_read(pool, block_table, q.dtype)
+        ok = allocated & (j <= pos[:, :, None])           # (B, C, MP*ps)
     s = jnp.einsum(
         "bqkgh,bskh->bkgqs", qg, kk.astype(q.dtype),
         preferred_element_type=jnp.float32,
-    ) * (hd ** -0.5)                                      # (B, KVH, G, C, MP*ps)
-    j = jnp.arange(MP * ps)[None, None, :]
-    allocated = jnp.repeat(block_table >= 0, ps, axis=1)[:, None, :]
-    ok = allocated & (j <= pos[:, :, None])               # (B, C, MP*ps)
+    ) * (hd ** -0.5)                                      # (B, KVH, G, C, S)
     s = jnp.where(ok[:, None, None], s, NEG_INF)
     m = jnp.max(s, axis=-1)
     p = jnp.exp(s - m[..., None])
@@ -588,7 +847,7 @@ def attn_decode_paged(
     their write is dropped and their output is discarded by the engine.
     """
     B, D = x.shape
-    N, ps = pool.k.shape[0], pool.k.shape[1]
+    N, ps = pool.num_pages, pool.page_size
     MP = block_table.shape[1]
     q = jnp.einsum("bd,dhk->bhk", x, params["wq"])
     k = jnp.einsum("bd,dhk->bhk", x, params["wk"])
@@ -603,15 +862,16 @@ def attn_decode_paged(
     phys = jnp.take_along_axis(block_table, lp[:, None], axis=1)[:, 0]
     phys = jnp.where(phys < 0, N, phys)               # N = out of range -> drop
     off = (pos % ps).astype(jnp.int32)
-    cdt = pool.k.dtype
-    pool = PagedKVPool(
-        k=pool.k.at[phys, off].set(k.astype(cdt), mode="drop"),
-        v=pool.v.at[phys, off].set(v.astype(cdt), mode="drop"),
-    )
+    if pool.qk is None:
+        cdt = pool.k.dtype
+        pool = pool._replace(
+            k=pool.k.at[phys, off].set(k.astype(cdt), mode="drop"),
+            v=pool.v.at[phys, off].set(v.astype(cdt), mode="drop"),
+        )
+    else:
+        pool = _pool_write(pool, phys, off, k, v, kv_precision_of(cfg))
 
-    gather = jnp.clip(block_table, 0, N - 1)
-    kk = pool.k[gather].reshape(B, MP * ps, cfg.n_kv_heads, cfg.head_dim_)
-    vv = pool.v[gather].reshape(B, MP * ps, cfg.n_kv_heads, cfg.head_dim_)
+    kk, vv = _pool_read(pool, block_table, q.dtype)
 
     H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
     G = H // KVH
@@ -640,16 +900,39 @@ def paged_splice_prompt(pool: PagedKVPool, cache: KVCache,
     physical destination pages, npp = P / page_size; pad rows carry an
     out-of-range id (>= num_pages) and are dropped, so one fixed-shape
     scatter handles any number of admitted requests.
+
+    Under a quantized precision the engine runs prefill with a
+    native-storage config variant (the dense prefill cache cannot hold
+    native values in int8 arrays), so ``cache.k/v`` arrive native here and
+    the splice quantizes per destination region: pages landing in the
+    quantized region get rounded rows + scales, pages in the native region
+    get the plain cast — each region's scatter drops ids aimed at the other.
     """
     B, P = cache.k.shape[0], cache.k.shape[1]
     npp = page_idx.shape[1]
     ps = P // npp
-    rows_k = cache.k.reshape(B, npp, ps, *cache.k.shape[2:]).astype(pool.k.dtype)
-    rows_v = cache.v.reshape(B, npp, ps, *cache.v.shape[2:]).astype(pool.v.dtype)
-    return PagedKVPool(
-        k=pool.k.at[page_idx].set(rows_k, mode="drop"),
-        v=pool.v.at[page_idx].set(rows_v, mode="drop"),
-    )
+    rows_k = cache.k.reshape(B, npp, ps, *cache.k.shape[2:])
+    rows_v = cache.v.reshape(B, npp, ps, *cache.v.shape[2:])
+    nn, nq = pool.native_pages, pool.quant_pages
+    new = pool
+    if pool.k is not None:
+        nidx = jnp.minimum(page_idx, nn)              # quant region / pads -> drop
+        new = new._replace(
+            k=new.k.at[nidx].set(rows_k.astype(new.k.dtype), mode="drop"),
+            v=new.v.at[nidx].set(rows_v.astype(new.v.dtype), mode="drop"),
+        )
+    if pool.qk is not None:
+        prec = parse_kv_precision(str(pool.qk.dtype))
+        qidx = jnp.where(page_idx >= nn, page_idx - nn, nq)
+        qk_, ks_ = quantize_kv(rows_k, prec)
+        qv_, vs_ = quantize_kv(rows_v, prec)
+        new = new._replace(
+            qk=new.qk.at[qidx].set(qk_, mode="drop"),
+            qv=new.qv.at[qidx].set(qv_, mode="drop"),
+            k_scale=new.k_scale.at[qidx].set(ks_, mode="drop"),
+            v_scale=new.v_scale.at[qidx].set(vs_, mode="drop"),
+        )
+    return new
 
 
 def fork_pages(pool: PagedKVPool, src_idx: jax.Array,
@@ -661,14 +944,30 @@ def fork_pages(pool: PagedKVPool, src_idx: jax.Array,
     clamped into range (the gathered rows land nowhere), so one fixed-shape
     dispatch forks any number of pages. The copy is whole-page: rows past
     the fork point are overwritten by the new holder's chunks and rows past
-    its pos are masked, so over-copying is free.
+    its pos are masked, so over-copying is free. Forks never cross the
+    precision boundary (the allocator hands out dst pages from the src's
+    region), so each region copies independently — quantized pages move
+    with their scales, byte-for-byte.
     """
-    N = pool.k.shape[0]
-    src = jnp.clip(src_idx, 0, N - 1)
-    return PagedKVPool(
-        k=pool.k.at[dst_idx].set(pool.k[src], mode="drop"),
-        v=pool.v.at[dst_idx].set(pool.v[src], mode="drop"),
-    )
+    nn, nq = pool.native_pages, pool.quant_pages
+    new = pool
+    if pool.k is not None:
+        srcn = jnp.clip(src_idx, 0, nn - 1)
+        dstn = jnp.minimum(dst_idx, nn)
+        new = new._replace(
+            k=new.k.at[dstn].set(new.k[srcn], mode="drop"),
+            v=new.v.at[dstn].set(new.v[srcn], mode="drop"),
+        )
+    if pool.qk is not None:
+        srcq = jnp.clip(src_idx - nn, 0, nq - 1)
+        dstq = jnp.where(dst_idx >= nn, dst_idx - nn, nq)
+        new = new._replace(
+            qk=new.qk.at[dstq].set(new.qk[srcq], mode="drop"),
+            qv=new.qv.at[dstq].set(new.qv[srcq], mode="drop"),
+            k_scale=new.k_scale.at[dstq].set(new.k_scale[srcq], mode="drop"),
+            v_scale=new.v_scale.at[dstq].set(new.v_scale[srcq], mode="drop"),
+        )
+    return new
 
 
 def cross_attn_cache(params, enc_out: jax.Array):

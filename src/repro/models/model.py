@@ -294,17 +294,19 @@ def chunk_step(params, state: DecodeState, tokens, pos0, valid, reset,
 
 
 def chunk_step_paged(params, state: PagedDecodeState, tokens, pos0, valid,
-                     cfg: ModelConfig):
+                     cfg: ModelConfig, base=None):
     """``chunk_step`` against the paged pools (block tables unchanged —
     page allocation is host-side; the chunk only writes into pages its rows
-    already own)."""
+    already own). ``base`` (B,) is each row's prefix-cache hit length,
+    used by the lossy-precision staging split in ``attn_chunk_paged``."""
     B, C = tokens.shape
     h = embed(params["embed"], tokens, cfg)
     if cfg.arch_type in ("dense", "vlm", "audio"):
         h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
     h = constrain(h)
     h, pools = T.chunk_hidden_paged(
-        params["stack"], h, state.pools, state.block_tables, pos0, valid, cfg
+        params["stack"], h, state.pools, state.block_tables, pos0, valid, cfg,
+        base=base,
     )
     last = jnp.clip(valid - 1, 0, C - 1)
     hl = rmsnorm(params["ln_f"], h[jnp.arange(B), last], cfg.norm_eps)

@@ -366,16 +366,18 @@ def ragged_prefill_supported(cfg: ModelConfig) -> bool:
 
 
 def chunked_prefill_supported(cfg: ModelConfig) -> bool:
-    """Chunked (continuous-batching) prefill covers the ragged-prefill archs
-    minus the quantized-cache knob.
+    """Chunked (continuous-batching) prefill covers the ragged-prefill archs.
 
-    The chunk pass re-reads its own earlier K/V from the decode cache, so a
-    lossy ``cache_dtype`` (e.g. f8) would round values the one-shot prefill
-    attends at full precision — breaking the bit-identity contract. MoE is
-    excluded for the ragged reason squared: capacity assignment is a cumsum
-    over the token block, so chunk boundaries would change routing.
+    Lossy cache precisions (quantized or legacy cast) no longer disqualify a
+    config: the in-flight prompt's K/V is carried in a native-dtype staging
+    buffer (DESIGN.md §14) and attended there, so chunk N re-reads chunk
+    N-1's rows exactly as the one-shot prefill would — the rounded copy in
+    the cache/pool is written at the same time but only read after the
+    prompt phase. MoE is excluded for the ragged reason squared: capacity
+    assignment is a cumsum over the token block, so chunk boundaries would
+    change routing.
     """
-    return ragged_prefill_supported(cfg) and not cfg.cache_dtype
+    return ragged_prefill_supported(cfg)
 
 
 def chunk_hidden(stack, h, caches, pos0, valid, reset, cfg: ModelConfig, *,
@@ -405,9 +407,11 @@ def chunk_hidden(stack, h, caches, pos0, valid, reset, cfg: ModelConfig, *,
 
 
 def chunk_hidden_paged(stack, h, pools, block_table, pos0, valid,
-                       cfg: ModelConfig):
+                       cfg: ModelConfig, base=None):
     """``chunk_hidden`` against the shared page pools (one block table for
-    the whole stack, like ``decode_hidden_paged``)."""
+    the whole stack, like ``decode_hidden_paged``). ``base`` (B,) is the
+    per-row prefix-cache hit length — under a lossy precision it splits
+    attention between pool pages [0, base) and the native staging buffer."""
     segs = plan_segments(cfg, "decoder")
     new_pools = []
     for seg, params, pool in zip(segs, stack, pools, strict=True):
@@ -418,7 +422,7 @@ def chunk_hidden_paged(stack, h, pools, block_table, pos0, valid,
             p, pool_l = pp
             a, pool_l = A.attn_chunk_paged(
                 p["attn"], rmsnorm(p["ln1"], hh, cfg.norm_eps), pool_l,
-                block_table, pos0, valid, cfg,
+                block_table, pos0, valid, cfg, base=base,
             )
             hh, _ = _ffn(p, hh + a, cfg)
             return constrain(hh), pool_l
@@ -440,22 +444,27 @@ def paged_segments_supported(cfg: ModelConfig) -> bool:
     return all(s.kind in ("attn", "attn_moe") for s in plan_segments(cfg, "decoder"))
 
 
-def paged_pools_init(cfg: ModelConfig, num_pages: int, page_size: int):
+def paged_pools_init(cfg: ModelConfig, num_pages: int, page_size: int,
+                     native_pages=None, stage_rows: int = 0,
+                     stage_len: int = 0):
     """Per-segment page pools, leaves stacked on the layer axis like every
-    other cache: list of PagedKVPool with k/v (n, num_pages, page_size,
-    KVH, hd). All layers of one segment share page indexing (one block
-    table per request serves the whole stack)."""
+    other cache: list of PagedKVPool with k/v (n, native_pages, page_size,
+    KVH, hd) and, under a quantized precision, qk/qv + scales for physical
+    ids >= native_pages (DESIGN.md §14). All layers of one segment share
+    page indexing (one block table per request serves the whole stack)."""
     if not paged_segments_supported(cfg):
         raise ValueError(
             f"paged decode requires an all-attention stack; {cfg.name} has "
             f"segments {[s.kind for s in plan_segments(cfg, 'decoder')]}"
         )
-    dt = A.cache_dtype(cfg)
-    KVH, hd = cfg.n_kv_heads, cfg.head_dim_
     pools = []
     for seg in plan_segments(cfg, "decoder"):
-        shape = (seg.n, num_pages, page_size, KVH, hd)
-        pools.append(A.PagedKVPool(k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt)))
+        one = A.paged_pool_init(num_pages, page_size, cfg,
+                                native_pages=native_pages,
+                                stage_rows=stage_rows, stage_len=stage_len)
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (seg.n, *x.shape)).copy(), one)
+        pools.append(stacked)
     return pools
 
 

@@ -39,6 +39,7 @@ class DecisionLog:
         self.rates: deque = deque(maxlen=capacity)
         self.routes: deque = deque(maxlen=capacity)
         self.sheds: deque = deque(maxlen=capacity)
+        self.precisions: deque = deque(maxlen=capacity)
 
     # ---------------------------------------------------------- recording
     def record_rate(self, *, t: int, backlog: float, vq: float, V: float,
@@ -90,6 +91,19 @@ class DecisionLog:
             "waited": None if waited is None else int(waited),
         })
 
+    def record_precision(self, *, t: int, occupancy: float, vq: float,
+                         prev: str, chosen: str) -> None:
+        """One admission-precision latch flip (DESIGN.md §14): the
+        PrecisionAware hysteresis moved new admissions between page regions
+        (``prev`` -> ``chosen``, e.g. "native" -> "int8") at the recorded
+        occupancy. Every downgrade onto lossy pages lands here before the
+        engine applies it — quantizing a request's KV is never silent."""
+        self.precisions.append({
+            "t": int(t), "occupancy": float(occupancy), "vq": float(vq),
+            "prev": str(prev), "chosen": str(chosen),
+            "downgrade": chosen != "native",
+        })
+
     # ------------------------------------------------------------- views
     def rate_series(self) -> dict:
         """{'t', 'backlog', 'rate', 'vq'} arrays — the Fig.-2 axes."""
@@ -128,7 +142,8 @@ class DecisionLog:
     # ----------------------------------------------------------- exports
     def to_json(self) -> dict:
         return {"rates": list(self.rates), "routes": list(self.routes),
-                "sheds": list(self.sheds)}
+                "sheds": list(self.sheds),
+                "precisions": list(self.precisions)}
 
     def save(self, path: str) -> str:
         with open(path, "w") as f:
@@ -143,6 +158,7 @@ class DecisionLog:
         log.rates.extend(data.get("rates", []))
         log.routes.extend(data.get("routes", []))
         log.sheds.extend(data.get("sheds", []))
+        log.precisions.extend(data.get("precisions", []))
         return log
 
 
@@ -161,6 +177,9 @@ class NullDecisionLog(DecisionLog):
         return None
 
     def record_shed(self, **kw) -> None:  # noqa: ARG002
+        return None
+
+    def record_precision(self, **kw) -> None:  # noqa: ARG002
         return None
 
 

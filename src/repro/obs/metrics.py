@@ -29,6 +29,7 @@ GAUGE_KEYS = frozenset({
     "occupancy", "occupancy_hwm", "committed_occupancy",
     "pages_used", "pages_free", "pages_shared", "pages_pinned",
     "frag_tokens", "peak_active", "peak_pages",
+    "pages_quant", "pages_quant_used", "quant_occupancy",
     "replicas", "replicas_alive",
     # reliability layer (DESIGN.md §12): current overload level and the
     # aggregate conformal virtual-queue price are levels, not totals

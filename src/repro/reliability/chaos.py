@@ -103,10 +103,11 @@ class _ChaosAllocator:
     def __getattr__(self, name):
         return getattr(self._inner, name)
 
-    def alloc(self, rid, tokens, shared=()):
+    def alloc(self, rid, tokens, shared=(), precision="native"):
         if self._injector._alloc_fault("alloc", rid):
             return None
-        return self._inner.alloc(rid, tokens, shared=shared)
+        return self._inner.alloc(rid, tokens, shared=shared,
+                                 precision=precision)
 
     def extend(self, rid, tokens):
         if self._injector._alloc_fault("extend", rid):

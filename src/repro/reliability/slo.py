@@ -175,8 +175,9 @@ class SLOScheduler(PolicyScheduler):
                 st[1] += 1
         return out
 
-    def _observe(self, occupancy, token_backlog) -> None:
-        super()._observe(occupancy, token_backlog)
+    def _observe(self, occupancy, token_backlog,
+                 quant_occupancy=None) -> None:
+        super()._observe(occupancy, token_backlog, quant_occupancy)
         if (getattr(self.policy, "observation", None) == "slo"
                 and hasattr(self.policy, "observe")):
             self._carry = self.policy.observe(self._carry,

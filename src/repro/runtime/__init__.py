@@ -12,6 +12,7 @@ from repro.runtime.scheduler import (
     AdaptiveScheduler,
     MemoryAwareScheduler,
     PolicyScheduler,
+    PrecisionAwareScheduler,
     StaticScheduler,
     TokenAwareScheduler,
 )
@@ -31,6 +32,7 @@ __all__ = [
     "AdaptiveScheduler",
     "MemoryAwareScheduler",
     "PolicyScheduler",
+    "PrecisionAwareScheduler",
     "StaticScheduler",
     "TokenAwareScheduler",
     "latency_stats",

@@ -71,6 +71,7 @@ import numpy as np
 
 from repro.cache import PageAllocator, PrefixIndex
 from repro.cache.paged import pages_for
+from repro.cache.precision import resolve_kv_precision
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.models.transformer import (
@@ -141,6 +142,10 @@ class EngineConfig:
     # hanging drain()/retirement forever on a wedged transfer. <= 0 disables
     # the bound (the pre-watchdog blocking behavior).
     readback_timeout_s: float = 30.0
+    # KV-cache precision spec (DESIGN.md §14): "" inherits the model config;
+    # "native" / "int8" / "fp8" override it (applied via cfg.replace at
+    # engine construction, so the jitted paths key on one source of truth).
+    kv_precision: str = ""
 
 
 @dataclasses.dataclass
@@ -158,6 +163,12 @@ class PagedEngineConfig(EngineConfig):
     num_pages: int = 64
     max_active: int = 8
     max_pages_per_req: int = 0    # 0 => cache_len // page_size
+    # size of the quantized page region (physical ids at the top of the
+    # pool; DESIGN.md §14). -1 auto-derives: every page quantized when the
+    # resolved kv_precision is quantized, none otherwise. Values between 0
+    # and num_pages build a *mixed* pool — the PrecisionAware policy's
+    # playground: admission picks the region per request.
+    quant_pages: int = -1
     # prefix sharing (DESIGN.md §10): admission maps a prompt's shared
     # prefix onto resident pages through a radix index; only the novel
     # suffix allocates/prefills. Off by default — sharing-off behavior is
@@ -476,10 +487,11 @@ def _chunk_decode_sync(params, state, sync, toks, pos0, valid, reset, final,
 
 
 @partial(jax.jit, static_argnames=("n", "cfg", "sig"), donate_argnums=_DONATE)
-def _chunk_decode_sync_paged(params, state, sync, toks, pos0, valid, final,
-                             budgets, samp, *, n, cfg, sig):
+def _chunk_decode_sync_paged(params, state, sync, toks, pos0, valid, base,
+                             final, budgets, samp, *, n, cfg, sig):
     _TRACE_COUNT["n"] += 1
-    logits, state = M.chunk_step_paged(params, state, toks, pos0, valid, cfg)
+    logits, state = M.chunk_step_paged(params, state, toks, pos0, valid, cfg,
+                                       base=base)
     sync = _sync_activate(sync, logits, final, budgets, samp, sig=sig)
 
     def body(carry, i):
@@ -588,6 +600,16 @@ def _host_take(row_toks, req: Request, age: int, n_steps: int,
 class Engine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
                  extra_batch=None, obs=None):
+        if ecfg.kv_precision:
+            cfg = cfg.replace(kv_precision=ecfg.kv_precision)
+        # one resolution point: warns (once per dtype) when only the
+        # deprecated cache_dtype is set; the jitted paths re-derive the same
+        # spec warning-free via the lru-cached models.attention.kv_precision_of
+        self.kvp = resolve_kv_precision(cfg.kv_precision, cfg.cache_dtype)
+        # the dense cache stores quantized values + scales directly, so the
+        # dense engine prefills under its own cfg (the paged engine swaps in
+        # a native-storage variant — see PagedEngine.__init__)
+        self._prefill_cfg = cfg
         self.cfg, self.params, self.ecfg = cfg, params, ecfg
         self.extra = extra_batch or {}
         # observability is host-side and pull-based: the jitted hot paths
@@ -796,6 +818,9 @@ class Engine:
             "pages_pinned": 0,
             "frag_tokens": 0,
             "peak_pages": 0,
+            "pages_quant": 0,
+            "pages_quant_used": 0,
+            "quant_occupancy": 0.0,
         }
 
     def export_metrics(self, labels: Optional[dict] = None) -> None:
@@ -869,9 +894,10 @@ class Engine:
         arch supports it, padded otherwise."""
         if self._ragged:
             return _prefill_ragged(self.params, batch, jnp.asarray(lens),
-                                   self.cfg, cache_len, self.ecfg.shape_window)
-        return _prefill_padded(self.params, batch, self.cfg, cache_len,
-                               self.ecfg.shape_window)
+                                   self._prefill_cfg, cache_len,
+                                   self.ecfg.shape_window)
+        return _prefill_padded(self.params, batch, self._prefill_cfg,
+                               cache_len, self.ecfg.shape_window)
 
     def _admit_one(self, req: Request, slot: int, now: int) -> None:
         """Legacy batch-1 admission (the fused path's equivalence oracle)."""
@@ -1232,7 +1258,7 @@ class Engine:
         if not self._chunk_ok:
             raise ValueError(
                 f"{self.cfg.name}: chunked prefill needs a dense-attention "
-                "stack, no sliding window, and no lossy cache_dtype")
+                "stack and no sliding window")
 
     def _validate_chunked(self, req: Request) -> None:
         if req.max_new_tokens > self._gen_cap:
@@ -1310,6 +1336,7 @@ class Engine:
         reset = np.zeros(B, bool)
         final = np.zeros(B, bool)
         budgets = np.zeros(B, np.int32)
+        base = np.zeros(B, np.int32)
         plan = []
         for row, cur in list(self._cursors.items()):
             if left <= 0:
@@ -1327,11 +1354,13 @@ class Engine:
             reset[row] = cur.off == 0
             final[row] = fin
             budgets[row] = cur.req.max_new_tokens
+            base[row] = cur.cached   # pool-resident prefix (staging split)
             plan.append((row, cur, take, fin))
         if not plan:
             return None
         return {"toks": toks, "pos0": pos0, "valid": valid, "reset": reset,
-                "final": final, "budgets": budgets, "plan": plan}
+                "final": final, "budgets": budgets, "base": base,
+                "plan": plan}
 
     def _finish_chunk_plan(self, plan: dict, now: int) -> None:
         """Advance cursors after the chunk dispatch. A row whose final chunk
@@ -1456,6 +1485,15 @@ class PagedEngine(Engine):
         ps, P, R = ecfg.page_size, ecfg.prompt_len, ecfg.max_active
         if P % ps:
             raise ValueError(f"prompt_len {P} must be a multiple of page_size {ps}")
+        if ecfg.kv_precision:
+            cfg = cfg.replace(kv_precision=ecfg.kv_precision)
+        self.kvp = resolve_kv_precision(cfg.kv_precision, cfg.cache_dtype)
+        # under a *quantized* precision prefill runs with native storage (a
+        # dense int8 cache cannot hold native rows) and the page splice
+        # quantizes per destination region; casts keep the legacy prefill so
+        # those paths stay bit-identical to the pre-KVPrecision engine
+        self._prefill_cfg = (cfg.replace(kv_precision="native", cache_dtype="")
+                             if self.kvp.is_quantized else cfg)
         self.cfg, self.params, self.ecfg = cfg, params, ecfg
         self.obs = obs or OBS_OFF
         self.obs_pid = 0
@@ -1472,8 +1510,27 @@ class PagedEngine(Engine):
         self._chunk = -(-base_chunk // ps) * ps if not ecfg.chunk_size else base_chunk
         self._chunk_ok = chunked_prefill_supported(cfg)
 
-        self.pools = paged_pools_init(cfg, ecfg.num_pages, ps)
-        self.allocator = PageAllocator(ecfg.num_pages, ps)
+        # two-region pool geometry (DESIGN.md §14): quant_pages physical ids
+        # at the top of the pool store K/V quantized; -1 auto-derives from
+        # the resolved precision (all-or-nothing)
+        qp = ecfg.quant_pages
+        if qp < 0:
+            qp = ecfg.num_pages if self.kvp.is_quantized else 0
+        if qp and not self.kvp.is_quantized:
+            raise ValueError(
+                f"quant_pages={qp} needs a quantized kv_precision, got "
+                f"{self.kvp.tag!r}")
+        staged = self._chunk_ok and self.kvp.lossy and self.kvp.staging == "auto"
+        self.pools = paged_pools_init(
+            cfg, ecfg.num_pages, ps, native_pages=ecfg.num_pages - qp,
+            stage_rows=R if staged else 0, stage_len=P)
+        self.allocator = PageAllocator(
+            ecfg.num_pages, ps, quant_pages=qp,
+            quant_precision=self.kvp.tag if qp else "int8")
+        # the region new admissions draw from — the PrecisionAware policy's
+        # actuator (serve loop writes it between slots; every change is
+        # recorded in the DecisionLog before it takes effect)
+        self.admit_precision = "native" if qp < ecfg.num_pages else self.kvp.tag
         # prefix sharing: the radix index over resident prompt pages, plus
         # the per-slot COW fork plan (row -> (src, dst); flushed as one
         # device dispatch before the slot's mixed dispatch)
@@ -1520,6 +1577,9 @@ class PagedEngine(Engine):
             pages_pinned=st.pinned_pages,
             frag_tokens=st.frag_tokens,
             peak_pages=st.peak_used_pages,
+            pages_quant=st.quant_pages,
+            pages_quant_used=st.quant_used_pages,
+            quant_occupancy=st.quant_occupancy,
         )
         if self._prefix is not None:
             c.update(prefix_inserted_pages=self._prefix.inserted_pages,
@@ -1541,13 +1601,20 @@ class PagedEngine(Engine):
             return self.allocator.occupancy()
         return self.allocator.committed_occupancy()
 
+    def quant_occupancy(self) -> float:
+        """In-use fraction of the quantized page region — the signal the
+        PrecisionAware policy prices (0.0 without a quantized region)."""
+        return self.allocator.quant_occupancy()
+
     def prefix_hit_tokens(self, tokens) -> int:
         """Prompt tokens of ``tokens`` resident in this engine's prefix
-        cache — the router's affinity probe (LRU state untouched)."""
+        cache at the *current admission precision* — the router's affinity
+        probe (LRU state untouched)."""
         if self._prefix is None:
             return 0
         L = max(1, min(len(tokens), self.ecfg.prompt_len))
-        return min(self._prefix.peek_tokens(np.asarray(tokens[:L], np.int32)),
+        return min(self._prefix.peek_tokens(np.asarray(tokens[:L], np.int32),
+                                            precision=self.admit_precision),
                    L - 1)
 
     # ------------------------------------------- page acquisition helpers
@@ -1556,34 +1623,40 @@ class PagedEngine(Engine):
         return (self._prefix is not None and short > 0
                 and self._prefix.evict(short) >= short)
 
-    def _alloc_pages(self, row: int, tokens: int,
-                     shared=()) -> tuple[Optional[list], list]:
+    def _alloc_pages(self, row: int, tokens: int, shared=(),
+                     precision: str = "native") -> tuple[Optional[list], list]:
         """Allocator alloc with eviction retry. Returns (block table or
         None, the shared pages actually acquired) — after a deep eviction a
         shared page may itself have been reclaimed, in which case sharing
         is abandoned for this request (a hit is an optimization, never a
-        correctness dependency)."""
+        correctness dependency). ``precision`` names the region novel pages
+        come from; the shortfall math counts only that region's free list
+        (eviction can still free the other region's pages — harmless)."""
         shared = list(shared)
-        pages = self.allocator.alloc(row, tokens, shared=shared)
+        pages = self.allocator.alloc(row, tokens, shared=shared,
+                                     precision=precision)
         if pages is not None or self._prefix is None:
             return pages, shared
         short = (pages_for(tokens, self.ecfg.page_size) - len(shared)
-                 - self.allocator.free_pages)
+                 - self.allocator.free_pages_for(precision))
         if not self._evict_short(short):
             return None, shared
         if any(self.allocator.refcount(p) <= 0 for p in shared):
             self._raced_hit(row, "shared-page-evicted")
             shared = []
-        return self.allocator.alloc(row, tokens, shared=shared), shared
+        return self.allocator.alloc(row, tokens, shared=shared,
+                                    precision=precision), shared
 
     def _extend_pages(self, row: int, tokens: int) -> Optional[list]:
         """Allocator extend with eviction retry (decode growth and chunk
-        reservations reclaim cold cached prefixes before giving up)."""
+        reservations reclaim cold cached prefixes before giving up). Growth
+        stays inside the row's own precision region."""
         pages = self.allocator.extend(row, tokens)
         if pages is None and self._prefix is not None:
+            prec = self.allocator.precision_of(row)
             short = (pages_for(tokens, self.ecfg.page_size)
                      - len(self.allocator.block_table(row))
-                     - self.allocator.free_pages)
+                     - self.allocator.free_pages_for(prec))
             if self._evict_short(short):
                 pages = self.allocator.extend(row, tokens)
         return pages
@@ -1688,13 +1761,15 @@ class PagedEngine(Engine):
             # (and COW forks) lives on the chunked path.
             shared: list = []
             if self._prefix is not None:
-                hit = self._prefix.lookup(np.asarray(req.tokens[:L], np.int32))
+                hit = self._prefix.lookup(np.asarray(req.tokens[:L], np.int32),
+                                          precision=self.admit_precision)
                 shared = hit.pages[: (L - 1) // ps]
             # pages are keyed by engine row, not req.rid: a row uniquely owns
             # its request while active, whereas rids are only unique per
             # RequestSource (two sources feeding one engine may collide)
             pages, shared = self._alloc_pages(
-                row, min(L + lookahead, self.MP * ps), shared=shared)
+                row, min(L + lookahead, self.MP * ps), shared=shared,
+                precision=self.admit_precision)
             if pages is None:
                 self.alloc_failures += 1
                 break
@@ -1758,9 +1833,11 @@ class PagedEngine(Engine):
             self.slot_age[row] = 1   # first token came from prefill
             if self._prefix is not None:
                 # register this prompt's fully-written full pages (shared
-                # ones are already indexed — insert walks past them)
+                # ones are already indexed — insert walks past them), under
+                # the precision they were written at
                 self._prefix.insert(np.asarray(req.tokens[:L], np.int32),
-                                    pages[: L // ps])
+                                    pages[: L // ps],
+                                    precision=self.allocator.precision_of(row))
             if sync:
                 self._row_epoch[row] += 1
         self.peak_active = max(self.peak_active, sum(r is not None for r in self.active))
@@ -1935,19 +2012,21 @@ class PagedEngine(Engine):
         tokens so the final prompt token always recomputes (its logits
         activate the row).
         """
+        prec = self.admit_precision
         if self._prefix is None:
-            self.allocator.alloc(row, 0)   # register an empty block table
+            # register an empty block table (remembers the row's precision)
+            self.allocator.alloc(row, 0, precision=prec)
             return 0
         ps, L = self.ecfg.page_size, len(toks)
-        hit = self._prefix.lookup(np.asarray(toks, np.int32))
+        hit = self._prefix.lookup(np.asarray(toks, np.int32), precision=prec)
         want = hit.pages[: (L - 1) // ps]
         fork_len = 0
         if hit.fork_src is not None and len(want) == len(hit.pages):
             fork_len = max(0, min(hit.fork_len, L - 1 - len(want) * ps))
         pages, shared = self._alloc_pages(row, len(want) * ps + fork_len,
-                                          shared=want)
+                                          shared=want, precision=prec)
         if pages is None:
-            self.allocator.alloc(row, 0)   # cold start: empty block table
+            self.allocator.alloc(row, 0, precision=prec)  # cold start
             return 0
         if len(shared) < len(want):
             cached = len(shared) * ps      # deep eviction ate part of the hit
@@ -1977,7 +2056,8 @@ class PagedEngine(Engine):
             L = len(cur.toks)
             pages = self.allocator.block_table(row)
             self._prefix.insert(np.asarray(cur.toks, np.int32),
-                                pages[: L // self.ecfg.page_size])
+                                pages[: L // self.ecfg.page_size],
+                                precision=self.allocator.precision_of(row))
 
     def _chunk_reserve(self, row: int, cur: PrefillCursor, take: int,
                        fin: bool, n_steps: int) -> bool:
@@ -2060,9 +2140,9 @@ class PagedEngine(Engine):
                 state, self.sync, served_steps = _chunk_decode_sync_paged(
                     self.params, state, self.sync,
                     jnp.asarray(plan["toks"]), jnp.asarray(plan["pos0"]),
-                    jnp.asarray(plan["valid"]), jnp.asarray(plan["final"]),
-                    jnp.asarray(plan["budgets"]), samp,
-                    n=n_steps, cfg=self.cfg, sig=sig,
+                    jnp.asarray(plan["valid"]), jnp.asarray(plan["base"]),
+                    jnp.asarray(plan["final"]), jnp.asarray(plan["budgets"]),
+                    samp, n=n_steps, cfg=self.cfg, sig=sig,
                 )
             else:
                 state, self.sync, served_steps = _decode_n_sync_paged(

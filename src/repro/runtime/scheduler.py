@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.control import (DriftPlusPenalty, LatencyAware, MemoryAware,
-                           Policy, Static, TokenBacklogAware)
+                           Policy, PrecisionAware, Static, TokenBacklogAware)
 from repro.control.policy import drift_plus_penalty_action
 from repro.core.utility import Utility, paper_utility
 from repro.obs import explain_tables
@@ -109,30 +109,54 @@ class PolicyScheduler:
             self._cost_np = np.float32(cost) * self._f_np
         self._decisions = self.obs.decisions if self.obs is not None else None
         self._carry = self.policy.init()
+        self._admit_precision = "native"
         self.dropped = 0
         self.rate_history: list = []
         self._pending_rate = None  # control_async: last dispatched decision
 
     def _observe(self, occupancy: Optional[float],
-                 token_backlog: Optional[float]) -> None:
+                 token_backlog: Optional[float],
+                 quant_occupancy: Optional[float] = None) -> None:
         """Feed observation-driven virtual queues: a policy exposing
         ``observe`` names the engine signal it consumes via its
         ``observation`` attribute ("occupancy" for MemoryAware,
-        "token_backlog" for TokenBacklogAware) and advances on it before
-        acting; other policies ignore both."""
+        "token_backlog" for TokenBacklogAware, "quant_occupancy" for
+        PrecisionAware) and advances on it before acting; other policies
+        ignore all three."""
         if not hasattr(self.policy, "observe"):
             return
-        sig = {"occupancy": occupancy, "token_backlog": token_backlog}.get(
+        sig = {"occupancy": occupancy, "token_backlog": token_backlog,
+               "quant_occupancy": quant_occupancy}.get(
             getattr(self.policy, "observation", "occupancy"))
         if sig is not None:
             self._carry = self.policy.observe(self._carry, sig)
 
+    def admit_precision(self, occupancy: Optional[float]) -> Optional[str]:
+        """The policy's page-region choice for upcoming admissions (None if
+        the policy has no such lever). The serve loop assigns the result to
+        ``engine.admit_precision``; every latch flip — in particular every
+        native->quantized downgrade — is recorded in the DecisionLog before
+        the engine sees it, so degrading precision is never silent."""
+        if occupancy is None or not hasattr(self.policy, "admit_precision"):
+            return None
+        chosen, self._carry = self.policy.admit_precision(
+            self._carry, occupancy)
+        prev, self._admit_precision = self._admit_precision, chosen
+        d = self._decisions
+        if chosen != prev and d is not None and d.enabled:
+            d.record_precision(t=len(self.rate_history),
+                               occupancy=float(occupancy),
+                               vq=self._vq_value(), prev=prev, chosen=chosen)
+        return chosen
+
     def control(self, backlog: int, occupancy: Optional[float] = None,
-                token_backlog: Optional[float] = None) -> float:
+                token_backlog: Optional[float] = None,
+                quant_occupancy: Optional[float] = None) -> float:
         """One control-slot decision. ``occupancy`` (the paged engine's
-        page-pool fill fraction) and ``token_backlog`` (pending prompt
-        tokens) feed observation-driven virtual queues via ``_observe``."""
-        self._observe(occupancy, token_backlog)
+        page-pool fill fraction), ``token_backlog`` (pending prompt
+        tokens), and ``quant_occupancy`` (quantized-region fill) feed
+        observation-driven virtual queues via ``_observe``."""
+        self._observe(occupancy, token_backlog, quant_occupancy)
         d = self._decisions
         rec = d is not None and d.enabled
         vq = self._vq_value() if rec else 0.0
@@ -183,7 +207,8 @@ class PolicyScheduler:
         return f_star
 
     def control_async(self, backlog: int, occupancy: Optional[float] = None,
-                      token_backlog: Optional[float] = None) -> float:
+                      token_backlog: Optional[float] = None,
+                      quant_occupancy: Optional[float] = None) -> float:
         """Sync-free control: dispatch this slot's Algorithm-1 decision and
         return the PREVIOUS one — the readback of decision t overlaps slot
         t's compute, so the serve loop never blocks on the controller.
@@ -191,7 +216,7 @@ class PolicyScheduler:
         bounded observation delay (the backlog moves by at most one slot's
         arrivals/services). The first call blocks once to seed the pipeline;
         Static policies short-circuit with no device work at all."""
-        self._observe(occupancy, token_backlog)
+        self._observe(occupancy, token_backlog, quant_occupancy)
         d = self._decisions
         rec = d is not None and d.enabled
         vq = self._vq_value() if rec else 0.0
@@ -262,6 +287,32 @@ def TokenAwareScheduler(
         rates=tuple(float(f) for f in rates), V=V,
         tokens_per_request=tokens_per_request,
         token_budget=token_budget, tok_gain=tok_gain,
+    )
+    return PolicyScheduler(policy=policy, capacity=capacity, obs=obs)
+
+
+def PrecisionAwareScheduler(
+    rates: tuple = tuple(float(f) for f in range(1, 11)),
+    V: float = 50.0,
+    pages_per_request: float = 2.0,
+    quant_budget: float = 0.6,
+    quant_gain: float = 1.0,
+    downgrade_at: float = 0.75,
+    upgrade_at: float = 0.5,
+    quant_precision: str = "int8",
+    capacity: int = 256,
+    obs=None,
+) -> PolicyScheduler:
+    """Algorithm-1 scheduler with the quantized-page admission lever: calls
+    ``admit_precision(engine.occupancy())`` each slot for the page region,
+    and prices the quantized pool's fill (``engine.quant_occupancy()``)
+    as a virtual queue."""
+    policy = PrecisionAware(
+        rates=tuple(float(f) for f in rates), V=V,
+        pages_per_request=pages_per_request,
+        quant_budget=quant_budget, quant_gain=quant_gain,
+        downgrade_at=downgrade_at, upgrade_at=upgrade_at,
+        quant_precision=quant_precision,
     )
     return PolicyScheduler(policy=policy, capacity=capacity, obs=obs)
 

@@ -48,12 +48,22 @@ def serve(engine: Engine, scheduler, source: RequestSource, *,
         # controller must price
         occ = max(engine.occupancy(), engine.occupancy_hwm) if paged else None
         tok = engine.token_backlog() if hasattr(engine, "token_backlog") else None
+        qocc = (engine.quant_occupancy()
+                if hasattr(engine, "quant_occupancy") else None)
         if (sync_free or chunked) and hasattr(scheduler, "control_async"):
             rate = scheduler.control_async(engine.queue_len(), occupancy=occ,
-                                           token_backlog=tok)
+                                           token_backlog=tok,
+                                           quant_occupancy=qocc)
         else:
             rate = scheduler.control(engine.queue_len(), occupancy=occ,
-                                     token_backlog=tok)
+                                     token_backlog=tok, quant_occupancy=qocc)
+        # the precision lever (DESIGN.md §14): a policy exposing
+        # admit_precision picks the page region for this slot's admissions
+        # (every latch flip is DecisionLog-recorded inside the scheduler)
+        if occ is not None and hasattr(scheduler, "admit_precision"):
+            chosen = scheduler.admit_precision(occ)
+            if chosen is not None and hasattr(engine, "admit_precision"):
+                engine.admit_precision = chosen
         reqs = source.poll(t, rate)
         scheduler.admit(engine, reqs, t)
         if chunked:

@@ -83,6 +83,61 @@ def test_allocator_never_double_allocates(num_pages, page_size, seed):
     assert alloc.used_pages == 0 and alloc.free_pages == num_pages
 
 
+@pytest.mark.quant
+@given(num_pages=st.integers(2, 40), page_size=st.integers(1, 32),
+       quant_frac=st.floats(0.0, 1.0), seed=st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_allocator_two_region_ownership(num_pages, page_size, quant_frac,
+                                        seed):
+    """The double-allocation sweep over a mixed native/int8 pool: random
+    alloc/extend/free interleavings with per-request precision, asserting
+    after every op that ownership holds, every request's pages stay inside
+    its region, and the per-region accounting (quant_occupancy) is exact."""
+    quant_pages = int(round(quant_frac * num_pages))
+    rng = np.random.default_rng(seed)
+    alloc = PageAllocator(num_pages, page_size, quant_pages=quant_pages)
+    regions = ["native"] if quant_pages < num_pages else []
+    if quant_pages:
+        regions.append("int8")
+    live: dict[int, tuple[int, str]] = {}   # rid -> (tokens, precision)
+    rid = 0
+    for _ in range(60):
+        op = rng.integers(0, 3)
+        if op == 0 and regions:
+            prec = regions[int(rng.integers(0, len(regions)))]
+            tokens = int(rng.integers(0, 3 * page_size + 1))
+            table = alloc.alloc(rid, tokens, precision=prec)
+            if table is not None:
+                assert all(alloc.region_of(p) == prec for p in table)
+                assert alloc.precision_of(rid) == prec
+                live[rid] = (tokens, prec)
+                rid += 1
+            else:
+                assert (pages_for(tokens, page_size)
+                        > alloc.free_pages_for(prec))
+        elif op == 1 and live:
+            r = int(rng.choice(list(live)))
+            tokens, prec = live[r]
+            tokens += int(rng.integers(0, 2 * page_size + 1))
+            table = alloc.extend(r, tokens)
+            if table is not None:
+                assert all(alloc.region_of(p) == prec for p in table)
+                live[r] = (tokens, prec)
+        elif op == 2 and live:
+            r = int(rng.choice(list(live)))
+            tokens, _ = live.pop(r)
+            assert alloc.free(r) == pages_for(tokens, page_size)
+        alloc.check()
+        qused = sum(pages_for(t, page_size)
+                    for t, p in live.values() if p == "int8")
+        assert alloc.quant_occupancy() == (
+            qused / quant_pages if quant_pages else 0.0)
+    for r in list(live):
+        alloc.free(r)
+    alloc.check()
+    assert alloc.used_pages == 0 and alloc.free_pages == num_pages
+
+
 def test_allocator_alloc_free_roundtrip_exact():
     a = PageAllocator(8, 4)
     t1 = a.alloc(1, 10)          # 3 pages

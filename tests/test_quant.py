@@ -1,0 +1,487 @@
+"""Quantized KV-cache suite (DESIGN.md §14).
+
+Four layers, one file:
+
+* **Spec**: ``KVPrecision`` parsing/aliases/byte math, and the
+  ``cache_dtype`` -> ``kv_precision`` deprecation shim.
+* **Quantizer**: the elementwise roundtrip error bound that every higher
+  claim rests on — |dequant(quant(x)) - x| <= scale/2 per element, with
+  *per-token-per-head* scales so one hot head cannot poison another's
+  resolution.
+* **Kernels**: interpret-mode error-bound sweeps of the dequantizing
+  flash/chunk/paged kernels against the quant oracles (tight — same
+  arithmetic, different op order) and against the *native* oracles (loose —
+  the bounded divergence the Comparator API encodes), covering per-head
+  scale extremes, page-boundary tokens, and GQA group packing.
+* **Control/engine**: the PrecisionAware hysteresis latch + virtual queue,
+  DecisionLog recording of every precision flip, the two-region allocator,
+  and the native-staging regression — chunk N re-reads chunk N-1's K/V
+  exactly (bit-identical to a native run's cache) even though the pool rows
+  are int8.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache.paged import PageAllocator
+from repro.cache.precision import (KVPrecision, parse_kv_precision,
+                                   resolve_kv_precision)
+from repro.configs import get_config
+from repro.kernels import ops
+from repro.kernels.quant import dequantize_kv, quantize_kv
+from repro.kernels.ref import (attention_quant_ref, attention_ref,
+                               chunk_attention_quant_ref,
+                               paged_decode_attention_quant_ref,
+                               paged_decode_attention_ref)
+from repro.models import init_params
+from repro.obs.decisions import DecisionLog
+from repro.runtime import Engine, EngineConfig, PagedEngine, PagedEngineConfig
+from repro.runtime.request import Request
+from repro.runtime.scheduler import PolicyScheduler, PrecisionAwareScheduler
+
+KEY = jax.random.PRNGKey(11)
+_CACHE = {}
+
+pytestmark = pytest.mark.quant
+
+
+def _setup():
+    if "m" not in _CACHE:
+        cfg = get_config("granite-3-2b", smoke=True)
+        _CACHE["m"] = (cfg, init_params(KEY, cfg))
+    return _CACHE["m"]
+
+
+# ------------------------------------------------------------------- spec
+def test_kv_precision_parse_and_aliases():
+    assert parse_kv_precision("native") == KVPrecision()
+    assert parse_kv_precision("") == KVPrecision()
+    p = parse_kv_precision("int8")
+    assert p.is_quantized and p.lossy and p.qmax == 127.0
+    assert p.tag == "int8"
+    f = parse_kv_precision("fp8")
+    assert f.dtype == "float8_e4m3fn" and f.qmax == 448.0
+    # a bare cast dtype is lossy but NOT quantized (no scales, no staging
+    # required for correctness — it is the legacy cache_dtype behavior)
+    c = parse_kv_precision("bfloat16")
+    assert c.lossy and c.is_cast and not c.is_quantized
+
+
+def test_kv_precision_byte_math():
+    n = KVPrecision()
+    q = parse_kv_precision("int8")
+    assert n.token_bytes(64) == 256          # f32 native
+    assert q.token_bytes(64) == 68           # 1B/elem + 4B scale
+    # equal-bytes capacity ratio 4*hd/(hd+4) — the bench's >= 1.5x source
+    assert n.page_bytes(8, 2, 64) / q.page_bytes(8, 2, 64) > 3.5
+
+
+def test_kv_precision_validation():
+    from repro.kernels.quant import qdtype_of
+
+    with pytest.raises(ValueError):
+        KVPrecision(dtype="int4", granularity="token_head")
+    with pytest.raises(ValueError):
+        KVPrecision(granularity="page")
+    # unknown dtypes parse as legacy casts but fail loudly at resolution
+    with pytest.raises(ValueError):
+        qdtype_of(parse_kv_precision("no-such-dtype"))
+
+
+def test_cache_dtype_deprecation_shim():
+    """Legacy ``cache_dtype`` still resolves (one DeprecationWarning per
+    dtype); explicit ``kv_precision`` wins without warning."""
+    from repro.cache import precision as _precision
+
+    _precision._warned.discard("float16")  # once-per-dtype: reset for rerun
+    with pytest.warns(DeprecationWarning):
+        p = resolve_kv_precision(kv_precision="", cache_dtype="float16")
+    assert p.is_cast and p.dtype == "float16"
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        q = resolve_kv_precision(kv_precision="int8", cache_dtype="float16")
+    assert q.is_quantized
+
+
+# -------------------------------------------------------------- quantizer
+@pytest.mark.parametrize("shape", [(4, 16, 2, 32), (1, 8, 1, 64)])
+def test_quantize_roundtrip_error_bound(shape):
+    """|dequant(quant(x)) - x| <= scale/2 elementwise, scale = amax/127 per
+    (token, head) row — the bound every downstream divergence claim rests
+    on. Swept across per-head scale extremes: a 1e6x spread between heads
+    must not cost the small head any resolution (scales are per-head)."""
+    prec = parse_kv_precision("int8")
+    x = jax.random.normal(KEY, shape, jnp.float32)
+    # head 0 tiny, last head huge
+    spread = jnp.logspace(-3, 3, shape[-2])[None, None, :, None]
+    x = x * spread
+    q, scale = quantize_kv(x, prec)
+    assert q.dtype == jnp.int8 and scale.shape == shape[:-1]
+    back = dequantize_kv(q, scale, jnp.float32)
+    # 0.5*scale from rounding plus a few f32 ulps from the div/mul roundtrip
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    bound = np.broadcast_to(np.asarray(scale)[..., None] * (0.5 + 1e-3),
+                            err.shape)
+    np.testing.assert_array_less(err, bound + 1e-12)
+    # per-head relative error stays ~1/254 regardless of the other heads
+    rel = (np.abs(np.asarray(back) - np.asarray(x)).max(axis=(0, 1, 3))
+           / np.abs(np.asarray(x)).max(axis=(0, 1, 3)))
+    assert (rel <= 1 / 254 + 1e-4).all()
+
+
+def test_quantize_deterministic():
+    prec = parse_kv_precision("int8")
+    x = jax.random.normal(KEY, (2, 8, 2, 16), jnp.float32)
+    q1, s1 = quantize_kv(x, prec)
+    q2, s2 = quantize_kv(x, prec)
+    assert np.array_equal(np.asarray(q1), np.asarray(q2))
+    assert np.array_equal(np.asarray(s1), np.asarray(s2))
+
+
+# ---------------------------------------------------------------- kernels
+def _quant_kv(kshape, spread=None):
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), kshape, jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), kshape, jnp.float32)
+    if spread is not None:
+        k = k * spread
+        v = v * spread
+    prec = parse_kv_precision("int8")
+    qk, ks = quantize_kv(k, prec)
+    qv, vs = quantize_kv(v, prec)
+    return k, v, qk, qv, ks, vs
+
+
+@pytest.mark.parametrize("B,S,H,KVH,hd,blk", [(2, 64, 4, 2, 32, 32),
+                                              (1, 128, 4, 1, 64, 64)])
+@pytest.mark.parametrize("extreme", [False, True])
+def test_flash_attention_quant_interpret(B, S, H, KVH, hd, blk, extreme):
+    """Dequantizing flash kernel vs the quant oracle (tight: identical
+    dequant arithmetic, different reduction order) and vs the NATIVE oracle
+    (loose: the bounded divergence quantization legitimately buys). GQA
+    packing (H > KVH) exercises the h//G scale-tile index map; ``extreme``
+    sweeps per-head scale spreads."""
+    spread = (jnp.logspace(-2, 2, KVH)[None, None, :, None]
+              if extreme else None)
+    k, v, qk, qv, ks, vs = _quant_kv((B, S, KVH, hd), spread)
+    q = jax.random.normal(jax.random.fold_in(KEY, 3), (B, S, H, hd),
+                          jnp.float32)
+    lens = jnp.asarray([S, S // 2][:B], jnp.int32)
+    for seq_lens in (None, lens):
+        oracle = attention_quant_ref(q, qk, qv, ks, vs, causal=True,
+                                     seq_lens=seq_lens)
+        out = ops.flash_attention(q, qk, qv, seq_lens, k_scale=ks,
+                                  v_scale=vs, impl="interpret",
+                                  block_q=blk, block_k=blk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                                   atol=2e-5, rtol=2e-5)
+        # XLA fallback agrees with the kernel (same dequant, same bound)
+        xla = ops.flash_attention(q, qk, qv, seq_lens, k_scale=ks,
+                                  v_scale=vs, impl="xla",
+                                  block_q=blk, block_k=blk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(xla),
+                                   atol=2e-5, rtol=2e-5)
+        if extreme:
+            continue  # huge K scales sharpen softmax toward argmax, where a
+            # half-step score perturbation legally swaps the winning key —
+            # output divergence vs native is unbounded there by design; the
+            # oracle comparisons above are the correctness claim.
+        native = attention_ref(q, k, v, causal=True, seq_lens=seq_lens)
+        err = np.abs(np.asarray(out) - np.asarray(native))
+        assert err.max() < 0.15 and err.mean() < 0.01
+
+
+@pytest.mark.parametrize("B,C,L,H,KVH,hd,blk", [(2, 8, 64, 4, 2, 32, 32)])
+def test_chunk_attention_quant_interpret(B, C, L, H, KVH, hd, blk):
+    k, v, qk, qv, ks, vs = _quant_kv((B, L, KVH, hd))
+    q = jax.random.normal(jax.random.fold_in(KEY, 4), (B, C, H, hd),
+                          jnp.float32)
+    sp = jnp.broadcast_to(jnp.arange(L)[None], (B, L)).astype(jnp.int32)
+    pos0 = jnp.asarray([12, 0][:B], jnp.int32)
+    valid = jnp.asarray([C, C - 3][:B], jnp.int32)
+    oracle = chunk_attention_quant_ref(q, qk, qv, ks, vs, sp, pos0, valid)
+    out = ops.chunk_attention(q, qk, qv, sp, pos0, valid, k_scale=ks,
+                              v_scale=vs, impl="interpret", block_l=blk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               atol=2e-5, rtol=2e-5)
+    xla = ops.chunk_attention(q, qk, qv, sp, pos0, valid, k_scale=ks,
+                              v_scale=vs, impl="xla", block_l=blk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(xla),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_decode_attention_quant_interpret():
+    """Quantized-pool paged decode: the scale pools gather by the same
+    block-table indirection as K/V. ``pos`` sweeps page-boundary tokens
+    (last slot of a page, first of the next) — the off-by-one shapes a
+    paged-attention bug would hide in."""
+    N, ps, KVH, hd, H = 20, 16, 2, 32, 4
+    B, MP = 4, 4
+    k, v, qk, qv, ks, vs = _quant_kv((N, ps, KVH, hd))
+    q = jax.random.normal(jax.random.fold_in(KEY, 5), (B, H, hd),
+                          jnp.float32)
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(N)[:B * MP].reshape(B, MP).astype(np.int32)
+    bt = jnp.asarray(perm)
+    bt = bt.at[0, 3].set(-1).at[1, 2:].set(-1)     # unallocated tails
+    pos = jnp.asarray([ps - 1, ps, 2 * ps - 1, 3 * ps + 5], jnp.int32)
+    oracle = paged_decode_attention_quant_ref(q, qk, qv, ks, vs, bt, pos)
+    out = ops.paged_decode_attention(q, qk, qv, bt, pos, k_scale=ks,
+                                     v_scale=vs, impl="interpret")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               atol=2e-5, rtol=2e-5)
+    xla = ops.paged_decode_attention(q, qk, qv, bt, pos, k_scale=ks,
+                                     v_scale=vs, impl="xla")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(xla),
+                               atol=2e-5, rtol=2e-5)
+    native = paged_decode_attention_ref(q, k, v, bt, pos)
+    assert np.max(np.abs(np.asarray(out) - np.asarray(native))) < 0.15
+
+
+# ------------------------------------------------------------ control plane
+def test_precision_aware_hysteresis_latch():
+    from repro.control import PrecisionAware
+
+    pol = PrecisionAware(rates=(1.0, 2.0, 4.0), V=10.0, downgrade_at=0.7,
+                         upgrade_at=0.4)
+    carry = pol.init()
+    prec, carry = pol.admit_precision(carry, 0.3)
+    assert prec == "native"
+    prec, carry = pol.admit_precision(carry, 0.69)       # below trip point
+    assert prec == "native"
+    prec, carry = pol.admit_precision(carry, 0.7)        # trips lossy
+    assert prec == "int8"
+    prec, carry = pol.admit_precision(carry, 0.55)       # dead band: stays
+    assert prec == "int8"
+    prec, carry = pol.admit_precision(carry, 0.4)        # recovers native
+    assert prec == "native"
+    prec, carry = pol.admit_precision(carry, 0.6)        # dead band: stays
+    assert prec == "native"
+    with pytest.raises(ValueError):
+        PrecisionAware(rates=(1.0,), V=1.0, downgrade_at=0.3, upgrade_at=0.5)
+
+
+def test_precision_aware_virtual_queue_throttles():
+    """Z advances on quantized occupancy above budget and prices the rate
+    down — the MemoryAware construction pointed at the lossy region."""
+    from repro.control import PrecisionAware
+
+    pol = PrecisionAware(rates=tuple(float(f) for f in range(1, 11)), V=50.0,
+                         quant_budget=0.5, quant_gain=2.0)
+    carry = pol.init()
+    f_calm, _ = pol.act(carry, jnp.float32(4.0))
+    for _ in range(25):
+        carry = pol.observe(carry, 0.95)     # quantized pool nearly full
+    assert float(carry.value) > 0
+    f_hot, _ = pol.act(carry, jnp.float32(4.0))
+    assert float(f_hot) < float(f_calm)
+    # below budget the queue drains back to zero
+    for _ in range(100):
+        carry = pol.observe(carry, 0.0)
+    assert float(carry.value) == 0.0
+
+
+def test_precision_scheduler_records_flips():
+    """Every latch flip lands in the DecisionLog (downgrades flagged);
+    steady occupancy records nothing."""
+    class Obs:
+        decisions = DecisionLog()
+
+    sched = PrecisionAwareScheduler(V=20.0, downgrade_at=0.7, upgrade_at=0.4,
+                                    obs=Obs())
+    assert isinstance(sched, PolicyScheduler)
+    for occ in (0.1, 0.3, 0.6):
+        assert sched.admit_precision(occ) == "native"
+    assert len(Obs.decisions.precisions) == 0
+    assert sched.admit_precision(0.8) == "int8"
+    assert sched.admit_precision(0.75) == "int8"         # no re-record
+    assert sched.admit_precision(0.2) == "native"
+    recs = list(Obs.decisions.precisions)
+    assert len(recs) == 2
+    assert recs[0]["prev"] == "native" and recs[0]["chosen"] == "int8"
+    assert recs[0]["downgrade"] is True
+    assert recs[1]["chosen"] == "native" and recs[1]["downgrade"] is False
+    # the quant_occupancy signal threads through control() to the VQ
+    sched.control(4, occupancy=0.5, quant_occupancy=0.9)
+    assert float(sched._carry.value) > 0
+    # policies without the lever opt out cleanly
+    assert PolicyScheduler().admit_precision(0.9) is None
+
+
+# -------------------------------------------------------------- allocator
+def test_allocator_two_regions():
+    a = PageAllocator(num_pages=8, page_size=4, quant_pages=3)
+    assert a.free_pages == 8
+    assert a.free_pages_for("native") == 5
+    assert a.free_pages_for("int8") == 3
+    assert a.region_of(0) == "native" and a.region_of(5) == "int8"
+    tn = a.alloc("r1", 8)                        # native by default
+    tq = a.alloc("r2", 8, precision="int8")
+    assert all(p < 5 for p in tn)
+    assert all(p >= 5 for p in tq)
+    assert a.precision_of("r1") == "native" and a.precision_of("r2") == "int8"
+    assert a.quant_occupancy() == pytest.approx(2 / 3)
+    a.check()
+    # extend stays in the request's region
+    assert a.extend("r2", 12) is not None
+    assert all(p >= 5 for p in a.block_table("r2"))
+    a.check()
+    # cross-region sharing is a structural error, caught at alloc
+    with pytest.raises(ValueError):
+        a.alloc("r3", 4, shared=[tq[0]], precision="native")
+    a.free("r1")
+    a.free("r2")
+    assert a.free_pages == 8 and a.quant_occupancy() == 0.0
+    a.check()
+    with pytest.raises(ValueError):
+        a.alloc("r4", 4, precision="fp8")        # unknown region
+
+
+def test_allocator_quant_region_exhaustion():
+    a = PageAllocator(num_pages=4, page_size=4, quant_pages=2)
+    assert a.can_alloc(8, precision="int8")
+    assert a.alloc("q", 8, precision="int8") is not None
+    assert not a.can_alloc(4, precision="int8")
+    assert a.alloc("q2", 4, precision="int8") is None    # region full
+    assert a.alloc("n", 8) is not None                   # native unaffected
+    a.check()
+
+
+def test_allocator_fork_stays_in_region():
+    a = PageAllocator(num_pages=8, page_size=4, quant_pages=4)
+    tq = a.alloc("w", 4, precision="int8")
+    a.pin(tq[0], key=("k",))
+    t2 = a.alloc("s", 4, shared=tq, precision="int8")
+    assert t2 == tq
+    src, dst = a.fork_page("s", 0)
+    assert src == tq[0] and a.region_of(dst) == "int8"
+    a.check()
+
+
+# ------------------------------------------------------ engine integration
+def test_paged_engine_mixed_pool_admit_precision():
+    """A mixed pool (quant_pages < num_pages) admits native by default; the
+    control plane flips ``engine.admit_precision`` and new rows land on
+    int8 pages — streams still complete and the allocator invariants hold."""
+    cfg, params = _setup()
+    eng = PagedEngine(cfg, params, PagedEngineConfig(
+        prompt_len=16, cache_len=64, page_size=8, num_pages=16,
+        max_active=4, kv_precision="int8", quant_pages=8))
+    assert eng.admit_precision == "native"
+    rng = np.random.default_rng(3)
+    r0 = Request(rid=0, arrival_slot=0,
+                 tokens=rng.integers(0, 256, 12, dtype=np.int32),
+                 max_new_tokens=8)
+    eng.submit([r0])
+    eng.step_slot(0, n_steps=2)
+    assert {eng.allocator.precision_of(r)
+            for r in eng.allocator.holders()} == {"native"}
+    eng.admit_precision = "int8"
+    r1 = Request(rid=1, arrival_slot=1,
+                 tokens=rng.integers(0, 256, 12, dtype=np.int32),
+                 max_new_tokens=8)
+    eng.submit([r1])
+    eng.step_slot(1, n_steps=1)
+    assert "int8" in {eng.allocator.precision_of(r)
+                      for r in eng.allocator.holders()}
+    eng.allocator.check()
+    t = 2
+    while len(eng.finished) < 2 and t < 30:
+        eng.step_slot(t, n_steps=2)
+        t += 1
+    assert len(eng.finished) == 2
+    assert eng.counters()["pages_quant"] == 8
+    eng.allocator.check()
+
+
+def test_engine_quant_counters_and_occupancy():
+    cfg, params = _setup()
+    eng = PagedEngine(cfg, params, PagedEngineConfig(
+        prompt_len=16, cache_len=64, page_size=8, num_pages=8,
+        max_active=2, kv_precision="int8"))
+    # quant_pages=-1 auto: fully-quantized pool, admissions land on int8
+    assert eng.admit_precision == "int8"
+    assert eng.counters()["pages_quant"] == 8
+    assert eng.quant_occupancy() == 0.0
+    rng = np.random.default_rng(5)
+    eng.submit([Request(rid=0, arrival_slot=0,
+                        tokens=rng.integers(0, 256, 9, dtype=np.int32),
+                        max_new_tokens=8)])
+    eng.step_slot(0, n_steps=2)
+    assert eng.quant_occupancy() > 0
+    assert eng.counters()["quant_occupancy"] == eng.quant_occupancy()
+
+
+def test_native_staging_regression():
+    """THE chunked-gate honesty check: a quantized chunked engine's staging
+    buffer must hold bit-exactly the K/V a native engine computes for the
+    same prompt — chunk N's attention re-reads chunk N-1 through staging,
+    never through the lossy pool, so prompt-phase activations (and the
+    first generated token) are native-exact."""
+    cfg, params = _setup()
+
+    def mk(kv_precision):
+        return Engine(cfg, params, EngineConfig(
+            batch_slots=2, prompt_len=16, cache_len=64, chunk_size=4,
+            kv_precision=kv_precision))
+
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, 256, 13, dtype=np.int32)
+
+    def run(eng):
+        eng.submit([Request(rid=0, arrival_slot=0, tokens=prompt.copy(),
+                            max_new_tokens=4)])
+        t = 0
+        while len(eng.finished) < 1 and t < 40:
+            eng.step_slot_chunked(t, n_steps=2)
+            t += 1
+        eng.drain()
+        assert len(eng.finished) == 1
+        return eng
+
+    nat = run(mk(""))
+    qnt = run(mk("int8"))
+    plen = len(prompt)
+    compared = 0
+    for seg_n, seg_q in zip(nat.state.caches, qnt.state.caches):
+        if getattr(seg_q, "stage_k", None) is None:
+            continue  # SSM segments carry no KV staging
+        np.testing.assert_array_equal(
+            np.asarray(seg_n.k)[:, 0, :plen],
+            np.asarray(seg_q.stage_k)[:, 0, :plen])
+        np.testing.assert_array_equal(
+            np.asarray(seg_n.v)[:, 0, :plen],
+            np.asarray(seg_q.stage_v)[:, 0, :plen])
+        compared += 1
+    assert compared > 0, "no attention segment carried a staging buffer"
+    # and the first generated token is consequently native-exact
+    assert nat.finished[0].generated[0] == qnt.finished[0].generated[0]
+
+
+# ----------------------------------------------------- chaos x quantization
+@pytest.mark.chaos
+def test_chaos_alloc_shortfalls_quantized_stay_exact():
+    """Forced allocator shortfalls against an int8 paged engine defer
+    admissions but never corrupt quantized pages: every stream stays
+    bit-identical to a fault-free int8 reference (``Exact`` across chaos),
+    conservation holds, nothing leaks, and the two-region pool's precision
+    tags survive the fault path."""
+    from repro.reliability import ChaosInjector, assert_no_leaks, chaos_drive
+    from test_differential import _mk_engine, drive, make_workload
+
+    cfg, params = _setup()
+    reqs, schedule = make_workload(seed=5, n_reqs=6)
+    ref = drive(_mk_engine("paged", cfg, params, kv_precision="int8"),
+                "fused", reqs, schedule)
+    eng = _mk_engine("paged", cfg, params, kv_precision="int8")
+    chaos = ChaosInjector(seed=0, shortfall_at=(0, 2)).arm(eng)
+    streams, retired, (served, finished) = chaos_drive(
+        eng, "sync", reqs, schedule, chaos=chaos)
+    assert streams == ref[0] and retired == ref[1]
+    assert served == finished
+    assert chaos.shortfalls_injected == 2
+    assert eng.alloc_failures >= 1
+    eng.allocator.check()          # proxy forwards to the two-region pool
+    assert_no_leaks(eng)
